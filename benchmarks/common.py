@@ -1,0 +1,39 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.profiles import ModelProfile, build_profile
+from repro.serving.request import Request, RequestGenerator
+
+# the paper's 4-model mix (Alexnet/Mobilenet/ResNet-50/VGG-19 analog:
+# two lightweight, one mid, one heavy)
+C4 = ["qwen2-0.5b", "mamba2-1.3b", "deepseek-7b", "yi-9b"]
+C7 = C4 + ["olmo-1b", "granite-moe-3b-a800m", "whisper-small"]
+
+
+def profiles_for(names, rate=2000) -> Dict[str, ModelProfile]:
+    return {n: build_profile(n, request_rate=rate) for n in names}
+
+
+def generators_for(profiles, rate=2000, seed0=0):
+    return [RequestGenerator(n, rate, profiles[n].slo, seed=seed0 + i)
+            for i, n in enumerate(profiles)]
+
+
+class Burst:
+    """All requests at t=0 — fixed-work (Table 1) workloads."""
+
+    def __init__(self, model: str, n: int, slo: float):
+        self.reqs = [Request(0.0, i, model, slo) for i in range(n)]
+
+    def until(self, t_end: float) -> List[Request]:
+        out, self.reqs = self.reqs, []
+        return out
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

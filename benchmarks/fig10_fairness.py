@@ -1,0 +1,33 @@
+"""Paper Fig. 10: throughput + per-model GPU runtime under temporal /
+max-throughput / max-min / D-STACK — the fairness comparison."""
+from __future__ import annotations
+
+from benchmarks.common import C4, generators_for, profiles_for, timed
+from repro.core.scheduler import POLICIES
+from repro.core.simulator import SimConfig, Simulator
+
+RATE = 4000
+
+
+def run(quick: bool = True):
+    dur = 1.5 if quick else 10.0
+    rows = []
+    runtimes = {}
+    for pol in ("temporal", "max_throughput", "maxmin", "dstack"):
+        profiles = profiles_for(C4, rate=RATE)
+        sim = Simulator(profiles, POLICIES[pol](profiles),
+                        generators_for(profiles, RATE),
+                        SimConfig(duration=dur))
+        res, us = timed(sim.run)
+        rows.append((f"fig10/{pol}/throughput", us, f"{res.throughput():.1f}"))
+        per = {n: m.runtime for n, m in res.per_model.items()}
+        runtimes[pol] = per
+        rows.append((f"fig10/{pol}/runtime_s", 0.0,
+                     ";".join(f"{n.split('-')[0]}:{v:.2f}"
+                              for n, v in per.items())))
+    # fairness index (Jain) over per-model runtimes
+    for pol, per in runtimes.items():
+        vals = list(per.values())
+        jain = (sum(vals) ** 2) / (len(vals) * sum(v * v for v in vals) + 1e-12)
+        rows.append((f"fig10/{pol}/jain_fairness", 0.0, f"{jain:.3f}"))
+    return rows

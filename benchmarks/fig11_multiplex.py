@@ -1,0 +1,61 @@
+"""Paper Fig. 11a: C-2/C-3/C-4/C-7 multiplexing — throughput + SLO
+violations across FB-MPS / temporal / Triton / GSLICE / D-STACK; and
+Fig. 11b: dynamic request-rate adaptation under D-STACK."""
+from __future__ import annotations
+
+from benchmarks.common import generators_for, profiles_for, timed
+from repro.core.scheduler import POLICIES
+from repro.core.simulator import SimConfig, Simulator
+from repro.serving.request import RequestGenerator
+
+CASES = {
+    "C-2": ["deepseek-7b", "yi-9b"],
+    "C-3": ["deepseek-7b", "yi-9b", "qwen2-0.5b"],
+    "C-4": ["deepseek-7b", "yi-9b", "qwen2-0.5b", "mamba2-1.3b"],
+    "C-7": ["deepseek-7b", "yi-9b", "qwen2-0.5b", "mamba2-1.3b",
+            "olmo-1b", "granite-moe-3b-a800m", "whisper-small"],
+}
+POLS = ("fixed_batch_mps", "temporal", "triton", "gslice", "dstack")
+RATE = 3000
+
+
+def run(quick: bool = True):
+    dur = 1.0 if quick else 10.0
+    rows = []
+    for case, names in CASES.items():
+        if quick and case in ("C-2", "C-3"):
+            continue
+        for pol in POLS:
+            profiles = profiles_for(names, rate=RATE)
+            sim = Simulator(profiles, POLICIES[pol](profiles),
+                            generators_for(profiles, RATE),
+                            SimConfig(duration=dur))
+            res, us = timed(sim.run)
+            offered = res.total_completed + res.total_violated
+            rows.append((f"fig11a/{case}/{pol}", us,
+                         f"thr={res.throughput():.0f};"
+                         f"violpct={100*res.total_violated/max(offered,1):.1f};"
+                         f"util={res.utilization:.2f}"))
+    # Fig. 11b: one model's rate drops mid-run; others absorb the slack
+    profiles = profiles_for(CASES["C-4"], rate=RATE)
+    gens = generators_for(profiles, RATE)
+
+    class VaryRate:
+        def __init__(self, inner: RequestGenerator, t_drop: float):
+            self.inner, self.t_drop, self._dropped = inner, t_drop, False
+
+        def until(self, t_end):
+            if not self._dropped and t_end >= self.t_drop:
+                self.inner.set_rate(self.inner.rate * 0.2)
+                self._dropped = True
+            return self.inner.until(t_end)
+
+    gens[0] = VaryRate(gens[0], dur / 2)
+    sim = Simulator(profiles, POLICIES["dstack"](profiles), gens,
+                    SimConfig(duration=dur))
+    res, us = timed(sim.run)
+    rows.append(("fig11b/dynamic_rate/utilization", us,
+                 f"{res.utilization:.3f}"))
+    rows.append(("fig11b/dynamic_rate/throughput", 0.0,
+                 f"{res.throughput():.0f}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Fig. 12: multi-pod cluster throughput — exclusive pod-per-model vs
+temporal-per-pod vs D-STACK-per-pod."""
+from __future__ import annotations
+
+from benchmarks.common import C4, generators_for, profiles_for, timed
+from repro.core.cluster import run_cluster
+
+
+def run(quick: bool = True):
+    dur = 1.0 if quick else 10.0
+    rate = 20_000        # saturating: per-pod capacity is the bottleneck
+    rows = []
+    thr = {}
+    for mode in ("exclusive", "temporal", "dstack"):
+        profiles = profiles_for(C4, rate=rate)
+        gens = generators_for(profiles, rate)
+        cr, us = timed(run_cluster, profiles, gens, mode=mode, n_pods=4,
+                       duration=dur)
+        thr[mode] = cr.total_throughput
+        rows.append((f"fig12/{mode}/cluster_throughput", us,
+                     f"{cr.total_throughput:.0f}"))
+        rows.append((f"fig12/{mode}/utilization", 0.0,
+                     f"{cr.utilization:.3f}"))
+    rows.append(("fig12/dstack_over_temporal_pct", 0.0,
+                 f"{100*(thr['dstack']/thr['temporal']-1):.0f}"))
+    return rows

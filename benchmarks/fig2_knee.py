@@ -1,0 +1,24 @@
+"""Paper Fig. 2/3: latency vs allocation-fraction curves and the knee per
+architecture (batch = 16, prefill-128 serving unit)."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.configs import ARCHS
+from repro.core.latency_model import CHIP_LEVELS, LatencyModel
+
+
+def run(quick: bool = True):
+    rows = []
+    for arch, cfg in ARCHS.items():
+        lm = LatencyModel(cfg, mode="prefill", seq=128)
+        (knee, us) = timed(lm.knee_chips, 16)
+        lat_knee = lm.latency(knee, 16)
+        lat_full = lm.latency(256, 16)
+        curve = ";".join(
+            f"{c}:{lm.latency(c, 16)*1e3:.2f}" for c in CHIP_LEVELS
+            if lm.latency(c, 16) != float("inf"))
+        rows.append((f"fig2/{arch}/knee_frac", us, f"{knee/256:.3f}"))
+        rows.append((f"fig2/{arch}/lat_knee_over_full", 0.0,
+                     f"{lat_knee/lat_full:.3f}"))
+        rows.append((f"fig2/{arch}/curve_ms", 0.0, curve))
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Fig. 4a/4b: the analytical DNN model — E_t(S) curves for varying
+inherent parallelism and the derivative maxima locating the knee."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.knee import AnalyticalDNN
+
+
+def run(quick: bool = True):
+    rows = []
+    s = np.arange(1, 81)
+    for n1 in (20, 40, 60):
+        m = AnalyticalDNN(p=n1, mem_bw_per_unit=50.0, data_per_kernel=100.0)
+        (et, us) = timed(m.execution_time, s)
+        d = m.derivative_curve(s)
+        k = int(s[np.argmax(d)])
+        rows.append((f"fig4/N1={n1}/knee_units", us, str(k)))
+        rows.append((f"fig4/N1={n1}/Et_1_vs_knee", 0.0,
+                     f"{float(et[0]/et[k-1]):.2f}"))
+    # Fig. 4c/4d: batch dependence
+    for b in (1, 2, 4, 8):
+        m = AnalyticalDNN(p=10, b=b)
+        rows.append((f"fig4/batch={b}/knee_units", 0.0, str(m.knee(128))))
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig. 7/8: efficacy surface over (batch, allocation) and the
+SLO-feasible optimal operating point per architecture."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs import ARCHS
+from repro.core.efficacy import BATCH_LEVELS, efficacy_surface, optimize
+from repro.core.latency_model import CHIP_LEVELS, LatencyModel
+from repro.core.profiles import DEFAULT_SLOS
+
+
+def run(quick: bool = True):
+    rows = []
+    for arch in ("mamba2-1.3b", "deepseek-7b") if quick else list(ARCHS):
+        cfg = ARCHS[arch]
+        lm = LatencyModel(cfg, mode="prefill", seq=128)
+        (grid, us) = timed(efficacy_surface, lm)
+        bi, ci = np.unravel_index(np.argmax(grid), grid.shape)
+        rows.append((f"fig7/{arch}/unconstrained_peak", us,
+                     f"b={BATCH_LEVELS[bi]},c={CHIP_LEVELS[ci]}"))
+        slo = DEFAULT_SLOS[cfg.name]
+        pt = optimize(lm, slo=slo, request_rate=2000)
+        rows.append((f"fig8/{arch}/slo_optimal", 0.0,
+                     f"b={pt.batch},c={pt.chips},lat={pt.latency*1e3:.2f}ms,"
+                     f"feasible={pt.feasible}"))
+        # interior-batch property: batch-1 efficacy below peak at fixed chips
+        j = CHIP_LEVELS.index(max(pt.chips, 8))
+        col = grid[:, j]
+        rows.append((f"fig7/{arch}/batch1_vs_peak", 0.0,
+                     f"{col[0]/max(col.max(), 1e-9):.3f}"))
+    return rows

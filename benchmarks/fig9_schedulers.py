@@ -1,0 +1,45 @@
+"""Paper Fig. 9a-d: schedule comparison at the shared knee/batch operating
+point — temporal vs GSLICE vs D-STACK vs the preemptive ideal bound."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import C4, generators_for, profiles_for, timed
+from repro.core.scheduler import POLICIES, IdealSimulator
+from repro.core.simulator import SimConfig, Simulator
+
+RATE = 1000
+
+
+def _pinned_profiles():
+    out = {}
+    for n, p in profiles_for(C4, rate=RATE).items():
+        out[n] = dataclasses.replace(p, opt_chips=p.knee_chips, opt_batch=16)
+    return out
+
+
+def run(quick: bool = True):
+    dur = 1.5 if quick else 10.0
+    rows = []
+    results = {}
+    for pol in ("temporal", "gslice", "dstack"):
+        profiles = _pinned_profiles()
+        sim = Simulator(profiles, POLICIES[pol](profiles),
+                        generators_for(profiles, RATE),
+                        SimConfig(duration=dur))
+        res, us = timed(sim.run)
+        results[pol] = res
+        rows.append((f"fig9/{pol}/utilization", us, f"{res.utilization:.3f}"))
+        rows.append((f"fig9/{pol}/throughput", 0.0,
+                     f"{res.throughput():.1f}"))
+    profiles = _pinned_profiles()
+    ideal, us = timed(
+        IdealSimulator(profiles, generators_for(profiles, RATE),
+                       duration=dur).run)
+    rows.append(("fig9/ideal/utilization", us, f"{ideal.utilization:.3f}"))
+    rows.append(("fig9/ideal/throughput", 0.0, f"{ideal.throughput():.1f}"))
+    rows.append(("fig9/dstack_over_ideal_throughput", 0.0,
+                 f"{results['dstack'].throughput()/ideal.throughput():.3f}"))
+    rows.append(("fig9/dstack_over_ideal_utilization", 0.0,
+                 f"{results['dstack'].utilization/ideal.utilization:.3f}"))
+    return rows

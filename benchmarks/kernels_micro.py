@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks (CPU wall time of the jnp production paths +
+parity stats vs the oracles). On TPU these would time the Pallas kernels."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, iters: int = 5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    b, s, h, kv, d = 1, 1024, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, backend="jnp"))
+    us = _bench(fa, q, k, v)
+    err = float(jnp.abs(fa(q, k, v)
+                        - ref.attention_ref(q, k, v, causal=True)).max())
+    rows.append((f"kernels/flash_jnp_b{b}s{s}", us, f"maxerr={err:.2e}"))
+
+    bs, l, hh, p, n = 1, 512, 4, 64, 64
+    x = jax.random.normal(ks[3], (bs, l, hh, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (bs, l, hh)))
+    a = -jnp.exp(0.3 * jax.random.normal(ks[5], (hh,)))
+    bb = jax.random.normal(ks[6], (bs, l, n))
+    cc = jax.random.normal(ks[7], (bs, l, n))
+    ssd = jax.jit(lambda *t: ops.ssd(*t, chunk=128, backend="jnp")[0])
+    us = _bench(ssd, x, dt, a, bb, cc)
+    y_ref, _ = ref.ssd_ref(x, dt, a, bb, cc)
+    err = float(jnp.abs(ssd(x, dt, a, bb, cc) - y_ref).max())
+    rows.append((f"kernels/ssd_chunked_b{bs}l{l}", us, f"maxerr={err:.2e}"))
+
+    # sequential-oracle speedup (the SSD state-space-duality win)
+    seq = jax.jit(lambda *t: ref.ssd_ref(*t)[0])
+    us_seq = _bench(seq, x, dt, a, bb, cc)
+    rows.append(("kernels/ssd_chunked_speedup_vs_sequential", 0.0,
+                 f"{us_seq/us:.1f}x"))
+    return rows

@@ -1,0 +1,91 @@
+"""§Roofline: three-term roofline per (arch × shape) from the dry-run's
+compiled artifacts (results/dryrun/*.json), single-pod mesh.
+
+  compute    = HLO_FLOPs(per-device) / peak_FLOP/s
+  memory     = HLO_bytes(per-device) / HBM_bw
+  collective = collective_bytes(per-device) / link_bw (2 usable directions)
+
+plus MODEL_FLOPS = 6·N·D (6·N_active·D for MoE; 2·N·D for inference) and
+the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs × devices).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.core.hardware import V5E
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token
+
+
+def load_records(mesh: str = "16x16") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def roofline_terms(rec: dict) -> Optional[dict]:
+    if not rec.get("ok") or rec.get("skipped"):
+        return None
+    hw = V5E
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_dev = rec.get("n_devices", 256)
+    # prefer trip-count-weighted costs (XLA cost_analysis counts while
+    # bodies once — a ~num_layers under-report for scanned models)
+    flops = rec.get("weighted_flops_per_device", rec["flops_per_device"])
+    byts = rec.get("weighted_bytes_per_device", rec["bytes_per_device"])
+    coll = rec.get("weighted_collective_bytes", rec["collective_bytes"])
+    t_comp = flops / hw.peak_flops
+    t_mem = byts / hw.hbm_bw
+    # shapes in the partitioned module are per-device shards: a ring
+    # all-reduce moves ~2x the shard per chip; all-to-all moves ~1x
+    ar = sum(v for k, v in coll.items() if k != "all-to-all")
+    a2a = coll.get("all-to-all", 0.0)
+    t_coll = (2.0 * ar + a2a) / (hw.ici_bw * 2)
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops * n_dev
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": mf / max(hlo_total, 1.0),
+        "mem_gb_per_device": rec["memory"]["total_per_device"] / 1e9,
+        "fits_hbm": rec["memory"]["total_per_device"] <= hw.hbm_bytes,
+    }
+
+
+def run(quick: bool = True):
+    rows = []
+    n_fit = n_all = 0
+    for rec in load_records("16x16"):
+        rt = roofline_terms(rec)
+        tag = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rt is None:
+            rows.append((tag, 0.0, "skipped"))
+            continue
+        n_all += 1
+        n_fit += int(rt["fits_hbm"])
+        rows.append((
+            tag, 0.0,
+            f"comp={rt['compute_s']*1e3:.2f}ms;mem={rt['memory_s']*1e3:.2f}ms;"
+            f"coll={rt['collective_s']*1e3:.2f}ms;dom={rt['dominant']};"
+            f"useful={rt['useful_ratio']:.2f};"
+            f"hbm={rt['mem_gb_per_device']:.1f}GB;fits={rt['fits_hbm']}"))
+    rows.append(("roofline/fits_hbm_count", 0.0, f"{n_fit}/{n_all}"))
+    return rows

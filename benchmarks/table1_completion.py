@@ -1,0 +1,26 @@
+"""Paper Table 1: task-completion time, 4 models x N requests each,
+Triton-style dynamic batching vs D-STACK."""
+from __future__ import annotations
+
+from benchmarks.common import C4, Burst, profiles_for, timed
+from repro.core.scheduler import POLICIES
+from repro.core.simulator import SimConfig, Simulator
+
+
+def run(quick: bool = True):
+    n_req = 2_000 if quick else 10_000
+    rows = []
+    makespans = {}
+    for pol in ("triton", "dstack"):
+        profiles = profiles_for(C4)
+        gens = [Burst(n, n_req, profiles[n].slo) for n in profiles]
+        sim = Simulator(profiles, POLICIES[pol](profiles), gens,
+                        SimConfig(drain=True, drop_expired=False, duration=0))
+        res, us = timed(sim.run)
+        assert res.total_completed == n_req * len(C4)
+        makespans[pol] = res.makespan
+        rows.append((f"table1/{pol}_completion_s", us,
+                     f"{res.makespan:.3f}"))
+    reduction = 100 * (1 - makespans["dstack"] / makespans["triton"])
+    rows.append(("table1/latency_reduction_pct", 0.0, f"{reduction:.1f}"))
+    return rows

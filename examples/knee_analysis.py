@@ -1,0 +1,42 @@
+"""Knee + efficacy analysis across the full 10-arch zoo (paper §3-§5).
+
+Prints the Table-6 analogue: per-model knee fraction, SLO, efficacy-optimal
+(batch, chips), runtime at the operating point — plus the analytic-model
+curves from §4.
+
+    PYTHONPATH=src python examples/knee_analysis.py
+"""
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.knee import AnalyticalDNN
+from repro.core.profiles import build_profile
+
+
+def main():
+    print("== paper §4: analytic DNN model — knee vs inherent parallelism ==")
+    s = np.arange(1, 81)
+    for n1 in (20, 40, 60):
+        m = AnalyticalDNN(p=n1, mem_bw_per_unit=50.0, data_per_kernel=100.0)
+        d = m.derivative_curve(s)
+        knee = int(s[np.argmax(d)])
+        ratio = float(np.asarray(m.execution_time(np.array([1]))
+                                 / m.execution_time(np.array([knee])))[0])
+        print(f"  N1={n1:3d}: derivative max at S={knee} "
+              f"(latency 1 unit vs knee: {ratio:.1f}x)")
+
+    print("\n== Table 6 analogue: the 10-arch zoo on a v5e-256 pod ==")
+    print(f"{'model':26s} {'knee':>6s} {'SLO':>6s} {'opt batch':>9s} "
+          f"{'opt chips':>9s} {'runtime':>9s}")
+    for name in ARCHS:
+        p = build_profile(name, request_rate=2000)
+        print(f"{p.name:26s} {p.knee_frac:5.1%} {p.slo*1e3:5.0f}ms "
+              f"{p.opt_batch:9d} {p.opt_chips:9d} {p.runtime()*1e3:7.2f}ms")
+
+    total = sum(build_profile(n, request_rate=2000).knee_frac for n in ARCHS)
+    print(f"\naggregate knee demand: {total:.2f} pods -> spatial multiplexing"
+          f" pressure exists (the D-STACK scenario)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: build a model, run prefill + decode, inspect its knee.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch qwen2-0.5b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.efficacy import optimize
+from repro.core.latency_model import CHIP_LEVELS, LatencyModel
+from repro.serving.engine import make_engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    args = ap.parse_args()
+
+    # ---- 1. data plane: reduced model, real prefill + greedy decode -----
+    cfg = get_config(args.arch).reduced()
+    print(f"[1] building reduced {cfg.name} "
+          f"({cfg.param_count()/1e6:.1f}M params) ...")
+    eng = make_engine(cfg, cache_len=64)
+    prompt = jnp.array([[5, 17, 3, 99, 4, 21, 8, 2]], jnp.int32)
+    batch = {"tokens": prompt}
+    if cfg.has_encoder:
+        from repro.serving import frontend
+        batch["enc_embeds"] = frontend.audio_frames(cfg, 1)
+    out = eng.generate(batch, max_new_tokens=12)
+    print(f"    generated tokens: {out[0].tolist()}")
+
+    # ---- 2. control plane: the paper's knee + efficacy analysis ---------
+    full = get_config(args.arch)
+    lm = LatencyModel(full, mode="prefill", seq=128)
+    print(f"[2] {full.name} latency vs chips (batch=16, prefill-128):")
+    for c in CHIP_LEVELS:
+        lat = lm.latency(c, 16)
+        bar = "#" * int(min(lat * 2e3, 60))
+        print(f"    {c:4d} chips: {lat*1e3:8.2f} ms {bar}")
+    knee = lm.knee_chips(16)
+    print(f"    knee = {knee} chips ({knee/256:.1%} of the pod)")
+
+    pt = optimize(lm, slo=0.05, request_rate=1000)
+    print(f"[3] efficacy-optimal operating point @SLO=50ms, 1000 req/s: "
+          f"batch={pt.batch}, chips={pt.chips}, "
+          f"latency={pt.latency*1e3:.2f} ms, feasible={pt.feasible}")
+
+
+if __name__ == "__main__":
+    main()

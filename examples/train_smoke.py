@@ -1,0 +1,46 @@
+"""Train a reduced model a few hundred steps on CPU and watch the loss drop.
+
+    PYTHONPATH=src python examples/train_smoke.py --arch mamba2-1.3b --steps 200
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    print(f"training reduced {cfg.name}: "
+          f"{sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M params")
+    opt = AdamW(lr=2e-3, warmup_steps=20, total_steps=args.steps)
+    step = jax.jit(make_train_step(api, opt))
+    state = opt.init(params)
+    pipe = iter(TokenPipeline(cfg, DataConfig(batch_size=8, seq_len=128)))
+    t0 = time.time()
+    first = None
+    for i in range(args.steps):
+        params, state, m = step(params, state, next(pipe))
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d}  loss {loss:.4f}  "
+                  f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)")
+    print(f"loss: {first:.3f} -> {loss:.3f} "
+          f"({'OK: decreased' if loss < first else 'WARN: did not decrease'})")
+
+
+if __name__ == "__main__":
+    main()

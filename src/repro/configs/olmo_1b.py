@@ -1,0 +1,16 @@
+"""OLMo-1B [arXiv:2402.00838] — dense, MHA, non-parametric LayerNorm."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    source="arXiv:2402.00838",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50304,
+    norm="layernorm_nonparam",
+    tie_embeddings=True,
+)

@@ -1,0 +1,236 @@
+"""Roofline latency model f_L(chips, batch) — the TPU analogue of the
+paper's profiled latency function f_L(GPU%, batch) (§5, Table 5).
+
+The paper profiles each DNN on a V100 at every (GPU%, batch) grid point.
+We cannot wall-clock a v5e from this container, so f_L is *derived*: the
+three roofline terms (compute / HBM / ICI-collective) computed from
+per-architecture operation counts, with the paper's parallelism-limit
+(Eq. 2's ``min(S, N_i)``) appearing as two TPU-native clamps:
+
+  * shard-granularity clamp: tensor-parallel splitting beyond
+    d_ff / mxu_tile chips yields no further useful parallelism;
+  * MXU-occupancy clamp: the matmul M-dim (tokens in flight) below the MXU
+    tile runs the systolic array at M/tile occupancy.
+
+Both clamps *flatten* E_t(chips) exactly like the paper's Fig. 4a, and the
+growing collective term adds the TPU-specific reason more chips eventually
+*hurt*. ``CostOverride`` lets the dry-run's compiled cost analysis replace
+the analytic counts (used by §Roofline calibration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.hardware import Hardware, V5E
+
+CHIP_LEVELS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostOverride:
+    """Measured (dry-run) costs for one (arch, mode, seq, batch) point."""
+    flops: float
+    hbm_bytes: float
+    ar_bytes: float                 # all-reduce'd activation bytes
+    a2a_bytes: float = 0.0          # all-to-all (MoE dispatch) bytes
+    batch: int = 1                  # batch the measurement was taken at
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    cfg: ModelConfig
+    mode: str = "prefill"           # decode | prefill | train
+    seq: int = 128                  # context / prompt length
+    hw: Hardware = V5E
+    override: Optional[CostOverride] = None
+
+    # ------------------------------------------------------------ op counts
+    def _attn_layers(self) -> int:
+        if self.cfg.family == "ssm":
+            return 0
+        if self.cfg.family == "hybrid":
+            return self.cfg.num_layers // self.cfg.attn_every
+        return self.cfg.num_layers
+
+    def _ssm_layers(self) -> int:
+        return self.cfg.num_layers if self.cfg.family in ("ssm", "hybrid") else 0
+
+    def costs(self, batch: int):
+        """Returns (flops, hbm_bytes, ar_bytes, a2a_bytes) for one step.
+
+        ar_bytes: activation bytes entering tensor-parallel all-reduces
+        (summed over layers, for the *full* token set — the per-chip time in
+        ``latency`` rescales by the allocation's data/model split).
+        a2a_bytes: MoE expert-dispatch all-to-all traffic.
+        """
+        if self.override is not None:
+            scale = batch / self.override.batch
+            return (self.override.flops * scale,
+                    self.override.hbm_bytes * scale,
+                    self.override.ar_bytes * scale,
+                    self.override.a2a_bytes * scale)
+
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        la = self._attn_layers()
+        ls = self._ssm_layers()
+        n_active = cfg.active_param_count()
+        bpe = 2                                          # bf16
+        ctx = min(self.seq, cfg.sliding_window) if cfg.sliding_window else self.seq
+
+        if self.mode == "decode":
+            tokens = batch
+            flops = 2.0 * n_active * tokens
+            flops += 4.0 * la * cfg.num_heads * hd * ctx * batch
+            if ls:
+                ssd = 6.0 * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim
+                flops += ls * batch * ssd
+            hbm = n_active * bpe
+            hbm += 2.0 * la * batch * ctx * cfg.num_kv_heads * hd * bpe   # KV read
+            if ls:
+                hbm += 2.0 * ls * batch * cfg.ssm_heads * cfg.ssm_state \
+                    * cfg.ssm_head_dim * 4                                # state rw
+            coll = 2.0 * cfg.num_layers * tokens * d * bpe
+        else:
+            tokens = batch * self.seq
+            mult = 3.0 if self.mode == "train" else 1.0
+            flops = 2.0 * n_active * tokens * mult
+            # causal attention: S·ctx/2 effective context per token
+            flops += mult * 2.0 * la * cfg.num_heads * hd * tokens * min(ctx, self.seq)
+            if ls:
+                # SSD chunked: ~2x the recurrent op count (dual quadratic form)
+                ssd = 12.0 * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim
+                flops += mult * ls * tokens * ssd
+            hbm = n_active * bpe * (3.0 if self.mode == "train" else 1.0)
+            hbm += 4.0 * cfg.num_layers * tokens * d * bpe                # activations
+            coll = 2.0 * cfg.num_layers * tokens * d * bpe
+            if self.mode == "train":
+                coll += 2.0 * cfg.param_count() * 4                       # grad AR
+        a2a = 0.0
+        if cfg.num_experts:
+            # expert-parallel all-to-all: each routed token crosses twice
+            a2a = 2.0 * cfg.num_layers * tokens * d * bpe \
+                * cfg.experts_per_token
+        return flops, hbm, coll, a2a
+
+    # ------------------------------------------------------------- latency
+    def max_useful_chips(self) -> int:
+        """Shard-granularity clamp (paper Eq. 2's min(S, N_i))."""
+        cfg = self.cfg
+        widest = max(cfg.d_ff or 0, cfg.d_inner if cfg.ssm_state else 0,
+                     cfg.num_heads * cfg.resolved_head_dim, cfg.d_model)
+        return max(1, min(self.hw.chips_per_pod, widest // 128))
+
+    def _widest(self) -> int:
+        cfg = self.cfg
+        return max(cfg.d_ff or 0, cfg.d_inner if cfg.ssm_state else 0,
+                   cfg.num_heads * cfg.resolved_head_dim, cfg.d_model)
+
+    def tp_width(self, chips: int) -> int:
+        """Default tensor-parallel width (``latency`` searches over
+        candidate widths; this is the cap). Wider models support wider TP
+        (>=512 of the widest dim per chip keeps the MXU fed)."""
+        return max(1, min(chips, self._widest() // 512, 32))
+
+    def _tp_candidates(self, chips: int):
+        cap = self.tp_width(chips)
+        m = 1
+        while m <= cap:
+            yield m
+            m *= 2
+
+    def _batch_parallelism(self, batch: int) -> int:
+        """How many data/sequence shards the workload can actually feed —
+        the paper Eq. 2's inherent-parallelism limit N_i, TPU flavoured."""
+        if self.mode == "decode":
+            return max(1, batch)
+        return max(1, batch * max(1, self.seq // 512))
+
+    def usable_chips(self, chips: int, batch: int) -> int:
+        m = self.tp_width(chips)
+        return max(1, min(chips, m * self._batch_parallelism(batch),
+                          self.max_useful_chips()))
+
+    def min_chips_to_fit(self, batch: int = 1) -> int:
+        """HBM feasibility floor — the TPU-native low-allocation wall (on
+        GPU the paper sees exponential latency below the knee; on TPU the
+        model simply does not fit)."""
+        cfg = self.cfg
+        bytes_needed = cfg.param_count() * 2.0
+        if self.mode == "decode" and not cfg.is_attention_free:
+            ctx = min(self.seq, cfg.sliding_window) if cfg.sliding_window else self.seq
+            bytes_needed += (2.0 * self._attn_layers() * batch * ctx
+                             * cfg.num_kv_heads * cfg.resolved_head_dim * 2)
+        if self.mode == "train":
+            bytes_needed = cfg.param_count() * 16.0      # fp32 master + adam + grads
+        usable = self.hw.hbm_bytes * 0.9
+        return max(1, int(np.ceil(bytes_needed / usable)))
+
+    def latency(self, chips: int, batch: int) -> float:
+        """min over tensor-parallel widths — the launcher picks the best
+        (data × model) split for each allocation size."""
+        chips = max(1, int(chips))
+        if chips < self.min_chips_to_fit(batch):
+            return float("inf")
+        flops, hbm, ar_bytes, a2a_bytes = self.costs(batch)
+        return min(self._latency_with_m(chips, batch, m, flops, hbm,
+                                        ar_bytes, a2a_bytes)
+                   for m in self._tp_candidates(chips))
+
+    def _latency_with_m(self, chips, batch, m, flops, hbm, ar_bytes,
+                        a2a_bytes) -> float:
+        bp = self._batch_parallelism(batch)
+        c_use = max(1, min(chips, m * bp, self.max_useful_chips()))
+
+        # MXU occupancy: decode has `batch` rows in flight vs the 256 tile
+        occupancy = (min(1.0, batch / self.hw.mxu_tile)
+                     if self.mode == "decode" else 1.0)
+        t_compute = flops / (c_use * self.hw.peak_flops * max(occupancy, 1e-3))
+        t_memory = hbm / (c_use * self.hw.hbm_bw)
+
+        # collectives: bandwidth term — ring all-reduce inside the TP group
+        # on each data shard; latency term — 2 collectives per layer pay the
+        # (m-1)-hop ring setup, the analogue of the paper's Eq.3 memory term
+        # that *grows* with allocation size.
+        links = self.hw.ici_bw * 2                      # 2 usable directions
+        d_par = max(1, c_use // m)
+        t_ar = 2.0 * (ar_bytes / d_par) * (m - 1) / max(m, 1) / links
+        t_hop = 2.0 * self.cfg.num_layers * (m - 1) * 1e-6
+        t_a2a = a2a_bytes / (c_use * links)
+        t_serial = self.hw.dispatch_overhead * self.cfg.num_layers
+
+        return max(t_compute, t_memory) + t_ar + t_hop + t_a2a + t_serial
+
+    def latency_frac(self, frac: float, batch: int) -> float:
+        return self.latency(round(frac * self.hw.chips_per_pod), batch)
+
+    def throughput(self, chips: int, batch: int) -> float:
+        """Inferences (batch items) per second."""
+        return batch / self.latency(chips, batch)
+
+    # ---------------------------------------------------------------- knee
+    def knee_chips(self, batch: int, rel_tol: float = 0.05,
+                   levels: Sequence[int] = CHIP_LEVELS) -> int:
+        """Right-sizing knee (paper §3.1): the smallest feasible allocation
+        whose latency is within ``rel_tol`` of the best achievable —
+        "latency remains unchanged above the knee"."""
+        lats = np.array([self.latency(c, batch) for c in levels])
+        finite = lats[np.isfinite(lats)]
+        if finite.size == 0:
+            return levels[-1]
+        best = finite.min()
+        for c, lat in zip(levels, lats):
+            if np.isfinite(lat) and lat <= best * (1 + rel_tol):
+                return int(c)
+        return levels[-1]
+
+    def knee_frac(self, batch: int, rel_tol: float = 0.05) -> float:
+        return self.knee_chips(batch, rel_tol) / self.hw.chips_per_pod
+
+    def utility_curve(self, batch: int, levels: Sequence[int] = CHIP_LEVELS):
+        """1/(E_t·S) per allocation — paper Eq. 6's maximization target."""
+        return np.array([1.0 / (self.latency(c, batch) * c) for c in levels])

@@ -1,0 +1,22 @@
+from repro.core.scheduler.base import Policy, chips_for_frac
+from repro.core.scheduler.baselines import (
+    FixedBatchMPSPolicy, GSLICEPolicy, MaxMinPolicy, MaxThroughputPolicy,
+    TemporalPolicy, TritonPolicy)
+from repro.core.scheduler.dstack import DStackPolicy
+from repro.core.scheduler.ideal import IdealSimulator
+
+POLICIES = {
+    "temporal": TemporalPolicy,
+    "fixed_batch_mps": FixedBatchMPSPolicy,
+    "gslice": GSLICEPolicy,
+    "triton": TritonPolicy,
+    "maxmin": MaxMinPolicy,
+    "max_throughput": MaxThroughputPolicy,
+    "dstack": DStackPolicy,
+}
+
+__all__ = [
+    "Policy", "chips_for_frac", "POLICIES", "TemporalPolicy",
+    "FixedBatchMPSPolicy", "GSLICEPolicy", "TritonPolicy", "MaxMinPolicy",
+    "MaxThroughputPolicy", "DStackPolicy", "IdealSimulator",
+]

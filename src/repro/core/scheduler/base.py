@@ -1,0 +1,30 @@
+"""Scheduler policy protocol + shared helpers."""
+from __future__ import annotations
+
+import math
+from typing import List, Protocol
+
+from repro.core.simulator import RunRequest
+
+
+class Policy(Protocol):
+    name: str
+
+    def plan(self, now: float, sim) -> List[RunRequest]:
+        ...
+
+    def next_wakeup(self, now: float) -> float:
+        return math.inf
+
+
+def chips_for_frac(frac: float, total: int = 256) -> int:
+    """Largest power-of-two chip count <= frac·total (sub-meshes are
+    rectangular power-of-two slices of the torus)."""
+    c = int(frac * total + 1e-9)
+    if c <= 0:
+        return 0
+    return 1 << (c.bit_length() - 1)
+
+
+def running_models(sim) -> set:
+    return {r.model for r in sim.running}

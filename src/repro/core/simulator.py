@@ -1,0 +1,196 @@
+"""Discrete-event serving simulator — the control plane testbed.
+
+The simulator owns virtual time; run durations come from each model's
+roofline latency function (``ModelProfile.latency``). Scheduler policies
+(``repro.core.scheduler``) decide, at every event (arrival burst, run
+completion, session boundary), which (model, chips, batch) runs to start —
+with the invariant that aggregate allocated chip-fraction never exceeds 1.0
+(paper: "the GPU must not be over-subscribed"), except for policies that
+explicitly model uncontrolled sharing (Fixed-Batch MPS).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.profiles import ModelProfile
+from repro.serving.request import Request, RequestGenerator, RequestQueue
+
+
+@dataclasses.dataclass
+class RunRequest:
+    model: str
+    chips: int
+    batch: int
+    dilation: float = 1.0           # >1 models interference (FB-MPS only)
+    oversubscribe: bool = False
+
+
+@dataclasses.dataclass
+class Run:
+    model: str
+    chips: int
+    frac: float
+    batch: int
+    start: float
+    end: float
+    requests: List[Request]
+
+
+@dataclasses.dataclass
+class SimConfig:
+    duration: float = 10.0
+    total_chips: int = 256
+    drain: bool = False             # run until all work completes (Table 1)
+    drop_expired: bool = True
+    dispatch_gap: float = 100e-6    # engine-switch gap (paper §1: <100 µs)
+    max_time: float = 600.0
+
+
+@dataclasses.dataclass
+class ModelMetrics:
+    completed: int = 0
+    violated: int = 0
+    runtime: float = 0.0
+    runs: int = 0
+
+    def throughput(self, duration: float) -> float:
+        return self.completed / duration if duration > 0 else 0.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    duration: float
+    utilization: float
+    per_model: Dict[str, ModelMetrics]
+    makespan: float
+
+    @property
+    def total_completed(self) -> int:
+        return sum(m.completed for m in self.per_model.values())
+
+    @property
+    def total_violated(self) -> int:
+        return sum(m.violated for m in self.per_model.values())
+
+    def throughput(self, model: Optional[str] = None) -> float:
+        if model:
+            return self.per_model[model].throughput(self.duration)
+        return self.total_completed / self.duration
+
+
+class Simulator:
+    def __init__(self, profiles: Dict[str, ModelProfile], policy,
+                 generators: Sequence[RequestGenerator],
+                 sim: Optional[SimConfig] = None):
+        self.profiles = profiles
+        self.policy = policy
+        self.sim = sim or SimConfig()
+        self.queues: Dict[str, RequestQueue] = {
+            name: RequestQueue(name, p.slo) for name, p in profiles.items()}
+        self.generators = list(generators)
+        self.running: List[Run] = []
+        self.metrics: Dict[str, ModelMetrics] = {
+            name: ModelMetrics() for name in profiles}
+        self._util_area = 0.0
+        self._last_t = 0.0
+        self._makespan = 0.0
+
+    # ------------------------------------------------------------------
+    def free_frac(self, now: float) -> float:
+        return 1.0 - sum(r.frac for r in self.running if r.end > now)
+
+    def _advance(self, t: float) -> None:
+        # paper §6.1: utilization credits each model only up to its knee —
+        # allocation beyond the knee is waste, not utilization
+        busy = sum(min(r.frac, self.profiles[r.model].knee_frac)
+                   for r in self.running)
+        self._util_area += min(busy, 1.0) * (t - self._last_t)
+        self._last_t = t
+
+    def _start_runs(self, now: float, reqs: List[RunRequest]) -> None:
+        for rr in reqs:
+            prof = self.profiles[rr.model]
+            q = self.queues[rr.model]
+            batch = q.pop_batch(rr.batch, now, self.sim.drop_expired)
+            if not batch:
+                continue
+            frac = rr.chips / self.sim.total_chips
+            if not rr.oversubscribe and frac > self.free_frac(now) + 1e-9:
+                for req in batch:       # shouldn't happen: put back
+                    q.push(req)
+                continue
+            lat = prof.latency(rr.chips, len(batch)) * rr.dilation
+            run = Run(rr.model, rr.chips, frac, len(batch), now,
+                      now + lat + self.sim.dispatch_gap, batch)
+            self.running.append(run)
+            m = self.metrics[rr.model]
+            m.runs += 1
+            m.runtime += lat
+
+    def _finish(self, run: Run, now: float) -> None:
+        q = self.queues[run.model]
+        q.complete(run.requests, now)
+        m = self.metrics[run.model]
+        m.completed += len(run.requests)
+        m.violated = q.violated
+        self._makespan = max(self._makespan, now)
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        sim = self.sim
+        # materialize arrivals
+        arrivals: List[Request] = []
+        horizon = sim.duration if not sim.drain else 0.0
+        for g in self.generators:
+            arrivals.extend(g.until(max(horizon, 1e-9)))
+        arrivals.sort(key=lambda r: r.arrival)
+        ai = 0
+        now = 0.0
+        # deliver t=0 arrivals
+        while ai < len(arrivals) and arrivals[ai].arrival <= now:
+            self.queues[arrivals[ai].model].push(arrivals[ai]); ai += 1
+        self._plan(now)
+
+        while now < sim.max_time:
+            next_end = min((r.end for r in self.running), default=math.inf)
+            next_arr = arrivals[ai].arrival if ai < len(arrivals) else math.inf
+            wake = self.policy.next_wakeup(now) if hasattr(
+                self.policy, "next_wakeup") else math.inf
+            t = min(next_end, next_arr, wake)
+            if math.isinf(t):
+                break
+            if not sim.drain and t > sim.duration:
+                self._advance(sim.duration)
+                now = sim.duration
+                break
+            self._advance(t)
+            now = t
+            # deliver arrivals
+            while ai < len(arrivals) and arrivals[ai].arrival <= now + 1e-12:
+                self.queues[arrivals[ai].model].push(arrivals[ai]); ai += 1
+            # completions
+            done = [r for r in self.running if r.end <= now + 1e-12]
+            self.running = [r for r in self.running if r.end > now + 1e-12]
+            for r in done:
+                self._finish(r, now)
+            self._plan(now)
+            if sim.drain and ai >= len(arrivals) and not self.running \
+                    and all(len(q) == 0 for q in self.queues.values()):
+                break
+
+        duration = (self._makespan if sim.drain else sim.duration) or 1e-9
+        for name, q in self.queues.items():
+            self.metrics[name].violated = q.violated + len(q)  # unserved count
+        return SimResult(
+            duration=duration,
+            utilization=self._util_area / duration,
+            per_model=self.metrics,
+            makespan=self._makespan)
+
+    def _plan(self, now: float) -> None:
+        reqs = self.policy.plan(now, self)
+        if reqs:
+            self._start_runs(now, reqs)

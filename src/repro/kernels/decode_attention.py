@@ -1,0 +1,99 @@
+"""Single-token (decode) GQA attention over a KV cache as a Pallas kernel.
+
+The serving hot loop: one query token per sequence against a long cache.
+TPU design: grid (batch, kv_heads, cache_blocks) with the cache-block dim
+innermost; the (rep, D) query group stays resident in VMEM while cache
+blocks stream HBM→VMEM; online softmax in VMEM scratch. GQA is native —
+each grid cell owns one kv head and its `rep = H/KV` query heads, so the
+cache is never head-repeated (the jnp lesson from EXPERIMENTS §Perf #9,
+here enforced structurally).
+
+`valid_len` masks unwritten cache slots (scalar, streamed via a (1,)
+input).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, block_k: int,
+                   nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = valid_ref[0]
+    k_start = j * block_k
+
+    @pl.when(k_start < valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (rep, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (block_k, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (B, H, D); caches: (B, C, KV, D); valid_len: scalar int32.
+
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    _, c, kvh, _ = k_cache.shape
+    rep = h // kvh
+    block_k = min(block_k, c)
+    assert c % block_k == 0, (c, block_k)
+    nk = c // block_k
+    qg = q.reshape(b, kvh, rep, d)
+    valid = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    kernel = functools.partial(_decode_kernel, scale=1.0 / np.sqrt(d),
+                               block_k=block_k, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, g, j: (0,)),
+            pl.BlockSpec((1, 1, rep, d), lambda b_, g, j: (b_, g, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, g, j: (b_, j, g, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, g, j: (b_, j, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d), lambda b_, g, j: (b_, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid, qg, k_cache, v_cache)
+    return out.reshape(b, h, d)

@@ -1,0 +1,172 @@
+"""Memory-efficient attention with a custom VJP (flash forward + backward).
+
+Plain ``jax.grad`` through chunked attention saves per-tile softmax
+residuals — O(S²) memory, catastrophic at 4k-32k sequER lengths. This module
+implements the standard flash backward: the forward saves only
+(q, k, v, out, logsumexp); the backward recomputes score tiles chunk by
+chunk. This is the jnp twin of the Pallas kernel's recomputation strategy
+and is what ``models.layers.big_attention`` uses for training.
+
+All internals run at (b, h, s, d) layout in fp32 accumulators.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), bool)
+    if causal:
+        m &= qpos >= kpos
+    if window:
+        m &= (qpos - kpos) < window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_mha(q, k, v, q_offset, causal: bool, window: int, cq: int,
+              ck: int):
+    """q: (B,Sq,H,D); k,v: (B,Sk,H,D) (kv already head-repeated).
+
+    ``q_offset`` (f32 scalar array — may be traced, e.g. an axis_index
+    under shard_map) shifts the query positions for causal/window masking:
+    context-parallel attention gives each shard a slice of the query
+    sequence against the full keys."""
+    out, _ = _fwd_impl(q, k, v, causal, window, cq, ck, q_offset)
+    return out
+
+
+def _fwd_impl(q, k, v, causal, window, cq, ck, q_offset=0):
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    nq, nk = sq // cq, sk // ck
+    scale = 1.0 / np.sqrt(d)
+    qc = q.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)   # (nq,b,h,cq,d)
+    kc = k.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)
+
+    def per_q(args):
+        qi, qblk = args                                        # (b,h,cq,d)
+        qf = qblk.astype(jnp.float32)
+
+        def inner(carry, xs):
+            m, l, acc = carry
+            ki, kblk, vblk = xs
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                           kblk.astype(jnp.float32)) * scale
+            qpos = q_offset + qi * cq + jnp.arange(cq)[:, None]
+            kpos = ki * ck + jnp.arange(ck)[None, :]
+            s = jnp.where(_mask(qpos, kpos, causal, window), s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0),
+                                      (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out.astype(q.dtype), lse
+
+    outs, lses = jax.lax.map(per_q, (jnp.arange(nq), qc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, d)   # back to (B,S,H,D)
+    lse = lses.transpose(1, 2, 0, 3).reshape(b, h, sq)
+    return out, lse
+
+
+def _fwd(q, k, v, q_offset, causal, window, cq, ck):
+    out, lse = _fwd_impl(q, k, v, causal, window, cq, ck, q_offset)
+    return out, (q, k, v, q_offset, out, lse)
+
+
+def _bwd(causal, window, cq, ck, res, dout):
+    q, k, v, q_offset, out, lse = res
+    dq, dk, dv = _bwd_impl(causal, window, cq, ck, q_offset, res, dout)
+    return dq, dk, dv, jnp.zeros((), jnp.float32)
+
+
+def _bwd_impl(causal, window, cq, ck, q_offset, res, dout):
+    q, k, v, _q_offset, out, lse = res
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    nq, nk = sq // cq, sk // ck
+    scale = 1.0 / np.sqrt(d)
+
+    # rowwise D term
+    delta = jnp.einsum("bshd,bshd->bhs", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    qc = q.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)   # (nq,b,h,cq,d)
+    doutc = dout.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)
+    lsec = lse.reshape(b, h, nq, cq).transpose(2, 0, 1, 3)     # (nq,b,h,cq)
+    deltac = delta.reshape(b, h, nq, cq).transpose(2, 0, 1, 3)
+    kc = k.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)
+
+    def per_kv(carry, xs):
+        dq_acc = carry                                         # (nq,b,h,cq,d) f32
+        kj, kblk, vblk = xs
+        kf = kblk.astype(jnp.float32)
+        vf = vblk.astype(jnp.float32)
+
+        def per_q(args):
+            qi, qblk, dblk, lse_i, delta_i = args
+            qf = qblk.astype(jnp.float32)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+            qpos = q_offset + qi * cq + jnp.arange(cq)[:, None]
+            kpos = kj * ck + jnp.arange(ck)[None, :]
+            mask = _mask(qpos, kpos, causal, window)
+            p = jnp.where(mask, jnp.exp(s - lse_i[..., None]), 0.0)
+            df = dblk.astype(jnp.float32)
+            dv_i = jnp.einsum("bhqk,bhqd->bhkd", p, df)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", df, vf)
+            ds = p * (dp - delta_i[..., None])
+            dq_i = jnp.einsum("bhqk,bhkd->bhqd", ds, kf) * scale
+            dk_i = jnp.einsum("bhqk,bhqd->bhkd", ds, qf) * scale
+            return dq_i, dk_i, dv_i
+
+        dq_js, dk_js, dv_js = jax.lax.map(
+            per_q, (jnp.arange(nq), qc, doutc, lsec, deltac))
+        dq_acc = dq_acc + dq_js
+        return dq_acc, (dk_js.sum(0), dv_js.sum(0))
+
+    dq0 = jnp.zeros((nq, b, h, cq, d), jnp.float32)
+    dq_acc, (dks, dvs) = jax.lax.scan(per_kv, dq0,
+                                      (jnp.arange(nk), kc, vc))
+    dq = dq_acc.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(b, sk, h, d).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(b, sk, h, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_mha.defvjp(_fwd, _bwd)
+
+
+def flash_attention_vjp(q, k, v, *, causal: bool = True, window: int = 0,
+                        chunk_q: int = 512, chunk_k: int = 512,
+                        q_offset: int = 0):
+    """GQA wrapper: repeats kv heads, sums grads back (linear op, so the
+    repeat's transpose is handled by autodiff through jnp.repeat)."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, k.shape[1])
+    assert sq % cq == 0 and k.shape[1] % ck == 0
+    off = jnp.asarray(q_offset, jnp.float32)
+    return flash_mha(q, k, v, off, causal, window, cq, ck)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose`` targets).
+
+These are deliberately the *simplest correct* implementations — quadratic
+attention, sequential SSD recurrence — used by tests to validate both the
+Pallas kernels (interpret mode) and the production chunked-jnp paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,S,H,D), k/v: (B,S,KV,D) -> (B,S,H,D). fp32 internals."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    kr.astype(jnp.float32)) / np.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= qp - kp < window
+    sc = jnp.where(mask, sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid_len):
+    """q: (B,H,D); caches (B,C,KV,D); mask entries >= valid_len."""
+    b, c, kvh, d = k_cache.shape
+    h = q.shape[1]
+    rep = h // kvh
+    kr = jnp.repeat(k_cache, rep, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v_cache, rep, axis=2).astype(jnp.float32)
+    sc = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) / np.sqrt(d)
+    sc = jnp.where(jnp.arange(c)[None, None, :] < valid_len, sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", w, vr).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a, b, c, initial_state=None):
+    """Sequential Mamba2/SSD recurrence — the exact oracle.
+
+    x: (B,L,H,P)  dt: (B,L,H)  a: (H,) negative  b,c: (B,L,N)
+    state: (B,H,N,P);   s_t = s_{t-1}·exp(dt_t·a) + dt_t·(b_t ⊗ x_t)
+                        y_t = c_t · s_t
+    Returns (y: (B,L,H,P), final_state).
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    s0 = (jnp.zeros((bs, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                     # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt.astype(jnp.float32) * a.astype(jnp.float32))
+        update = jnp.einsum("bh,bn,bhp->bhnp", dtt.astype(jnp.float32),
+                            bt.astype(jnp.float32), xt.astype(jnp.float32))
+        state = state * decay[..., None, None] + update
+        y = jnp.einsum("bn,bhnp->bhp", ct.astype(jnp.float32), state)
+        return state, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), b.swapaxes(0, 1), c.swapaxes(0, 1))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), final
+
+
+def ssd_decode_ref(x, dt, a, b, c, state):
+    """One SSD decode step. x:(B,H,P) dt:(B,H) b,c:(B,N) state:(B,H,N,P)."""
+    decay = jnp.exp(dt.astype(jnp.float32) * a.astype(jnp.float32))
+    update = jnp.einsum("bh,bn,bhp->bhnp", dt.astype(jnp.float32),
+                        b.astype(jnp.float32), x.astype(jnp.float32))
+    state = state.astype(jnp.float32) * decay[..., None, None] + update
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), state)
+    return y.astype(x.dtype), state

@@ -1,0 +1,97 @@
+"""Mamba2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD block decomposition (arXiv:2405.21060 §6): the
+sequence is split into chunks; within a chunk the dual *quadratic* form runs
+on the MXU (two (cl,cl)·(cl,P) matmuls — exactly what the systolic array
+wants), while the O(1)-state inter-chunk recurrence is carried in VMEM
+scratch across sequential grid steps. This replaces the GPU formulation's
+warp-level associative scan — on TPU the scan is simply the innermost grid
+dimension with "arbitrary" semantics.
+
+Inputs are pre-arranged by ``ops.ssd`` to (B·H, NC, cl, ·) blocks:
+  xdt: (BH, NC, cl, P)   — dt-scaled inputs
+  a:   (BH, NC, cl)      — dt·A (negative) log-decays
+  b,c: (BH, NC, cl, N)   — input/output projections (shared across heads,
+                            pre-broadcast per head by the wrapper)
+Outputs: y (BH, NC, cl, P) and the final state (BH, N, P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
+                nc: int, cl: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    xdt = xdt_ref[0, 0].astype(jnp.float32)          # (cl, P)
+    a = a_ref[0, 0].astype(jnp.float32)              # (cl,)
+    b = b_ref[0, 0].astype(jnp.float32)              # (cl, N)
+    c = c_ref[0, 0].astype(jnp.float32)              # (cl, N)
+
+    a_cs = jnp.cumsum(a)                             # inclusive (cl,)
+    a_total = a_cs[-1]
+
+    # intra-chunk: Y_diag = (C·Bᵀ ⊙ L) @ xdt, L[i,j] = exp(a_cs[i]-a_cs[j])·[i>=j]
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)     # (cl, cl)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    decay = jnp.exp(a_cs[:, None] - a_cs[None, :])
+    lmask = jnp.where(ii >= jj, decay, 0.0)
+    y_diag = jax.lax.dot_general(cb * lmask, xdt, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (cl, P)
+
+    # contribution of the inbound state
+    s_prev = s_scr[...]                              # (N, P)
+    c_in = c * jnp.exp(a_cs)[:, None]                # decay from chunk start
+    y_off = jax.lax.dot_general(c_in, s_prev, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: S ← S·exp(Σa) + Σ_t exp(a_cs[-1]-a_cs[t])·b_t ⊗ xdt_t
+    b_w = b * jnp.exp(a_total - a_cs)[:, None]       # (cl, N)
+    s_new = s_prev * jnp.exp(a_total) + jax.lax.dot_general(
+        b_w, xdt, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        state_ref[0] = s_new.astype(state_ref.dtype)
+
+
+def ssd_scan(xdt, a, b, c, *, interpret: bool = False):
+    """xdt: (BH, NC, cl, P); a: (BH, NC, cl); b,c: (BH, NC, cl, N)."""
+    bh, nc, cl, p = xdt.shape
+    n = b.shape[-1]
+    kernel = functools.partial(_ssd_kernel, nc=nc, cl=cl)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, cl, p), lambda g, ci: (g, ci, 0, 0)),
+            pl.BlockSpec((1, 1, cl), lambda g, ci: (g, ci, 0)),
+            pl.BlockSpec((1, 1, cl, n), lambda g, ci: (g, ci, 0, 0)),
+            pl.BlockSpec((1, 1, cl, n), lambda g, ci: (g, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cl, p), lambda g, ci: (g, ci, 0, 0)),
+            pl.BlockSpec((1, n, p), lambda g, ci: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, cl, p), xdt.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xdt, a, b, c)

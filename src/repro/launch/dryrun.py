@@ -1,0 +1,197 @@
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) this lowers + compiles the
+appropriate step function (train_step / prefill / serve_step) against
+ShapeDtypeStruct stand-ins — no allocation — and records
+``memory_analysis`` (fits?), ``cost_analysis`` (FLOPs/bytes) and the
+collective schedule (parsed from post-SPMD HLO) for §Roofline.
+
+MUST be run as a module entry point: the XLA_FLAGS line below has to
+execute before jax initializes devices.
+"""
+# The VERY FIRST lines — before ANY other import (jax locks device count
+# on first init). Do NOT set this globally; only the dry-run needs 512
+# placeholder devices.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, get_shape
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamW, AdamWState
+from repro.training.train_step import make_train_step
+from repro.utils.sharding import resolve_spec
+
+SLIDING_WINDOW_500K = 8192   # sub-quadratic variant for dense archs
+
+
+def effective_config(cfg, shape):
+    """long_500k needs sub-quadratic attention: dense/vlm archs run the
+    sliding-window variant; ssm/hybrid run natively; whisper skips."""
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return None   # skip — recorded in DESIGN.md §4
+        if cfg.family in ("dense", "moe", "vlm"):
+            return dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_500K)
+    return cfg
+
+
+def cache_len_for(cfg, shape) -> int:
+    if cfg.sliding_window:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+def prepare(cfg, shape, mesh):
+    """Returns (fn, abstract_args, in_shardings)."""
+    api = build_model(cfg)
+    batch_sds = api.input_specs(shape)
+    batch_spec = api.input_shardings(shape, mesh)
+    batch_sh = {k: NamedSharding(mesh, s) for k, s in batch_spec.items()}
+    pspecs = api.param_specs(mesh)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    if shape.kind == "train":
+        params = api.abstract_params(jnp.float32)
+        opt = AdamW()
+        step = make_train_step(api, opt, remat=True)
+        opt_state = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=params, v=params)
+        opt_sh = AdamWState(step=NamedSharding(mesh, P()),
+                            m=param_sh, v=param_sh)
+        return (step, (params, opt_state, batch_sds),
+                (param_sh, opt_sh, batch_sh))
+
+    params = api.abstract_params(jnp.dtype(cfg.dtype))
+    clen = cache_len_for(cfg, shape)
+    cache = api.abstract_cache(shape.global_batch, clen)
+    cache_specs = api.cache_specs(mesh, shape.global_batch, clen)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs)
+
+    if shape.kind == "prefill":
+        fn = lambda p, batch: api.prefill(p, batch, clen)
+        return fn, (params, batch_sds), (param_sh, batch_sh)
+
+    # decode: serve_step — ONE new token against a seq_len-sized cache
+    fn = lambda p, token, cache: api.decode_step(p, token, cache)
+    tok_sh = batch_sh["token"]
+    return (fn, (params, batch_sds["token"], cache),
+            (param_sh, tok_sh, cache_sh))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+           "kind": shape.kind, "ok": False}
+    eff = effective_config(cfg, shape)
+    if eff is None:
+        rec.update(ok=True, skipped="full-attention enc-dec: 500k decode "
+                   "outside model family (DESIGN.md §4)")
+        _save(rec, out_dir)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        fn, args, in_sh = prepare(eff, shape, mesh)
+        # donate the state that is consumed: train step donates params +
+        # opt state; decode donates the cache (in-place update); prefill
+        # takes no cache argument (it builds one)
+        donate = {"train": (0, 1), "decode": (2,), "prefill": ()}[shape.kind]
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = hlo_analysis.memory_summary(compiled)
+        cost = hlo_analysis.cost_summary(compiled)
+        hlo_text = compiled.as_text()
+        colls = hlo_analysis.collective_stats(hlo_text)
+        # trip-count-weighted costs: XLA cost_analysis counts while bodies
+        # once, under-reporting scan-over-layers models by ~num_layers
+        wc = hlo_analysis.weighted_cost(hlo_text)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=cost["flops"],
+            bytes_per_device=cost["bytes_accessed"],
+            weighted_flops_per_device=wc.flops,
+            weighted_bytes_per_device=wc.bytes_accessed,
+            weighted_collective_bytes=wc.collective_bytes,
+            weighted_collective_counts=wc.collective_counts,
+            memory=mem,
+            collective_bytes=colls.bytes_by_kind,
+            collective_counts=colls.count_by_kind,
+            sliding_window=eff.sliding_window,
+            n_devices=mesh.size,
+        )
+        if verbose:
+            print(f"  mem/device = {mem['total_per_device']/1e9:.2f} GB, "
+                  f"flops = {cost['flops']:.3g}, "
+                  f"coll = {colls.total_bytes/1e6:.1f} MB "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"  FAILED: {rec['error']}")
+    _save(rec, out_dir)
+    return rec
+
+
+def _save(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (see repro.configs.ARCHS)")
+    ap.add_argument("--shape", default="all",
+                    help="input-shape id or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                print(f"[dryrun] {tag}", flush=True)
+                rec = run_one(arch, shape, mp, args.out)
+                n_fail += 0 if rec["ok"] else 1
+    print(f"[dryrun] done, failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

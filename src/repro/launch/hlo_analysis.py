@@ -1,0 +1,283 @@
+"""Extract roofline terms from compiled XLA artifacts.
+
+``cost_analysis`` gives HLO FLOPs and HBM bytes; collective traffic is NOT
+in cost_analysis, so we parse the post-SPMD optimized HLO text and sum
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %all-reduce.5 = bf16[8,2048]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+# tuple-shaped collectives: = (bf16[..], bf16[..]) all-to-all(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def ar_bytes(self) -> int:
+        return self.bytes_by_kind.get("all-reduce", 0) \
+            + self.bytes_by_kind.get("reduce-scatter", 0) \
+            + self.bytes_by_kind.get("all-gather", 0) \
+            + self.bytes_by_kind.get("collective-permute", 0)
+
+    @property
+    def a2a_bytes(self) -> int:
+        return self.bytes_by_kind.get("all-to-all", 0)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    by_kind: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:           # async pair: count the -start only
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            by_kind[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            total = sum(_shape_bytes(dt, dm)
+                        for dt, dm in _SHAPE_RE.findall(shapes))
+            by_kind[kind] += total
+            counts[kind] += 1
+    return CollectiveStats(by_kind, counts)
+
+
+# --------------------------------------------------------------------------
+# trip-count-weighted cost model
+#
+# XLA's cost_analysis() counts a while-loop body ONCE, so scan-over-layers
+# models under-report FLOPs / bytes / collective traffic by ~num_layers.
+# We reconstruct honest totals from the optimized HLO text: split it into
+# computations, find `while` ops with known_trip_count, propagate multipliers
+# from ENTRY, and weight each computation's dots/collectives/fusions.
+# --------------------------------------------------------------------------
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s+\(")
+_WHILE_BODY = re.compile(r"body=%([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS = re.compile(r"(?:calls=|to_apply=|condition=|true_computation=|"
+                    r"false_computation=|branch_computations=\{)%?([\w\.\-]+)")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_DOT_LINE = re.compile(r"\s(?:dot|convolution)\(")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_ANYOP_RE = re.compile(r"=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+([\w\-]+)\(")
+
+
+def _split_computations(hlo_text: str):
+    """Yield (name, list_of_lines) per computation in the module."""
+    current, buf = None, []
+    for line in hlo_text.splitlines():
+        m = _COMP_START.match(line)
+        if m and "->" in line:
+            if current is not None:
+                yield current, buf
+            current, buf = m.group(1), [line]
+        elif current is not None:
+            buf.append(line)
+    if current is not None:
+        yield current, buf
+
+
+def _entry_name(hlo_text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%([\w\.\-]+)", hlo_text, re.M)
+    return m.group(1) if m else None
+
+
+def computation_multipliers(hlo_text: str) -> Dict[str, float]:
+    """Effective execution count per computation (trip-count products).
+
+    ``while`` bodies multiply by known_trip_count; fusions/calls/branches
+    inherit the caller's multiplier."""
+    comps = {name: lines for name, lines in _split_computations(hlo_text)}
+    entry = _entry_name(hlo_text)
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, factor: float, depth: int = 0) -> None:
+        if name not in comps or depth > 32:
+            return
+        mult[name] = mult.get(name, 0.0) + factor
+        for line in comps[name]:
+            if " while(" in line:
+                mb = _WHILE_BODY.search(line)
+                mt = _TRIP.search(line)
+                trips = int(mt.group(1)) if mt else 1
+                if mb:
+                    visit(mb.group(1), factor * trips, depth + 1)
+                # the condition computation also runs `trips` times, but we
+                # exclude it (negligible) by not recursing on condition=
+                continue
+            for mc in _CALLS.finditer(line):
+                if mc.group(1) != name:
+                    visit(mc.group(1), factor, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    else:
+        mult = {name: 1.0 for name in comps}
+    return mult
+
+
+@dataclasses.dataclass
+class WeightedCost:
+    flops: float              # 2·(out elements)·K summed over dots, weighted
+    bytes_accessed: float     # operand+output bytes of memory-touching ops
+    collective_bytes: Dict[str, float]
+    collective_counts: Dict[str, float]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def ar_bytes(self) -> float:
+        return sum(self.collective_bytes.get(k, 0) for k in
+                   ("all-reduce", "reduce-scatter", "all-gather",
+                    "collective-permute"))
+
+    @property
+    def a2a_bytes(self) -> float:
+        return self.collective_bytes.get("all-to-all", 0)
+
+
+# only ops whose outputs plausibly materialize in HBM: fusion boundaries,
+# matmuls, cache updates, data movement. Elementwise/layout ops (broadcast,
+# iota, reshape, convert, select, transpose) are fused by XLA and counting
+# them inflated the memory term ~50x.
+_BYTES_OPS = ("fusion", "dot", "convolution", "dynamic-update-slice",
+              "scatter", "gather", "copy", "reduce", "concatenate")
+
+
+def weighted_cost(hlo_text: str) -> WeightedCost:
+    mults = computation_multipliers(hlo_text)
+    flops = 0.0
+    byts = 0.0
+    coll_b: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    coll_n: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for name, lines in _split_computations(hlo_text):
+        w = mults.get(name, 0.0)
+        if w == 0.0:
+            continue
+        # local symbol table: op name -> (dtype, dims string)
+        sym = {}
+        for line in lines:
+            md = _DEF.search(line)
+            if md:
+                sym[md.group(1)] = (md.group(2), md.group(3))
+        for line in lines:
+            if "-done(" in line:
+                continue
+            md = _DEF.search(line)
+            if md and _DOT_LINE.search(line):
+                _, odt, odims = md.groups()
+                out_n = 1
+                for dd in odims.split(","):
+                    if dd:
+                        out_n *= int(dd)
+                # contraction size from the lhs operand's recorded shape
+                args = line.split("dot(", 1)[-1] if "dot(" in line \
+                    else line.split("convolution(", 1)[-1]
+                ops_ = _OPERANDS.findall(args.split(")", 1)[0])
+                k = 1
+                mK = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                if ops_ and ops_[0] in sym and mK and mK.group(1):
+                    ldims = [int(x) for x in sym[ops_[0]][1].split(",") if x]
+                    for ci in mK.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            k *= ldims[int(ci)]
+                flops += w * 2.0 * out_n * k
+            mo = _OP_RE.search(line)
+            if mo:
+                dt, dims, kind = mo.groups()
+                coll_b[kind] += w * _shape_bytes(dt, dims)
+                coll_n[kind] += w
+                continue
+            mt = _TUPLE_RE.search(line)
+            if mt:
+                shapes, kind = mt.groups()
+                coll_b[kind] += w * sum(_shape_bytes(a, b)
+                                        for a, b in _SHAPE_RE.findall(shapes))
+                coll_n[kind] += w
+                continue
+            ma = _ANYOP_RE.search(line)
+            if ma and ma.group(3) in _BYTES_OPS:
+                total = sum(_shape_bytes(a, b)
+                            for a, b in _SHAPE_RE.findall(line))
+                byts += w * total
+    return WeightedCost(flops, byts, coll_b, coll_n)
+
+
+def scan_trip_counts(hlo_text: str) -> int:
+    """Total while-loop trip count (sanity signal for scan-heavy models)."""
+    trips = re.findall(r'trip_count="?(\d+)', hlo_text)
+    return sum(int(t) for t in trips)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    if isinstance(ma, list):
+        ma = ma[0]
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes"):
+        out[key] = float(getattr(ma, key, 0.0))
+    out["total_per_device"] = (out["argument_size_in_bytes"]
+                               + out["output_size_in_bytes"]
+                               + out["temp_size_in_bytes"]
+                               - out["alias_size_in_bytes"])
+    return out

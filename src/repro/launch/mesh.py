@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — jax locks the device count on first use, and the
+dry-run must set XLA_FLAGS before that happens.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = one 256-chip v5e pod; (2,16,16) = two pods over DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_submesh(chips: int, *, model_axis: int = None):
+    """A (data, model) mesh over the first ``chips`` local devices — the
+    spatial-multiplexing unit: one D-STACK allocation = one sub-mesh."""
+    devs = jax.devices()[:chips]
+    if model_axis is None:
+        model_axis = min(chips, 16)
+    data_axis = max(1, chips // model_axis)
+    import numpy as np
+    from jax.sharding import Mesh
+    arr = np.array(devs[: data_axis * model_axis]).reshape(data_axis, model_axis)
+    return Mesh(arr, ("data", "model"))
+
+
+def make_cpu_mesh():
+    """Single-device mesh for smoke tests."""
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

@@ -1,0 +1,28 @@
+"""Generate the EXPERIMENTS.md §Roofline table from results/dryrun/."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline import load_records, model_flops, roofline_terms
+from repro.configs import INPUT_SHAPES, get_config
+
+
+def main(mesh: str = "16x16") -> None:
+    print(f"| arch | shape | compute | memory | collective | dominant "
+          f"| MODEL/HLO flops | HBM GB/dev | fits |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for rec in load_records(mesh):
+        rt = roofline_terms(rec)
+        if rt is None:
+            print(f"| {rec['arch']} | {rec['shape']} | — | — | — | skipped "
+                  f"| — | — | — |")
+            continue
+        print(f"| {rec['arch']} | {rec['shape']} "
+              f"| {rt['compute_s']*1e3:.2f} ms | {rt['memory_s']*1e3:.2f} ms "
+              f"| {rt['collective_s']*1e3:.2f} ms | {rt['dominant']} "
+              f"| {rt['useful_ratio']:.2f} | {rt['mem_gb_per_device']:.1f} "
+              f"| {'Y' if rt['fits_hbm'] else 'N'} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

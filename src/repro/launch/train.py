@@ -1,0 +1,62 @@
+"""Training driver (CPU-scale smoke; production shapes go through dryrun).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.registry import build_model
+from repro.training import checkpoint
+from repro.training.optimizer import AdamW
+from repro.training.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced smoke size)")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    opt = AdamW(lr=args.lr, warmup_steps=max(10, args.steps // 10),
+                total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(api, opt))
+    state = opt.init(params)
+    pipe = iter(TokenPipeline(cfg, DataConfig(args.batch, args.seq)))
+
+    t0 = time.time()
+    for i in range(args.steps):
+        params, state, m = step_fn(params, state, next(pipe))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+81 mamba2 layers; a single weight-tied full-attention block (attn + SwiGLU
+MLP) is applied after every ``cfg.attn_every``-th layer. Because the
+attention weights are shared, the scan over mamba layers can invoke it via
+``jax.lax.cond`` inside the scan body — per-invocation KV caches are indexed
+by ``layer_idx // attn_every``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.layers import ParamDef
+
+
+def n_attn_blocks(cfg) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def shared_attn_plan(cfg) -> dict:
+    return {
+        "ln1": L.norm_plan(cfg.d_model, cfg.norm),
+        "attn": L.attn_plan(cfg),
+        "ln2": L.norm_plan(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_plan(cfg),
+    }
+
+
+def plan(cfg) -> dict:
+    return {
+        "embed": L.embed_plan(cfg),
+        "layers": L.stack_plan(ssm.mamba_layer_plan(cfg), cfg.num_layers),
+        "shared_attn": shared_attn_plan(cfg),
+        "final_norm": L.norm_plan(cfg.d_model, cfg.norm),
+    }
+
+
+def init(key, cfg, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": L.init_from_plan(k1, L.embed_plan(cfg), dtype),
+        "layers": L.init_stacked(k2, ssm.mamba_layer_plan(cfg), cfg.num_layers, dtype),
+        "shared_attn": L.init_from_plan(k3, shared_attn_plan(cfg), dtype),
+        "final_norm": L.init_from_plan(k4, L.norm_plan(cfg.d_model, cfg.norm), dtype),
+    }
+
+
+def _apply_shared_full(sp, cfg, x, positions):
+    h = L.apply_norm(sp["ln1"], x, cfg.norm)
+    q, k, v = L.attn_qkv(sp["attn"], cfg, h, positions)
+    q = L.constrain_q_prefill(cfg, q)
+    attn = L.big_attention(q, k, v, causal=True)
+    x = x + L.attn_out(sp["attn"], x.dtype, attn)
+    h = L.apply_norm(sp["ln2"], x, cfg.norm)
+    return x + L.apply_mlp(sp["mlp"], h), (k, v)
+
+
+def forward(params, cfg, tokens, *, remat: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    sp = params["shared_attn"]
+
+    from repro.utils.sharding import maybe_constrain
+
+    def body(carry, xs):
+        lp, idx = xs
+        y, _ = ssm.mamba_block(lp, cfg, carry)
+        y = jax.lax.cond(
+            (idx + 1) % cfg.attn_every == 0,
+            lambda t: _apply_shared_full(sp, cfg, t, positions)[0],
+            lambda t: t,
+            y)
+        y = maybe_constrain(y, "batch", None, "act_embed")
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(
+        body, x, (params["layers"], jnp.arange(cfg.num_layers)))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    aux = {"load_balance_loss": jnp.float32(0.0),
+           "dropped_fraction": jnp.float32(0.0)}
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def cache_plan(cfg, batch: int, cache_len: int) -> dict:
+    base = ssm.cache_plan(cfg, batch, cache_len)
+    na = n_attn_blocks(cfg)
+    kv_shape = (na, batch, cache_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+    spec = L.kv_cache_spec(cfg)
+    base["attn_k"] = ParamDef(kv_shape, spec, "zeros")
+    base["attn_v"] = ParamDef(kv_shape, spec, "zeros")
+    return base
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cache = ssm.init_cache(cfg, batch, cache_len, dtype)
+    cp = cache_plan(cfg, batch, cache_len)
+    cache["attn_k"] = jnp.zeros(cp["attn_k"].shape, dtype)
+    cache["attn_v"] = jnp.zeros(cp["attn_v"].shape, dtype)
+    return cache
+
+
+def prefill(params, cfg, tokens, cache_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    positions = jnp.arange(s)[None, :]
+    sp = params["shared_attn"]
+    na = n_attn_blocks(cfg)
+
+    def body(carry, xs):
+        h, kc, vc = carry
+        lp, idx = xs
+        h, (state, conv_tail) = ssm.mamba_block(lp, cfg, h)
+
+        def attn_branch(args):
+            h_, kc_, vc_ = args
+            h2, (k, v) = _apply_shared_full(sp, cfg, h_, positions)
+            if s <= cache_len:
+                kk = jnp.zeros((b, cache_len) + k.shape[2:], k.dtype).at[:, :s].set(k)
+                vv = jnp.zeros((b, cache_len) + v.shape[2:], v.dtype).at[:, :s].set(v)
+            else:
+                kk, vv = k[:, s - cache_len:], v[:, s - cache_len:]
+            j = jnp.minimum(idx // cfg.attn_every, na - 1)
+            kc_ = jax.lax.dynamic_update_slice_in_dim(kc_, kk[None], j, axis=0)
+            vc_ = jax.lax.dynamic_update_slice_in_dim(vc_, vv[None], j, axis=0)
+            return h2, kc_, vc_
+
+        h, kc, vc = jax.lax.cond(
+            (idx + 1) % cfg.attn_every == 0, attn_branch,
+            lambda args: args, (h, kc, vc))
+        return (h, kc, vc), (state, conv_tail)
+
+    na_shape = (na, b, cache_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+    kc0 = jnp.zeros(na_shape, dtype)
+    vc0 = jnp.zeros(na_shape, dtype)
+    (x, kc, vc), (states, convs) = jax.lax.scan(
+        body, (x, kc0, vc0),
+        (params["layers"], jnp.arange(cfg.num_layers)))
+    x = L.apply_norm(params["final_norm"], x[:, -1], cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"ssm": states, "conv": convs, "attn_k": kc, "attn_v": vc,
+                    "pos": jnp.int32(s)}
+
+
+def decode_step(params, cfg, token, cache):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], token, dtype)
+    pos = cache["pos"]
+    cache_len = cache["attn_k"].shape[2]
+    slot = pos % cache_len
+    valid = jnp.minimum(pos + 1, cache_len)
+    positions = jnp.broadcast_to(pos, token.shape)
+    sp = params["shared_attn"]
+    na = n_attn_blocks(cfg)
+
+    def body(carry, xs):
+        h, kc, vc = carry
+        lp, state, conv, idx = xs
+        h, (state, conv) = ssm.mamba_block_decode(lp, cfg, h, state, conv)
+
+        def attn_branch(args):
+            h_, kc_, vc_ = args
+            j = jnp.minimum(idx // cfg.attn_every, na - 1)
+            hh = L.apply_norm(sp["ln1"], h_, cfg.norm)
+            q, k, v = L.attn_qkv(sp["attn"], cfg, hh[:, None, :], positions[:, None])
+            q = L.constrain_q_decode(cfg, q[:, 0])
+            kj = jax.lax.dynamic_slice_in_dim(kc_, j, 1, axis=0)[0]
+            vj = jax.lax.dynamic_slice_in_dim(vc_, j, 1, axis=0)[0]
+            kj = jax.lax.dynamic_update_slice_in_dim(kj, k, slot, axis=1)
+            vj = jax.lax.dynamic_update_slice_in_dim(vj, v, slot, axis=1)
+            attn = L.decode_attention(q, kj, vj, valid)
+            h2 = h_ + L.attn_out(sp["attn"], h_.dtype, attn)
+            hh2 = L.apply_norm(sp["ln2"], h2, cfg.norm)
+            h2 = h2 + L.apply_mlp(sp["mlp"], hh2)
+            kc_ = jax.lax.dynamic_update_slice_in_dim(kc_, kj[None], j, axis=0)
+            vc_ = jax.lax.dynamic_update_slice_in_dim(vc_, vj[None], j, axis=0)
+            return h2, kc_, vc_
+
+        h, kc, vc = jax.lax.cond(
+            (idx + 1) % cfg.attn_every == 0, attn_branch,
+            lambda args: args, (h, kc, vc))
+        return (h, kc, vc), (state, conv)
+
+    (x, kc, vc), (states, convs) = jax.lax.scan(
+        body, (x, cache["attn_k"], cache["attn_v"]),
+        (params["layers"], cache["ssm"], cache["conv"],
+         jnp.arange(cfg.num_layers)))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"ssm": states, "conv": convs, "attn_k": kc, "attn_v": vc,
+                    "pos": pos + 1}

@@ -1,0 +1,419 @@
+"""Shared model-building primitives (pure JAX, no flax).
+
+Parameters are declared via a *plan*: a pytree of ``ParamDef(shape, spec,
+init)``. The same plan drives initialization (``init_from_plan``), sharding
+(``utils.sharding.tree_specs``) and abstract eval (``abstract_params``), so
+the three can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# parameter plans
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: Optional[Tuple[Optional[str], ...]]       # logical axes
+    init: str = "normal"                             # normal | zeros | ones
+    std: float = 0.02
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _materialize(key, pd: ParamDef, dtype) -> jax.Array:
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, dtype)
+    return (pd.std * jax.random.normal(key, pd.shape, jnp.float32)).astype(dtype)
+
+
+def init_from_plan(key, plan, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(plan, is_leaf=_is_def)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    return jax.tree.unflatten(
+        treedef, [_materialize(k, pd, dtype) for k, pd in zip(keys, leaves)]
+    )
+
+
+def init_stacked(key, plan, n: int, dtype=jnp.float32):
+    """Initialize ``n`` copies of ``plan`` stacked on a leading axis (for scan)."""
+    keys = jax.random.split(key, n)
+    per_layer = jax.vmap(lambda k: init_from_plan(k, plan, dtype))(keys)
+    return per_layer
+
+
+def stack_plan(plan, n: int):
+    """The plan describing the stacked params (leading ``stack`` axis)."""
+    return jax.tree.map(
+        lambda pd: ParamDef((n,) + tuple(pd.shape), ("stack",) + tuple(pd.spec or (None,) * len(pd.shape)), pd.init, pd.std),
+        plan,
+        is_leaf=_is_def,
+    )
+
+
+def abstract_params(plan, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(tuple(pd.shape), dtype), plan, is_leaf=_is_def
+    )
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def norm_plan(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d,), ("embed",), "ones")}
+    if kind == "layernorm":
+        return {"scale": ParamDef((d,), ("embed",), "ones"),
+                "bias": ParamDef((d,), ("embed",), "zeros")}
+    if kind == "layernorm_nonparam":
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / d))
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                                # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half: 2 * half]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2, x[..., 2 * half:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, d)).reshape(b, s, kv * n_rep, d)
+
+
+def attention_dense(q, k, v, *, causal: bool, q_offset=0, bias_mask=None):
+    """Plain quadratic attention. q:(B,Sq,H,D) k,v:(B,Sk,KV,D)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    k = repeat_kv(k, h // kv)
+    v = repeat_kv(v, h // kv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(d)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(qpos >= kpos, scores, -1e30)
+    if bias_mask is not None:
+        scores = jnp.where(bias_mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, chunk_q: int = 1024,
+                      chunk_k: int = 1024, window: int = 0):
+    """Flash-style chunked attention in pure jnp (O(S·chunk) memory).
+
+    Computes all (q-chunk × kv-chunk) tiles with masking — the Pallas TPU
+    kernel (repro.kernels.flash_attention) skips fully-masked tiles; this jnp
+    fallback trades ~2x attention FLOPs for static shapes under scan.
+    """
+    b, s, h, d = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    n_rep = h // kvh
+    cq = min(chunk_q, s)
+    ck = min(chunk_k, sk)
+    nq, nk = s // cq, sk // ck
+    assert s % cq == 0 and sk % ck == 0, (s, sk, cq, ck)
+    scale = 1.0 / np.sqrt(d)
+
+    qc = q.reshape(b, nq, cq, h, d)
+    kc = k.reshape(b, nk, ck, kvh, d)
+    vc = v.reshape(b, nk, ck, kvh, d)
+
+    def per_q_chunk(qi, qblk):
+        # qblk: (b, cq, h, d)
+        def inner(carry, xs):
+            m, l, acc = carry
+            ki, kblk, vblk = xs
+            kblk = repeat_kv(kblk, n_rep)          # (b, ck, h, d)
+            vblk = repeat_kv(vblk, n_rep)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk).astype(jnp.float32) * scale
+            qpos = qi * cq + jnp.arange(cq)[:, None]
+            kpos = ki * ck + jnp.arange(ck)[None, :]
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qpos >= kpos
+            if window:
+                mask &= qpos - kpos < window
+            sc = jnp.where(mask, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0), (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.swapaxes(1, 2).astype(q.dtype)   # (b, cq, h, d)
+
+    outs = jax.lax.map(lambda xs: per_q_chunk(xs[0], xs[1]),
+                       (jnp.arange(nq), qc.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1).reshape(b, s, h, d)
+
+
+def big_attention(q, k, v, *, causal: bool, window: int = 0):
+    """Dispatch: Pallas flash kernel on real TPUs; flash-with-custom-VJP
+    (O(S) residuals, tile recomputation in backward) elsewhere."""
+    s, sk = q.shape[1], k.shape[1]
+    if jax.default_backend() == "tpu" and s % 512 == 0 and sk % 512 == 0:
+        from repro.kernels.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window)
+    if max(s, sk) > 1024:
+        from repro.kernels.flash_vjp import flash_attention_vjp
+        cq = 512 if s % 512 == 0 else s
+        ck = 512 if sk % 512 == 0 else sk
+        return flash_attention_vjp(q, k, v, causal=causal, window=window,
+                                   chunk_q=cq, chunk_k=ck)
+    if window:
+        qp = jnp.arange(s)[:, None]
+        kp = jnp.arange(sk)[None, :]
+        mask = (qp - kp < window) & ((qp >= kp) if causal else True)
+        return attention_dense(q, k, v, causal=False, bias_mask=mask)
+    return attention_dense(q, k, v, causal=causal)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
+                     ring_pos=None):
+    """Single-token attention over a KV cache.
+
+    q: (B, H, D); k_cache/v_cache: (B, C, KV, D); valid_len: scalar int —
+    number of valid cache entries. For ring-buffer (sliding-window) caches the
+    whole buffer is valid once full; masking handles the partial-fill phase.
+
+    GQA is computed as a grouped einsum — NOT a materialized repeat_kv.
+    A repeat broadcasts the whole cache to H heads, which under SPMD turns
+    a sequence-sharded cache into a full all-gather per layer (measured:
+    25.8 GB/layer on yi-9b decode_32k).
+    """
+    b, c, kvh, d = k_cache.shape
+    h = q.shape[1]
+    qg = q.reshape(b, kvh, h // kvh, d)
+    # preferred_element_type keeps the cache operands bf16 (no hoisted
+    # full-cache f32 convert) while accumulating scores in f32
+    sc = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    sc = sc / np.sqrt(d)
+    mask = jnp.arange(c)[None, None, None, :] < valid_len
+    sc = jnp.where(mask, sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrk,bkgd->bgrd", w, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block (params + apply)
+# --------------------------------------------------------------------------
+def attn_plan(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    # NOTE: head_dim is deliberately NOT a fallback shard axis here — a
+    # head_dim-sharded q/k makes every attention score tile a partial-sum
+    # all-reduce (measured: qwen2 prefill_32k went collective-dominated,
+    # ~2.9 TB/device of tile ARs). Non-divisible head counts replicate the
+    # (small) projection weights; the KV cache memory is handled by
+    # sequence-sharding instead (see cache plans).
+    p = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamDef((h, hd), ("heads", None), "zeros")
+        p["bk"] = ParamDef((kv, hd), ("kv_heads", None), "zeros")
+        p["bv"] = ParamDef((kv, hd), ("kv_heads", None), "zeros")
+    return p
+
+
+def constrain_q_prefill(cfg, q, tp: int = 16):
+    """Context parallelism for archs whose q-head count doesn't divide the
+    TP width (qwen2: 14, whisper: 12, granite: 24): shard the q SEQUENCE so
+    attention compute splits tp-ways with only a tiny all-gather of the
+    (GQA-small) k/v — instead of replicating the whole S² computation."""
+    if cfg.num_heads % tp:
+        from repro.utils.sharding import maybe_constrain
+        return maybe_constrain(q, "batch", "kv_seq", None, None)
+    return q
+
+
+def cp_attention(cfg, q, k, v, *, causal: bool, window: int = 0):
+    """Context-parallel self-attention for replicated-head architectures.
+
+    Sharding constraints alone do NOT make XLA partition the chunked
+    attention's lax.map/scan over the sequence (measured: qwen2 prefill
+    attention stayed 16x-replicated). This dispatcher makes the split
+    explicit with shard_map: each TP shard runs flash attention on its
+    sequence slice of q against the (small, GQA) full k/v, with the causal
+    mask shifted by the shard's offset.
+    """
+    from repro.utils.sharding import active_mesh, batch_axes, resolve_spec
+    mesh = active_mesh()
+    s = q.shape[1]
+    if (mesh is None or "model" not in mesh.axis_names
+            or cfg.num_heads % mesh.shape["model"] == 0
+            or s % (mesh.shape["model"] * 512) != 0
+            or q.shape[0] % max(1, np.prod([mesh.shape[a]
+                                            for a in batch_axes(mesh)])) != 0):
+        q = constrain_q_prefill(cfg, q)
+        return big_attention(q, k, v, causal=causal, window=window)
+
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.flash_vjp import flash_attention_vjp
+    ba = batch_axes(mesh)
+    bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
+    q_spec = P(bspec, "model")
+    kv_spec = P(bspec)
+    local_s = s // mesh.shape["model"]
+
+    def local(q_l, k_l, v_l):
+        off = (jax.lax.axis_index("model") * local_s).astype(jnp.float32)
+        return flash_attention_vjp(q_l, k_l, v_l, causal=causal,
+                                   window=window, q_offset=off)
+
+    return jax.shard_map(local, mesh=mesh,
+                         in_specs=(q_spec, kv_spec, kv_spec),
+                         out_specs=q_spec, check_vma=False)(q, k, v)
+
+
+def constrain_q_decode(cfg, q, tp: int = 16):
+    """Against a sequence-sharded cache (kv heads non-divisible), the
+    single-token q must be replicated across the TP group: scores are then
+    computed per cache shard and combined by a (batch, heads)-sized
+    distributed softmax — bytes, not gigabytes, of all-reduce."""
+    if cfg.num_kv_heads % tp:
+        from repro.utils.sharding import maybe_constrain
+        return maybe_constrain(q, "batch", None, None)
+    return q
+
+
+def kv_cache_spec(cfg, tp: int = 16):
+    """Sharding for a (layers, batch, seq, kv_heads, head_dim) cache.
+
+    KV heads shard when they divide the TP width (zero-communication local
+    decode attention); otherwise the *sequence* dim shards — decode
+    attention then does a distributed softmax whose all-reduce is only
+    (batch, heads[, head_dim]) per layer, thousands of times smaller than
+    head_dim-sharded partial sums."""
+    if cfg.num_kv_heads and cfg.num_kv_heads % tp == 0:
+        return ("stack", "batch", None, "kv_heads", None)
+    return ("stack", "batch", "kv_seq", None, None)
+
+
+def attn_qkv(p, cfg, x, positions):
+    """Project + rope. x: (B,S,d) -> q:(B,S,H,hd), k,v:(B,S,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if not cfg.learned_pos_emb:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(p, x_dtype, attn):
+    """attn: (B,S,H,hd) or (B,H,hd) -> project back to d_model."""
+    return jnp.einsum("...hk,hkd->...d", attn, p["wo"].astype(x_dtype))
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def mlp_plan(cfg, d_ff: Optional[int] = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi_gate": ParamDef((d, ff), ("embed", "mlp")),
+        "wi_up": ParamDef((d, ff), ("embed", "mlp")),
+        "wo": ParamDef((ff, d), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p, x):
+    g = jnp.einsum("...d,df->...f", x, p["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+def embed_plan(cfg) -> dict:
+    v = cfg.padded_vocab
+    p = {"embedding": ParamDef((v, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamDef((cfg.d_model, v), ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(p, tokens, dtype):
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed(p, x, cfg):
+    """Logits over the PADDED vocab; pad rows masked to -inf (sampling and
+    cross-entropy both ignore them; slicing back would break the vocab
+    sharding)."""
+    w = p.get("lm_head")
+    if w is None:
+        w = p["embedding"].T
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e9, logits.dtype), logits)
+    return logits

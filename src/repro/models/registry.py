@@ -1,0 +1,123 @@
+"""Uniform model API over all assigned architecture families.
+
+``build_model(cfg)`` returns a ``ModelAPI`` whose five callables have the
+same signatures regardless of family — the serving engine, trainer, and
+dry-run never branch on architecture:
+
+  forward(params, batch, remat=False)        -> (logits (B,S,V), aux)
+  prefill(params, batch, cache)              -> (last_logits (B,V), cache)
+  decode_step(params, token (B,), cache)     -> (logits (B,V), cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models import layers as L
+from repro.utils.sharding import resolve_spec, tree_specs
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    plan: Any
+    init: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_plan: Callable
+    init_cache: Callable
+
+    # ------------------------------------------------------------- sharding
+    def param_specs(self, mesh):
+        return tree_specs(self.plan, mesh)
+
+    def cache_specs(self, mesh, batch: int, cache_len: int):
+        return tree_specs(self.cache_plan(batch, cache_len), mesh)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return L.abstract_params(self.plan, dtype)
+
+    def abstract_cache(self, batch: int, cache_len: int, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.dtype)
+        cp = self.cache_plan(batch, cache_len)
+        return jax.tree.map(
+            lambda pd: jax.ShapeDtypeStruct(
+                tuple(pd.shape),
+                jnp.int32 if pd.shape == () else
+                (jnp.float32 if pd.spec and "ssm_heads" in pd.spec and len(pd.shape) == 5
+                 else dtype)),
+            cp, is_leaf=lambda x: isinstance(x, L.ParamDef))
+
+    # -------------------------------------------------------------- inputs
+    def input_specs(self, shape: InputShape, mesh=None) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        elif shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        else:  # decode: ONE new token against a seq_len-sized cache
+            specs = {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        if cfg.has_encoder and shape.kind != "decode":
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), dt)
+        return specs
+
+    def input_shardings(self, shape: InputShape, mesh):
+        specs = self.input_specs(shape)
+        out = {}
+        for name, sds in specs.items():
+            logical = ("batch",) + (None,) * (len(sds.shape) - 1)
+            out[name] = resolve_spec(logical, sds.shape, mesh)
+        return out
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif fam == "ssm":
+        mod = ssm
+    elif fam == "hybrid":
+        mod = hybrid
+    elif fam == "audio":
+        mod = encdec
+    else:
+        raise ValueError(fam)
+
+    if fam == "audio":
+        def forward(params, batch, remat=False):
+            return encdec.forward(params, cfg, batch["tokens"],
+                                  batch["enc_embeds"], remat=remat)
+
+        def prefill(params, batch, cache_len):
+            return encdec.prefill(params, cfg, batch["tokens"], cache_len,
+                                  batch["enc_embeds"])
+    else:
+        def forward(params, batch, remat=False):
+            return mod.forward(params, cfg, batch["tokens"], remat=remat)
+
+        def prefill(params, batch, cache_len):
+            return mod.prefill(params, cfg, batch["tokens"], cache_len)
+
+    return ModelAPI(
+        cfg=cfg,
+        plan=mod.plan(cfg),
+        init=lambda key, dtype=jnp.float32: mod.init(key, cfg, dtype),
+        forward=forward,
+        prefill=prefill,
+        decode_step=lambda params, token, cache: mod.decode_step(
+            params, cfg, token, cache),
+        cache_plan=lambda batch, cache_len: mod.cache_plan(cfg, batch, cache_len),
+        init_cache=lambda batch, cache_len, dtype=None: mod.init_cache(
+            cfg, batch, cache_len, dtype),
+    )

@@ -1,0 +1,220 @@
+"""Mamba2 (SSD — state-space duality) decoder, attention-free.
+
+The SSD scan itself lives in ``repro.kernels`` (Pallas TPU kernel + chunked
+jnp fallback); this module provides the block plumbing: gated in-projection,
+shared causal depthwise conv over (x, B, C), dt softplus, gated RMSNorm and
+out-projection — plus the recurrent decode path that makes `long_500k`
+native (O(1) state, no KV cache).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.layers import ParamDef
+
+
+# --------------------------------------------------------------------------
+# plans
+# --------------------------------------------------------------------------
+def mamba_layer_plan(cfg) -> dict:
+    d, di, n, h, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv_width)
+    return {
+        "norm": L.norm_plan(d, cfg.norm),
+        "wz": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, n), ("embed", None)),
+        "wC": ParamDef((d, n), ("embed", None)),
+        "wdt": ParamDef((d, h), ("embed", "ssm_heads")),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), "zeros"),
+        "A_log": ParamDef((h,), ("ssm_heads",), "zeros"),     # A = -exp(A_log)
+        "D": ParamDef((h,), ("ssm_heads",), "ones"),
+        "conv_x": ParamDef((w, di), (None, "ssm_inner"), std=0.2),
+        "conv_B": ParamDef((w, n), (None, None), std=0.2),
+        "conv_C": ParamDef((w, n), (None, None), std=0.2),
+        "gate_norm": {"scale": ParamDef((di,), ("ssm_inner",), "ones")},
+        "wo": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def plan(cfg) -> dict:
+    return {
+        "embed": L.embed_plan(cfg),
+        "layers": L.stack_plan(mamba_layer_plan(cfg), cfg.num_layers),
+        "final_norm": L.norm_plan(cfg.d_model, cfg.norm),
+    }
+
+
+def init(key, cfg, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": L.init_from_plan(k1, L.embed_plan(cfg), dtype),
+        "layers": L.init_stacked(k2, mamba_layer_plan(cfg), cfg.num_layers, dtype),
+        "final_norm": L.init_from_plan(k3, L.norm_plan(cfg.d_model, cfg.norm), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# block internals
+# --------------------------------------------------------------------------
+def _causal_conv(x, w):
+    """x: (B, Lpad..., C) depthwise causal; w: (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out
+
+
+def _proj_in(lp, cfg, xin):
+    dt_f = xin.astype(jnp.float32)
+    z = jnp.einsum("...d,de->...e", xin, lp["wz"].astype(xin.dtype))
+    xr = jnp.einsum("...d,de->...e", xin, lp["wx"].astype(xin.dtype))
+    bc = jnp.einsum("...d,dn->...n", xin, lp["wB"].astype(xin.dtype))
+    cc = jnp.einsum("...d,dn->...n", xin, lp["wC"].astype(xin.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dh->...h", dt_f, lp["wdt"].astype(jnp.float32))
+        + lp["dt_bias"].astype(jnp.float32))
+    return z, xr, bc, cc, dt
+
+
+def _gate_out(lp, cfg, y, z, dtype):
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, -1, keepdims=True) + 1e-5)
+    g = (g * lp["gate_norm"]["scale"].astype(jnp.float32)).astype(dtype)
+    return jnp.einsum("...e,ed->...d", g, lp["wo"].astype(dtype))
+
+
+def mamba_block(lp, cfg, h, *, backend=None) -> Tuple[jax.Array, Tuple]:
+    """Full-sequence mamba2 block. h: (B,S,d).
+
+    Returns (h_out, (ssm_state (B,H,N,P), conv_tail (B,W-1,di+2N))).
+    """
+    b, s, d = h.shape
+    di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+    xin = L.apply_norm(lp["norm"], h, cfg.norm)
+    z, xr, bc, cc, dt = _proj_in(lp, cfg, xin)
+
+    xbc = jnp.concatenate([xr, bc, cc], axis=-1)                # (B,S,di+2N)
+    conv_tail = xbc[:, max(0, s - (w - 1)):, :]
+    if s < w - 1:                                               # degenerate tiny-seq
+        conv_tail = jnp.pad(xbc, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    conv_w = jnp.concatenate(
+        [lp["conv_x"], lp["conv_B"], lp["conv_C"]], axis=-1).astype(h.dtype)
+    xbc = jax.nn.silu(_causal_conv(xbc, conv_w).astype(jnp.float32)).astype(h.dtype)
+    xr, bc, cc = jnp.split(xbc, [di, di + n], axis=-1)
+
+    x4 = xr.reshape(b, s, nh, p)
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, state = ops.ssd(x4, dt, a, bc, cc, chunk=cfg.ssm_chunk, backend=backend)
+    y = y + x4 * lp["D"].astype(y.dtype)[None, None, :, None]
+    out = _gate_out(lp, cfg, y.reshape(b, s, di), z, h.dtype)
+    return h + out, (state, conv_tail)
+
+
+def mamba_block_decode(lp, cfg, h, ssm_state, conv_buf) -> Tuple[jax.Array, Tuple]:
+    """Single-token recurrent step. h: (B,d); state (B,H,N,P);
+    conv_buf: (B, W-1, di+2N) raw (pre-conv) inputs."""
+    b, d = h.shape
+    di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xin = L.apply_norm(lp["norm"], h, cfg.norm)
+    z, xr, bc, cc, dt = _proj_in(lp, cfg, xin)
+
+    xbc_new = jnp.concatenate([xr, bc, cc], axis=-1)            # (B, di+2N)
+    window = jnp.concatenate([conv_buf, xbc_new[:, None, :]], axis=1)
+    conv_w = jnp.concatenate(
+        [lp["conv_x"], lp["conv_B"], lp["conv_C"]], axis=-1).astype(h.dtype)
+    conv_out = (window * conv_w[None]).sum(axis=1)
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(h.dtype)
+    xr, bc, cc = jnp.split(xbc, [di, di + n], axis=-1)
+
+    x4 = xr.reshape(b, nh, p)
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, state = ops.ssd_decode(x4, dt, a, bc, cc, ssm_state)
+    y = y + x4 * lp["D"].astype(y.dtype)[None, :, None]
+    out = _gate_out(lp, cfg, y.reshape(b, di), z, h.dtype)
+    return h + out, (state, window[:, 1:, :])
+
+
+# --------------------------------------------------------------------------
+# model-level API
+# --------------------------------------------------------------------------
+def forward(params, cfg, tokens, *, remat: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+
+    from repro.utils.sharding import maybe_constrain
+
+    def body(carry, lp):
+        y, _ = mamba_block(lp, cfg, carry)
+        y = maybe_constrain(y, "batch", None, "act_embed")
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    aux = {"load_balance_loss": jnp.float32(0.0),
+           "dropped_fraction": jnp.float32(0.0)}
+    return logits, aux
+
+
+def cache_plan(cfg, batch: int, cache_len: int) -> dict:
+    nlayer = cfg.num_layers
+    di, n, nh, p, w = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_head_dim, cfg.ssm_conv_width)
+    return {
+        "ssm": ParamDef((nlayer, batch, nh, n, p),
+                        ("stack", "batch", "ssm_heads", None, None), "zeros"),
+        "conv": ParamDef((nlayer, batch, w - 1, di + 2 * n),
+                         ("stack", "batch", None, None), "zeros"),
+        "pos": ParamDef((), None, "zeros"),
+    }
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cp = cache_plan(cfg, batch, cache_len)
+    return {
+        "ssm": jnp.zeros(cp["ssm"].shape, jnp.float32),
+        "conv": jnp.zeros(cp["conv"].shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, cache_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+
+    def body(carry, lp):
+        y, (state, conv_tail) = mamba_block(lp, cfg, carry)
+        return y, (state, conv_tail)
+
+    x, (states, convs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x[:, -1], cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"ssm": states, "conv": convs, "pos": jnp.int32(s)}
+
+
+def decode_step(params, cfg, token, cache):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], token, dtype)           # (B, d)
+
+    def body(carry, xs):
+        lp, state, conv = xs
+        y, (state, conv) = mamba_block_decode(lp, cfg, carry, state, conv)
+        return y, (state, conv)
+
+    x, (states, convs) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssm"], cache["conv"]))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"ssm": states, "conv": convs, "pos": cache["pos"] + 1}

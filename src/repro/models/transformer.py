@@ -1,0 +1,199 @@
+"""Dense / MoE / early-fusion-VLM decoder-only transformer.
+
+One code path serves olmo-1b, yi-9b, qwen2-0.5b, deepseek-7b (dense),
+phi3.5-moe + granite-moe (``cfg.num_experts > 0``) and chameleon-34b
+(early-fusion: VQ image tokens share the vocab, so the backbone is identical).
+
+Layers are ``jax.lax.scan``-ned over stacked params: HLO size and compile
+time are depth-independent.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import apply_moe, moe_plan
+
+
+# --------------------------------------------------------------------------
+# plans
+# --------------------------------------------------------------------------
+def layer_plan(cfg) -> dict:
+    p = {
+        "ln1": L.norm_plan(cfg.d_model, cfg.norm),
+        "attn": L.attn_plan(cfg),
+        "ln2": L.norm_plan(cfg.d_model, cfg.norm),
+    }
+    if cfg.num_experts:
+        p["moe"] = moe_plan(cfg)
+    else:
+        p["mlp"] = L.mlp_plan(cfg)
+    return p
+
+
+def plan(cfg) -> dict:
+    return {
+        "embed": L.embed_plan(cfg),
+        "layers": L.stack_plan(layer_plan(cfg), cfg.num_layers),
+        "final_norm": L.norm_plan(cfg.d_model, cfg.norm),
+    }
+
+
+def init(key, cfg, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": L.init_from_plan(k1, L.embed_plan(cfg), dtype),
+        "layers": L.init_stacked(k2, layer_plan(cfg), cfg.num_layers, dtype),
+        "final_norm": L.init_from_plan(k3, L.norm_plan(cfg.d_model, cfg.norm), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (training / prefill compute)
+# --------------------------------------------------------------------------
+def _block(cfg, lp, x, positions, window: int):
+    h = L.apply_norm(lp["ln1"], x, cfg.norm)
+    q, k, v = L.attn_qkv(lp["attn"], cfg, h, positions)
+    attn = L.cp_attention(cfg, q, k, v, causal=True, window=window)
+    x = x + L.attn_out(lp["attn"], x.dtype, attn)
+
+    h = L.apply_norm(lp["ln2"], x, cfg.norm)
+    if cfg.num_experts:
+        y, aux = apply_moe(lp["moe"], cfg, h)
+    else:
+        y, aux = L.apply_mlp(lp["mlp"], h), {"load_balance_loss": jnp.float32(0.0),
+                                             "dropped_fraction": jnp.float32(0.0)}
+    return x + y, aux
+
+
+def forward(params, cfg, tokens, *, remat: bool = False) -> Tuple[jax.Array, dict]:
+    """tokens: (B, S) int32 -> logits (B, S, V) plus aux losses."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    window = cfg.sliding_window
+
+    from repro.utils.sharding import maybe_constrain
+
+    def body(carry, lp):
+        y, aux = _block(cfg, lp, carry, positions, window)
+        # Megatron-SP style: the remat-saved per-layer carry is sharded on
+        # d_model; XLA inserts AG/RS around the attention/mlp einsums.
+        y = maybe_constrain(y, "batch", None, "act_embed")
+        return y, aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, auxes = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    aux = jax.tree.map(jnp.mean, auxes)
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# KV-cache serving
+# --------------------------------------------------------------------------
+def cache_plan(cfg, batch: int, cache_len: int) -> dict:
+    lcfg = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+    spec = L.kv_cache_spec(cfg)
+    return {
+        "k": L.ParamDef(lcfg, spec, "zeros"),
+        "v": L.ParamDef(lcfg, spec, "zeros"),
+        "pos": L.ParamDef((), None, "zeros"),
+    }
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cp = cache_plan(cfg, batch, cache_len)
+    return {
+        "k": jnp.zeros(cp["k"].shape, dtype),
+        "v": jnp.zeros(cp["v"].shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, cache_len: int):
+    """Run the prompt through the model, building a fresh KV cache.
+
+    Returns logits of the *last* position (B, V) and the cache.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    positions = jnp.arange(s)[None, :]
+    window = cfg.sliding_window
+
+    def body(carry, lp):
+        h = L.apply_norm(lp["ln1"], carry, cfg.norm)
+        q, k, v = L.attn_qkv(lp["attn"], cfg, h, positions)
+        attn = L.cp_attention(cfg, q, k, v, causal=True, window=window)
+        x1 = carry + L.attn_out(lp["attn"], carry.dtype, attn)
+        h2 = L.apply_norm(lp["ln2"], x1, cfg.norm)
+        if cfg.num_experts:
+            y, _ = apply_moe(lp["moe"], cfg, h2)
+        else:
+            y = L.apply_mlp(lp["mlp"], h2)
+        # write last ``cache_len`` keys into the (possibly ring) cache
+        if s <= cache_len:
+            k_out = jnp.zeros((b, cache_len) + k.shape[2:], k.dtype).at[:, :s].set(k)
+            v_out = jnp.zeros((b, cache_len) + v.shape[2:], v.dtype).at[:, :s].set(v)
+        else:  # sliding-window cache smaller than prompt: keep the tail
+            k_out, v_out = k[:, s - cache_len:], v[:, s - cache_len:]
+        return x1 + y, (k_out, v_out)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x[:, -1], cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    new_cache = {"k": ks, "v": vs, "pos": jnp.int32(s)}
+    return logits, new_cache
+
+
+def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
+    """token: (B,) int32; one autoregressive step against the KV cache.
+
+    The cache is threaded through the layer scan as CARRY and updated with
+    dynamic_update_slice at the layer index — a scan-over-(xs -> ys) cache
+    double-buffers (measured +2x cache HBM on deepseek decode_32k); the
+    carried buffer updates in place and aliases with the donated input.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params["embed"], token, dtype)          # (B, d)
+    pos = cache["pos"]
+    cache_len = cache["k"].shape[2]
+    positions = jnp.broadcast_to(pos, token.shape)
+    slot = jnp.where(cache_len > 0, pos % cache_len, 0)
+    valid = jnp.minimum(pos + 1, cache_len)
+
+    def body(carry, xs):
+        h0, kfull, vfull = carry
+        lp, idx = xs
+        h = L.apply_norm(lp["ln1"], h0, cfg.norm)
+        q, k, v = L.attn_qkv(lp["attn"], cfg, h[:, None, :], positions[:, None])
+        q = L.constrain_q_decode(cfg, q[:, 0])                 # (B, H, hd)
+        kc = jax.lax.dynamic_slice_in_dim(kfull, idx, 1, axis=0)[0]
+        vc = jax.lax.dynamic_slice_in_dim(vfull, idx, 1, axis=0)[0]
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        attn = L.decode_attention(q, kc, vc, valid, window=cfg.sliding_window)
+        x1 = h0 + L.attn_out(lp["attn"], h0.dtype, attn)
+        h2 = L.apply_norm(lp["ln2"], x1, cfg.norm)
+        if cfg.num_experts:
+            y, _ = apply_moe(lp["moe"], cfg, h2)
+        else:
+            y = L.apply_mlp(lp["mlp"], h2)
+        kfull = jax.lax.dynamic_update_slice_in_dim(kfull, kc[None], idx, axis=0)
+        vfull = jax.lax.dynamic_update_slice_in_dim(vfull, vc[None], idx, axis=0)
+        return (x1 + y, kfull, vfull), None
+
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(cfg.num_layers)))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}

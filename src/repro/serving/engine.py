@@ -1,0 +1,100 @@
+"""Batched inference engine — the data plane under the D-STACK scheduler.
+
+One engine instance wraps one (model, sub-mesh) pair: jitted prefill and
+decode executables, a KV/state cache, and greedy generation. On a real pod
+the scheduler holds one engine per (model, chip-allocation) — this is the
+TPU analogue of the paper's CUDA-MPS process with a fixed GPU% (§3.2): the
+compiled executable pins the spatial allocation, and re-allocation means
+switching to a standby engine compiled for a different sub-mesh while the
+active one keeps serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelAPI
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+
+
+class InferenceEngine:
+    def __init__(self, api: ModelAPI, params, *, cache_len: int = 256,
+                 mesh=None, donate_cache: bool = True):
+        self.api = api
+        self.cfg = api.cfg
+        self.params = params
+        self.cache_len = cache_len
+        self.mesh = mesh
+        self.stats = EngineStats()
+
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            pspecs = api.param_specs(mesh)
+            self._param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+        else:
+            self._param_sh = None
+
+        self._prefill = jax.jit(
+            lambda p, batch: api.prefill(p, batch, cache_len),
+            static_argnums=())
+        donate = (2,) if donate_cache else ()
+        self._decode = jax.jit(
+            lambda p, tok, cache: api.decode_step(p, tok, cache),
+            donate_argnums=donate)
+
+    # ------------------------------------------------------------------
+    def new_cache(self, batch: int, cache_len: Optional[int] = None):
+        return self.api.init_cache(batch, cache_len or self.cache_len)
+
+    def prefill(self, batch: Dict[str, Any], cache_len: Optional[int] = None):
+        if cache_len is not None and cache_len != self.cache_len:
+            logits, cache = jax.jit(
+                lambda p, b: self.api.prefill(p, b, cache_len))(
+                    self.params, batch)
+        else:
+            logits, cache = self._prefill(self.params, batch)
+        self.stats.prefills += 1
+        return logits, cache
+
+    def decode(self, token, cache):
+        logits, cache = self._decode(self.params, token, cache)
+        self.stats.decode_steps += 1
+        return logits, cache
+
+    # ------------------------------------------------------------------
+    def generate(self, batch: Dict[str, Any], max_new_tokens: int,
+                 greedy: bool = True, rng: Optional[jax.Array] = None):
+        """Prefill + autoregressive decode. Returns (B, max_new_tokens)."""
+        b = batch["tokens"].shape[0]
+        need = batch["tokens"].shape[1] + max_new_tokens
+        logits, cache = self.prefill(batch, max(self.cache_len, need))
+        outs = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(max_new_tokens):
+            outs.append(tok)
+            logits, cache = self.decode(tok, cache)
+            if greedy:
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            else:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+        self.stats.tokens_out += b * max_new_tokens
+        return jnp.stack(outs, axis=1)
+
+
+def make_engine(cfg, *, seed: int = 0, cache_len: int = 256,
+                dtype=jnp.float32) -> InferenceEngine:
+    """Convenience constructor used by examples/tests (CPU scale)."""
+    from repro.models.registry import build_model
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed), dtype)
+    return InferenceEngine(api, params, cache_len=cache_len)

@@ -1,0 +1,35 @@
+"""Modality frontend STUBS (the one sanctioned carve-out).
+
+Audio: instead of mel-spectrogram + conv encoder, ``audio_frames`` emits
+frame embeddings of shape (B, encoder_seq, d_model). VLM: instead of a
+VQ-GAN tokenizer, ``image_tokens`` emits VQ code ids inside the shared
+vocab. Both are deterministic in their seed so tests are reproducible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frames(cfg, batch: int, seed: int = 0, dtype=None):
+    """Precomputed frame embeddings standing in for the conv frontend."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(
+        key, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+    ).astype(dtype) * 0.02
+
+
+def image_tokens(cfg, batch: int, n_tokens: int = 1024, seed: int = 0,
+                 code_offset: int = None):
+    """VQ image-token ids; chameleon reserves the top 8192 codes."""
+    if code_offset is None:
+        code_offset = max(0, cfg.vocab_size - 8192)
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(
+        key, (batch, n_tokens), code_offset, cfg.vocab_size, jnp.int32)
+
+
+def interleave_multimodal(cfg, text_tokens, img_tokens):
+    """Chameleon-style early fusion: [img tokens][text tokens]."""
+    return jnp.concatenate([img_tokens, text_tokens], axis=1)

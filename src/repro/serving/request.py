@@ -1,0 +1,100 @@
+"""Inference requests and SLO-aware batch assembly.
+
+Mirrors the paper's workload model (§5/§7): requests arrive for a named
+model at some rate; the batcher assembles up to ``batch_size`` requests, and
+the scheduler must finish ``assembly + inference`` within the SLO (paper
+Eq. 11), keeping inference itself under SLO/2 (Eq. 12).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(order=True)
+class Request:
+    arrival: float
+    rid: int = dataclasses.field(compare=False)
+    model: str = dataclasses.field(compare=False)
+    slo: float = dataclasses.field(compare=False)          # seconds
+    n_tokens: int = dataclasses.field(compare=False, default=1)
+
+    @property
+    def deadline(self) -> float:
+        return self.arrival + self.slo
+
+
+class RequestQueue:
+    """Per-model FIFO with SLO accounting."""
+
+    def __init__(self, model: str, slo: float):
+        self.model = model
+        self.slo = slo
+        self._q: List[Request] = []
+        self.completed = 0
+        self.violated = 0
+        self.dropped = 0
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._q, req)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def oldest_deadline(self, default: float = float("inf")) -> float:
+        return self._q[0].deadline if self._q else default
+
+    def pop_batch(self, max_batch: int, now: float,
+                  drop_expired: bool = True) -> List[Request]:
+        """Pop up to ``max_batch`` requests; count already-expired as violations."""
+        batch: List[Request] = []
+        while self._q and len(batch) < max_batch:
+            req = heapq.heappop(self._q)
+            if drop_expired and req.deadline < now:
+                self.dropped += 1
+                self.violated += 1
+                continue
+            batch.append(req)
+        return batch
+
+    def complete(self, batch: List[Request], finish_time: float) -> None:
+        for req in batch:
+            self.completed += 1
+            if finish_time > req.deadline:
+                self.violated += 1
+
+
+class RequestGenerator:
+    """Deterministic arrival stream (uniform-jittered, like the paper §6.3)."""
+
+    def __init__(self, model: str, rate_per_s: float, slo: float, seed: int = 0):
+        import numpy as np
+        self.model = model
+        self.rate = rate_per_s
+        self.slo = slo
+        self._rng = np.random.default_rng(seed)
+        self._next_id = 0
+        self._t = 0.0
+
+    def until(self, t_end: float) -> List[Request]:
+        """All requests arriving in [current position, t_end)."""
+        out: List[Request] = []
+        if self.rate <= 0:
+            self._t = t_end
+            return out
+        mean_gap = 1.0 / self.rate
+        while True:
+            # uniformly-distributed inter-arrival in [0.5, 1.5]·mean (paper §6.3)
+            gap = mean_gap * self._rng.uniform(0.5, 1.5)
+            if self._t + gap >= t_end:
+                self._t = t_end
+                break
+            self._t += gap
+            out.append(Request(arrival=self._t, rid=self._next_id,
+                               model=self.model, slo=self.slo))
+            self._next_id += 1
+        return out
+
+    def set_rate(self, rate_per_s: float) -> None:
+        self.rate = rate_per_s

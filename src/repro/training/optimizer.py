@@ -1,0 +1,65 @@
+"""AdamW in pure JAX (no optax in this environment)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    max_grad_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def schedule(self, step) -> jax.Array:
+        warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(1, self.total_steps - self.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (0.1 + 0.9 * cos)
+
+    def update(self, grads, state: AdamWState, params):
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)) + 1e-12)
+        scale = jnp.minimum(1.0, self.max_grad_norm / gnorm)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        step = state.step + 1
+        lr = self.schedule(state.step)
+        m = jax.tree.map(lambda mm, g: self.b1 * mm + (1 - self.b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g,
+                         state.v, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            if p.ndim >= 2:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v), {"grad_norm": gnorm, "lr": lr}

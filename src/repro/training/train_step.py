@@ -1,0 +1,66 @@
+"""Training step: causal LM loss + MoE aux loss, remat'd scanned layers."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelAPI
+from repro.training.optimizer import AdamW, AdamWState
+
+
+def _chunked_ce(logits, labels, n_chunks: int = 16):
+    """Cross-entropy with the fp32 softmax materialized one sequence-chunk
+    at a time (checkpointed) — avoids 4 full fp32 (B,S,V) buffers."""
+    b, s, v = logits.shape
+    while s % n_chunks:
+        n_chunks //= 2
+    cs = s // n_chunks
+
+    @jax.checkpoint
+    def chunk(args):
+        lg, lb = args                                # (B, cs, V), (B, cs)
+        logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        return (nll * mask).sum(), mask.sum()
+
+    # chunk the SEQUENCE axis only — batch/vocab shardings stay intact
+    nll_sum, cnt = jax.lax.map(
+        chunk, (logits.reshape(b, n_chunks, cs, v).swapaxes(0, 1),
+                labels.reshape(b, n_chunks, cs).swapaxes(0, 1)))
+    return nll_sum.sum() / jnp.maximum(cnt.sum(), 1.0)
+
+
+def lm_loss(api: ModelAPI, params, batch, *, remat: bool = True,
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict]:
+    logits, aux = api.forward(params, batch, remat=remat)
+    loss = _chunked_ce(logits, batch["labels"])
+    total = loss + aux_weight * aux["load_balance_loss"]
+    metrics = {"loss": loss, "aux_loss": aux["load_balance_loss"],
+               "dropped_fraction": aux["dropped_fraction"]}
+    return total, metrics
+
+
+def make_train_step(api: ModelAPI, opt: AdamW, *, remat: bool = True,
+                    aux_weight: float = 0.01):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(api, p, batch, remat=remat, aux_weight=aux_weight),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(api: ModelAPI):
+    def eval_step(params, batch):
+        _, metrics = lm_loss(api, params, batch, remat=False)
+        return metrics
+    return eval_step

@@ -1,0 +1,108 @@
+"""Logical-axis → mesh-axis sharding rules with divisibility fallback.
+
+Params declare *logical* axes (e.g. ``("vocab", "embed")``); a rule table maps
+logical axes to mesh axes. A logical axis only shards if the tensor dim is
+divisible by the mesh axis size — otherwise it silently falls back to
+replication (needed for e.g. qwen2's 14 heads or whisper's 51865 vocab on a
+16-way ``model`` axis).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# default logical → mesh-axis rules ("model" = tensor-parallel axis)
+DEFAULT_RULES = {
+    "batch": ("data",),          # expanded to ("pod","data") on multi-pod meshes
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),      # fallback when head count is non-divisible
+    "kv_seq": ("model",),        # sequence-sharded KV cache (GQA fallback)
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "embed": (),
+    "act_embed": ("model",),     # Megatron-SP: shard *activation* d_model
+    "stack": (),                 # scanned layer dim — never sharded
+    None: (),
+}
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry the global batch."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def resolve_spec(
+    logical: Optional[Sequence[Optional[str]]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[dict] = None,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for ``mesh``."""
+    if logical is None:
+        return P()
+    rules = rules or DEFAULT_RULES
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        axes = rules.get(name, ())
+        if name == "batch":
+            axes = batch_axes(mesh)
+        picked: Tuple[str, ...] = ()
+        size = 1
+        for ax in axes:
+            if ax in mesh.axis_names and ax not in used:
+                size *= mesh.shape[ax]
+                picked += (ax,)
+        if picked and size and dim % size == 0:
+            used.update(picked)
+            out.append(picked if len(picked) > 1 else picked[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_specs(plan_tree, mesh: Mesh) -> "jax.tree_util.PyTreeDef":
+    """Map a tree of ParamDef → tree of PartitionSpec (see models.layers)."""
+    return jax.tree.map(
+        lambda pd: resolve_spec(pd.spec, pd.shape, mesh),
+        plan_tree,
+        is_leaf=lambda x: hasattr(x, "spec") and hasattr(x, "shape"),
+    )
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def constrain(x, mesh: Mesh, *logical: Optional[str]):
+    """with_sharding_constraint via logical names (inside jit under mesh)."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve_spec(logical, x.shape, mesh))
+    )
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The mesh from the enclosing ``with mesh:`` context, if any."""
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # noqa: BLE001 — jax internals may move
+        return None
+
+
+def maybe_constrain(x, *logical: Optional[str]):
+    """Sharding constraint iff compiling under a mesh context (the dry-run
+    / production path); no-op for single-device smoke tests."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    return constrain(x, mesh, *logical)

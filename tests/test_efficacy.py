@@ -1,0 +1,73 @@
+"""Efficacy metric + optimal (batch, chips) search (paper §5, Eqs. 7-12)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.efficacy import (BATCH_LEVELS, OperatingPoint, efficacy,
+                                 efficacy_surface, feasible, optimize)
+from repro.core.latency_model import CHIP_LEVELS, LatencyModel
+
+
+@pytest.fixture(scope="module")
+def lm():
+    return LatencyModel(get_config("olmo-1b"), mode="prefill", seq=128)
+
+
+def test_efficacy_formula():
+    assert efficacy(16, 0.01, 0.25) == pytest.approx(16 / (0.01 ** 2 * 0.25))
+    assert efficacy(1, 0.0, 0.5) == 0.0
+
+
+def test_feasibility_constraints():
+    # Eq. 12: latency must be <= SLO/2
+    assert not feasible(latency=0.03, batch=1, slo=0.05, request_rate=1e9)
+    # Eq. 11: assembly + latency <= SLO
+    assert not feasible(latency=0.01, batch=100, slo=0.05, request_rate=1000)
+    assert feasible(latency=0.01, batch=10, slo=0.05, request_rate=1000)
+
+
+def test_optimize_respects_constraints(lm):
+    pt = optimize(lm, slo=0.05, request_rate=500)
+    assert pt.feasible
+    assert pt.latency <= 0.025 + 1e-12
+    assert pt.latency + pt.batch / 500 <= 0.05 + 1e-12
+
+
+def test_optimize_is_exhaustive_maximum(lm):
+    """Brute-force over the same lattice must agree."""
+    slo, rate = 0.05, 500
+    pt = optimize(lm, slo=slo, request_rate=rate)
+    best = 0.0
+    for b in BATCH_LEVELS:
+        for c in CHIP_LEVELS:
+            lat = lm.latency(c, b)
+            if not np.isfinite(lat):
+                continue
+            if feasible(lat, b, slo, rate) and b / lat >= rate:
+                best = max(best, efficacy(b, lat, c / 256))
+    assert pt.efficacy == pytest.approx(best)
+
+
+def test_optimize_infeasible_falls_back():
+    lmc = LatencyModel(get_config("chameleon-34b"), mode="prefill", seq=128)
+    pt = optimize(lmc, slo=0.0005, request_rate=100)   # 0.5ms SLO: impossible
+    assert not pt.feasible
+
+
+def test_efficacy_surface_interior_maximum(lm):
+    """Paper Fig. 7: very low batch and very high batch are both worse than
+    the middle at a fixed moderate allocation."""
+    grid = efficacy_surface(lm)
+    j = CHIP_LEVELS.index(64)
+    col = grid[:, j]
+    peak = int(np.argmax(col))
+    assert col[peak] > col[0] or col[peak] > col[-1]
+
+
+def test_sustainability_preference():
+    lmq = LatencyModel(get_config("qwen2-0.5b"), mode="prefill", seq=128)
+    hi = optimize(lmq, slo=0.025, request_rate=8000)
+    lo = optimize(lmq, slo=0.025, request_rate=50)
+    # at high rate the chosen point must actually sustain the load
+    assert hi.batch / hi.latency >= 8000 * 0.99
+    assert hi.chips >= lo.chips or hi.batch >= lo.batch

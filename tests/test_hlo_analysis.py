@@ -1,0 +1,55 @@
+"""Collective-bytes HLO parser — synthetic lines + a real lowered module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.hlo_analysis import (collective_stats, cost_summary,
+                                       memory_summary)
+
+SYNTHETIC = """
+  %ar = bf16[8,2048]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[16,512]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[4,128]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = (bf16[2,64]{1,0}, bf16[2,64]{1,0}) all-to-all(%p, %q)
+  %cp = u32[32]{0} collective-permute(%w)
+  %ard = bf16[8,2048]{1,0} all-reduce-done(%h)
+"""
+
+
+def test_synthetic_parse():
+    st = collective_stats(SYNTHETIC)
+    assert st.bytes_by_kind["all-reduce"] == 8 * 2048 * 2
+    assert st.bytes_by_kind["all-gather"] == 16 * 512 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 4 * 128 * 4
+    assert st.bytes_by_kind["all-to-all"] == 2 * (2 * 64 * 2)
+    assert st.bytes_by_kind["collective-permute"] == 32 * 4
+    assert st.count_by_kind["all-reduce"] == 1   # -done not double counted
+
+
+def test_compiled_hlo_format_variants():
+    """Formats that appear in real compiled.as_text() output (post-SPMD):
+    ROOT prefix, typed operands, channel ids, async -start/-done pairs."""
+    real = """
+  ROOT %all-reduce.77 = bf16[16,896]{1,0} all-reduce(bf16[16,896]{1,0} %add.3), channel_id=5, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%region_1.2
+  %all-gather-start.2 = f32[304,896]{1,0} all-gather-start(f32[19,896]{1,0} %p), channel_id=7, dimensions={0}
+  %all-gather-done.2 = f32[304,896]{1,0} all-gather-done(f32[304,896]{1,0} %all-gather-start.2)
+  %all-to-all.9 = (bf16[8,64]{1,0}, bf16[8,64]{1,0}) all-to-all(bf16[8,64]{1,0} %a, bf16[8,64]{1,0} %b), replica_groups={}
+"""
+    st = collective_stats(real)
+    assert st.count_by_kind["all-reduce"] == 1
+    assert st.bytes_by_kind["all-reduce"] == 16 * 896 * 2
+    assert st.count_by_kind["all-gather"] == 1          # -done skipped
+    assert st.bytes_by_kind["all-gather"] == 304 * 896 * 4
+    assert st.bytes_by_kind["all-to-all"] == 2 * 8 * 64 * 2
+
+
+def test_cost_and_memory_summaries():
+    f = jax.jit(lambda a, b: a @ b)
+    compiled = f.lower(jnp.ones((64, 64)), jnp.ones((64, 64))).compile()
+    cost = cost_summary(compiled)
+    assert cost["flops"] >= 2 * 64 ** 3 * 0.9
+    mem = memory_summary(compiled)
+    assert mem["argument_size_in_bytes"] >= 2 * 64 * 64 * 4
+    assert mem["output_size_in_bytes"] >= 64 * 64 * 4

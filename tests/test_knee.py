@@ -1,0 +1,67 @@
+"""The paper's analytical parallelism model (§4.3) + knee finding."""
+import numpy as np
+import pytest
+
+from repro.core.knee import AnalyticalDNN, knee_binary_search, knee_of_latency
+
+
+def test_execution_time_monotone_nonincreasing():
+    m = AnalyticalDNN(p=40)
+    s = np.arange(1, 81)
+    et = m.execution_time(s)
+    assert np.all(np.diff(et) <= 1e-9)
+
+
+def test_latency_explodes_at_low_allocation():
+    """Paper Fig. 2: fewer-than-necessary units => sharp latency increase."""
+    m = AnalyticalDNN(p=40)
+    assert m.execution_time(1) > 5 * m.execution_time(20)
+
+
+def test_latency_flattens_beyond_parallelism():
+    m = AnalyticalDNN(p=20)
+    # beyond N_1 = p·b, no kernel can use more units
+    assert m.execution_time(20) == pytest.approx(m.execution_time(80))
+
+
+def test_derivative_maximum_is_interior_and_ordered():
+    """Paper Fig. 4b: derivative maxima at ~9/24/31 for N1=20/40/60 —
+    larger inherent parallelism => knee at more units."""
+    s = np.arange(1, 81)
+    maxima = []
+    for p in (20, 40, 60):
+        m = AnalyticalDNN(p=p, mem_bw_per_unit=50.0, data_per_kernel=100.0)
+        d = m.derivative_curve(s)
+        maxima.append(int(s[np.argmax(d)]))
+    assert maxima[0] < maxima[1] < maxima[2]
+    assert all(1 < k < 80 for k in maxima)
+
+
+def test_utility_knee_below_max_parallelism():
+    m = AnalyticalDNN(p=40)
+    knee = m.knee(s_max=80)
+    assert 1 <= knee <= 40
+
+
+def test_batch_increases_knee():
+    """Paper Fig. 4c/d: bigger batch => knee at larger allocation."""
+    knees = [AnalyticalDNN(p=10, b=b).knee(s_max=128) for b in (1, 2, 4)]
+    assert knees[0] <= knees[1] <= knees[2]
+    assert knees[2] > knees[0]
+
+
+def test_knee_of_latency_tolerance():
+    lat = lambda f: 1.0 / f + 0.1          # saturating curve
+    fr = [0.1, 0.2, 0.4, 0.8, 1.0]
+    knee = knee_of_latency(lat, fr, rel_tol=10.0)   # huge tol → smallest
+    assert knee == 0.1
+    knee = knee_of_latency(lat, fr, rel_tol=0.0001)
+    assert knee == 1.0
+
+
+def test_binary_search_matches_linear_scan():
+    lat = lambda f: 1.0 / f + 0.5
+    fr = [i / 16 for i in range(1, 17)]
+    a = knee_of_latency(lat, fr, rel_tol=0.05)
+    b = knee_binary_search(lat, fr, rel_tol=0.05)
+    assert abs(a - b) <= 1 / 16 + 1e-9

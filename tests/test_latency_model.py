@@ -1,0 +1,98 @@
+"""Roofline latency model f_L(chips, batch) properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, get_config
+from repro.core.latency_model import (CHIP_LEVELS, CostOverride, LatencyModel)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mode", ["prefill", "decode"])
+def test_latency_weakly_decreasing_in_chips(arch, mode):
+    lm = LatencyModel(get_config(arch), mode=mode,
+                      seq=4096 if mode == "decode" else 128)
+    lats = [lm.latency(c, 16) for c in CHIP_LEVELS]
+    finite = [l for l in lats if math.isfinite(l)]
+    assert len(finite) >= 3
+    # weakly decreasing within 1% numerical slack
+    for a, b in zip(finite, finite[1:]):
+        assert b <= a * 1.01
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_costs_positive_and_batch_scaling(arch):
+    lm = LatencyModel(get_config(arch), mode="prefill", seq=128)
+    f1, h1, ar1, a2a1 = lm.costs(1)
+    f16, h16, ar16, a2a16 = lm.costs(16)
+    assert f1 > 0 and h1 > 0 and ar1 >= 0
+    assert f16 > f1                     # flops scale with batch
+    assert h16 >= h1                    # bytes at least weight-streaming
+
+
+def test_knee_spread_matches_paper_structure():
+    """Paper Table 6: knees spread over ~6%-100%, lightweight models low."""
+    knees = {}
+    for arch, cfg in ARCHS.items():
+        lm = LatencyModel(cfg, mode="prefill", seq=128)
+        knees[arch] = lm.knee_chips(16) / 256
+    assert knees["granite-moe-3b-a800m"] < knees["yi-9b"]
+    assert knees["whisper-small"] < knees["chameleon-34b"]
+    assert min(knees.values()) <= 0.3
+    assert max(knees.values()) >= 0.5
+    assert sum(knees.values()) > 1.0     # multiplexing pressure exists
+
+
+def test_min_chips_to_fit():
+    lm = LatencyModel(get_config("chameleon-34b"), mode="prefill", seq=128)
+    assert lm.min_chips_to_fit() >= 4          # 68 GB of bf16 weights
+    assert not math.isfinite(lm.latency(1, 1))
+    lm_small = LatencyModel(get_config("qwen2-0.5b"), mode="prefill", seq=128)
+    assert lm_small.min_chips_to_fit() == 1
+
+
+def test_override_replaces_analytic_costs():
+    lm = LatencyModel(get_config("olmo-1b"), mode="prefill", seq=128,
+                      override=CostOverride(flops=1e12, hbm_bytes=1e9,
+                                            ar_bytes=1e8, a2a_bytes=0.0,
+                                            batch=8))
+    f, h, ar, a2a = lm.costs(16)
+    assert f == pytest.approx(2e12)
+    assert h == pytest.approx(2e9)
+    assert ar == pytest.approx(2e8)
+
+
+def test_decode_memory_bound_dense():
+    """Decode at small batch must be memory-bound (weight streaming)."""
+    cfg = get_config("deepseek-7b")
+    lm = LatencyModel(cfg, mode="decode", seq=4096)
+    flops, hbm, _, _ = lm.costs(8)
+    c = 32
+    t_comp_ideal = flops / (c * lm.hw.peak_flops)
+    t_mem = hbm / (c * lm.hw.hbm_bw)
+    assert t_mem > t_comp_ideal          # arithmetic intensity below ridge
+
+
+def test_ssm_knee_lower_than_dense_peer():
+    """mamba2-1.3b (attention-free) should right-size smaller than a dense
+    model of similar scale at decode."""
+    k_ssm = LatencyModel(get_config("mamba2-1.3b"), mode="decode",
+                         seq=32768).knee_chips(32)
+    k_dense = LatencyModel(get_config("yi-9b"), mode="decode",
+                           seq=32768).knee_chips(32)
+    assert k_ssm <= k_dense
+
+
+@settings(max_examples=20, deadline=None)
+@given(batch=st.integers(min_value=1, max_value=64),
+       chips=st.sampled_from(CHIP_LEVELS),
+       arch=st.sampled_from(sorted(ARCHS)))
+def test_property_latency_positive_finite_or_inf(batch, chips, arch):
+    lm = LatencyModel(get_config(arch), mode="prefill", seq=128)
+    lat = lm.latency(chips, batch)
+    assert lat > 0
+    if chips >= lm.min_chips_to_fit(batch):
+        assert math.isfinite(lat)
+        assert lm.throughput(chips, batch) > 0

@@ -1,0 +1,171 @@
+"""Scheduler invariants + policy behavior, incl. hypothesis property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.profiles import build_profile
+from repro.core.scheduler import POLICIES, IdealSimulator
+from repro.core.simulator import SimConfig, Simulator
+from repro.serving.request import Request, RequestGenerator
+
+NAMES = ["qwen2-0.5b", "mamba2-1.3b", "deepseek-7b", "yi-9b"]
+
+
+def _profiles(rate=2000):
+    return {n: build_profile(n, request_rate=rate) for n in NAMES}
+
+
+def _gens(profiles, rate=2000, seed0=0):
+    return [RequestGenerator(n, rate, profiles[n].slo, seed=seed0 + i)
+            for i, n in enumerate(profiles)]
+
+
+class _InvariantSim(Simulator):
+    """Simulator that records the oversubscription invariant."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.max_alloc = 0.0
+        self.oversubscribed = False
+
+    def _start_runs(self, now, reqs):
+        super()._start_runs(now, reqs)
+        alloc = sum(r.frac for r in self.running)
+        self.max_alloc = max(self.max_alloc, alloc)
+        if any(not rr.oversubscribe for rr in reqs) and alloc > 1.0 + 1e-6:
+            self.oversubscribed = True
+
+
+@pytest.mark.parametrize("policy", ["temporal", "gslice", "triton",
+                                    "maxmin", "max_throughput", "dstack"])
+def test_no_oversubscription(policy):
+    profiles = _profiles()
+    sim = _InvariantSim(profiles, POLICIES[policy](profiles),
+                        _gens(profiles), SimConfig(duration=1.0))
+    sim.run()
+    assert not sim.oversubscribed, f"{policy} oversubscribed the pod"
+    assert sim.max_alloc <= 1.0 + 1e-6
+
+
+def test_temporal_runs_one_at_a_time():
+    profiles = _profiles()
+
+    class Watch(Simulator):
+        max_conc = 0
+
+        def _start_runs(self, now, reqs):
+            super()._start_runs(now, reqs)
+            Watch.max_conc = max(Watch.max_conc, len(self.running))
+
+    sim = Watch(profiles, POLICIES["temporal"](profiles), _gens(profiles),
+                SimConfig(duration=0.5))
+    sim.run()
+    assert Watch.max_conc == 1
+
+
+def test_dstack_beats_temporal_throughput():
+    # rate high enough that temporal saturates (else D-STACK is merely
+    # arrival-bound and the ratio reflects the offered load, not capacity)
+    p1 = _profiles(rate=4000)
+    r_t = Simulator(p1, POLICIES["temporal"](p1), _gens(p1, rate=4000),
+                    SimConfig(duration=2.0)).run()
+    p2 = _profiles(rate=4000)
+    r_d = Simulator(p2, POLICIES["dstack"](p2), _gens(p2, rate=4000),
+                    SimConfig(duration=2.0)).run()
+    assert r_d.throughput() > 1.5 * r_t.throughput()
+    assert r_d.utilization > r_t.utilization
+
+
+def test_dstack_fairness_all_models_served():
+    profiles = _profiles(rate=4000)
+    res = Simulator(profiles, POLICIES["dstack"](profiles),
+                    _gens(profiles, rate=4000),
+                    SimConfig(duration=2.0)).run()
+    for n, m in res.per_model.items():
+        assert m.completed > 0, f"{n} starved under dstack"
+        assert m.runtime > 0
+
+
+def test_maxmin_favors_smallest_demand():
+    """Paper Fig. 10b: max-min gives the low-demand model at least as much
+    opportunity as D-STACK gives it."""
+    p1 = _profiles(rate=6000)
+    small = min(p1, key=lambda n: p1[n].knee_chips)
+    r_mm = Simulator(p1, POLICIES["maxmin"](p1), _gens(p1, 6000),
+                     SimConfig(duration=1.0)).run()
+    assert r_mm.per_model[small].completed > 0
+
+
+def test_drain_mode_completes_everything():
+    profiles = _profiles()
+
+    class Burst:
+        def __init__(self, model, n, slo):
+            self.reqs = [Request(0.0, i, model, slo) for i in range(n)]
+
+        def until(self, t):
+            r, self.reqs = self.reqs, []
+            return r
+
+    gens = [Burst(n, 100, profiles[n].slo) for n in profiles]
+    res = Simulator(profiles, POLICIES["dstack"](profiles), gens,
+                    SimConfig(drain=True, drop_expired=False,
+                              duration=0)).run()
+    assert res.total_completed == 400
+    assert res.makespan > 0
+
+
+def test_ideal_utilization_high_and_bounded():
+    profiles = _profiles(rate=2000)
+    res = IdealSimulator(profiles, _gens(profiles), duration=1.0).run()
+    assert 0.0 < res.utilization <= 1.0 + 1e-9
+    assert res.total_completed > 0
+
+
+def test_dstack_within_ideal_envelope():
+    """Paper Fig. 9d: D-STACK >= 90% of the ideal scheduler's throughput
+    (at the shared knee/batch operating point, near-capacity load)."""
+    import dataclasses
+    rate = 1000
+
+    def mk():
+        out = {}
+        for n in NAMES:
+            p = build_profile(n, request_rate=rate)
+            out[n] = dataclasses.replace(p, opt_chips=p.knee_chips,
+                                         opt_batch=16)
+        return out
+
+    p1 = mk()
+    ideal = IdealSimulator(p1, _gens(p1, rate), duration=1.5).run()
+    p2 = mk()
+    ds = Simulator(p2, POLICIES["dstack"](p2), _gens(p2, rate),
+                   SimConfig(duration=1.5)).run()
+    assert ds.throughput() >= 0.9 * ideal.throughput()
+    assert ds.utilization >= 0.85 * ideal.utilization
+
+
+# ------------------------------------------------------------ hypothesis
+@settings(max_examples=15, deadline=None)
+@given(
+    rates=st.lists(st.integers(min_value=50, max_value=5000),
+                   min_size=2, max_size=4),
+    duration=st.floats(min_value=0.2, max_value=1.0),
+    policy=st.sampled_from(["dstack", "maxmin", "gslice", "temporal"]),
+)
+def test_property_invariants_random_workloads(rates, duration, policy):
+    names = NAMES[: len(rates)]
+    profiles = {n: build_profile(n, request_rate=r)
+                for n, r in zip(names, rates)}
+    gens = [RequestGenerator(n, r, profiles[n].slo, seed=i)
+            for i, (n, r) in enumerate(zip(names, rates))]
+    sim = _InvariantSim(profiles, POLICIES[policy](profiles), gens,
+                        SimConfig(duration=duration))
+    res = sim.run()
+    # invariants: no oversubscription; completed+violated sane; util in [0,1]
+    assert not sim.oversubscribed
+    assert 0.0 <= res.utilization <= 1.0 + 1e-9
+    for n, m in res.per_model.items():
+        assert m.completed >= 0
+        assert m.runtime <= duration * 1.5 + 1.0

@@ -1,0 +1,82 @@
+"""Logical-axis sharding rules: divisibility fallback + plan/spec parity."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.models.layers import ParamDef
+from repro.models.registry import build_model
+from repro.utils.sharding import resolve_spec, tree_specs
+
+
+def _mesh(shape=(2, 4), axes=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+def test_divisible_dim_shards():
+    mesh = _mesh()
+    spec = resolve_spec(("vocab", "embed"), (64_000, 512), mesh)
+    assert spec == P("model")
+
+
+def test_non_divisible_dim_replicates():
+    mesh = _mesh()
+    spec = resolve_spec(("vocab", "embed"), (51_865, 512), mesh)
+    assert spec == P()
+
+
+def test_head_dim_fallback():
+    mesh = _mesh()
+    # 14 heads don't divide 4-way model axis; head_dim 64 does
+    spec = resolve_spec(("embed", "heads", "head_dim"), (896, 14, 64), mesh)
+    assert spec == P(None, None, "model")
+    # 16 heads divide: heads take the axis, head_dim must NOT reuse it
+    spec = resolve_spec(("embed", "heads", "head_dim"), (896, 16, 64), mesh)
+    assert spec == P(None, "model")
+
+
+def test_batch_axes_multi_pod():
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    spec = resolve_spec(("batch", None), (16, 128), mesh)
+    assert spec == P(("pod", "data"))
+    # batch=1 cannot shard over 4 ways
+    spec = resolve_spec(("batch", None), (1, 128), mesh)
+    assert spec == P()
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_structure_matches_params(arch):
+    cfg = ARCHS[arch].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    mesh = _mesh((1, 1))
+    specs = api.param_specs(mesh)
+    t1 = jax.tree_util.tree_structure(params)
+    t2 = jax.tree_util.tree_structure(specs)
+    assert t1 == t2
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_cache_specs_structure_matches_cache(arch):
+    cfg = ARCHS[arch].reduced()
+    api = build_model(cfg)
+    cache = api.init_cache(2, 32)
+    mesh = _mesh((1, 1))
+    specs = api.cache_specs(mesh, 2, 32)
+    assert (jax.tree_util.tree_structure(cache)
+            == jax.tree_util.tree_structure(specs))
+
+
+@settings(max_examples=50, deadline=None)
+@given(dim=st.integers(min_value=1, max_value=4096),
+       axis=st.sampled_from([2, 4, 8]))
+def test_property_resolve_never_invalid(dim, axis):
+    mesh = _mesh((1, axis))
+    spec = resolve_spec(("mlp",), (dim,), mesh)
+    if dim % axis == 0:
+        assert spec == P("model")
+    else:
+        assert spec == P()
