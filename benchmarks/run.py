@@ -21,6 +21,7 @@ MODULES = [
     "fig12_cluster",
     "roofline",
     "kernels_micro",
+    "bench_decode",
 ]
 
 

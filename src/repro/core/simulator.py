@@ -47,6 +47,11 @@ class SimConfig:
     drop_expired: bool = True
     dispatch_gap: float = 100e-6    # engine-switch gap (paper §1: <100 µs)
     max_time: float = 600.0
+    # horizon up to which rate-based generators materialize arrivals; None
+    # -> ``duration``. Drain runs with rate generators MUST set this (or a
+    # nonzero duration): the pre-fix behavior materialized arrivals up to
+    # t=0 and silently simulated an empty workload.
+    arrival_horizon: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -91,7 +96,16 @@ class Simulator:
         self.queues: Dict[str, RequestQueue] = {
             name: RequestQueue(name, p.slo) for name, p in profiles.items()}
         self.generators = list(generators)
-        self.running: List[Run] = []
+        # Hot-path state: runs live in a dict keyed by a start sequence
+        # number, completions in a min-heap of (end, seq), and the
+        # allocated / knee-credited fractions are maintained incrementally
+        # — each event is O(log n) instead of the O(n) full scans that made
+        # fig9/fig11 at 256 chips O(n^2) overall.
+        self._running: Dict[int, Run] = {}
+        self._end_heap: List = []
+        self._run_seq = 0
+        self._alloc_frac = 0.0      # sum of frac over in-flight runs
+        self._busy_knee = 0.0       # sum of min(frac, knee_frac)
         self.metrics: Dict[str, ModelMetrics] = {
             name: ModelMetrics() for name in profiles}
         self._util_area = 0.0
@@ -99,15 +113,20 @@ class Simulator:
         self._makespan = 0.0
 
     # ------------------------------------------------------------------
+    @property
+    def running(self) -> List[Run]:
+        """Snapshot of in-flight runs (list view kept for policies/tests)."""
+        return list(self._running.values())
+
     def free_frac(self, now: float) -> float:
-        return 1.0 - sum(r.frac for r in self.running if r.end > now)
+        # completions are drained before every planning point, so the
+        # incremental accumulator is exact here
+        return 1.0 - self._alloc_frac
 
     def _advance(self, t: float) -> None:
         # paper §6.1: utilization credits each model only up to its knee —
         # allocation beyond the knee is waste, not utilization
-        busy = sum(min(r.frac, self.profiles[r.model].knee_frac)
-                   for r in self.running)
-        self._util_area += min(busy, 1.0) * (t - self._last_t)
+        self._util_area += min(self._busy_knee, 1.0) * (t - self._last_t)
         self._last_t = t
 
     def _start_runs(self, now: float, reqs: List[RunRequest]) -> None:
@@ -125,10 +144,29 @@ class Simulator:
             lat = prof.latency(rr.chips, len(batch)) * rr.dilation
             run = Run(rr.model, rr.chips, frac, len(batch), now,
                       now + lat + self.sim.dispatch_gap, batch)
-            self.running.append(run)
+            seq = self._run_seq
+            self._run_seq += 1
+            self._running[seq] = run
+            heapq.heappush(self._end_heap, (run.end, seq))
+            self._alloc_frac += frac
+            self._busy_knee += min(frac, prof.knee_frac)
             m = self.metrics[rr.model]
             m.runs += 1
             m.runtime += lat
+
+    def _pop_done(self, now: float) -> List[Run]:
+        done = []
+        while self._end_heap and self._end_heap[0][0] <= now + 1e-12:
+            _, seq = heapq.heappop(self._end_heap)
+            run = self._running.pop(seq)
+            self._alloc_frac -= run.frac
+            self._busy_knee -= min(run.frac,
+                                   self.profiles[run.model].knee_frac)
+            done.append(run)
+        if not self._running:           # re-zero: no float-drift build-up
+            self._alloc_frac = 0.0
+            self._busy_knee = 0.0
+        return done
 
     def _finish(self, run: Run, now: float) -> None:
         q = self.queues[run.model]
@@ -141,11 +179,19 @@ class Simulator:
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
         sim = self.sim
-        # materialize arrivals
+        # materialize arrivals; drain mode gets an explicit arrival horizon
+        # (pre-fix it was 0.0, so rate-based generators silently emitted
+        # nothing and drain simulations ran empty)
         arrivals: List[Request] = []
-        horizon = sim.duration if not sim.drain else 0.0
+        horizon = (sim.arrival_horizon if sim.arrival_horizon is not None
+                   else sim.duration)
         for g in self.generators:
             arrivals.extend(g.until(max(horizon, 1e-9)))
+        if sim.drain and not arrivals and any(
+                getattr(g, "rate", 0) > 0 for g in self.generators):
+            raise ValueError(
+                "drain=True with rate-based generators produced no "
+                "arrivals; set SimConfig.arrival_horizon (or duration) > 0")
         arrivals.sort(key=lambda r: r.arrival)
         ai = 0
         now = 0.0
@@ -155,7 +201,7 @@ class Simulator:
         self._plan(now)
 
         while now < sim.max_time:
-            next_end = min((r.end for r in self.running), default=math.inf)
+            next_end = self._end_heap[0][0] if self._end_heap else math.inf
             next_arr = arrivals[ai].arrival if ai < len(arrivals) else math.inf
             wake = self.policy.next_wakeup(now) if hasattr(
                 self.policy, "next_wakeup") else math.inf
@@ -171,13 +217,11 @@ class Simulator:
             # deliver arrivals
             while ai < len(arrivals) and arrivals[ai].arrival <= now + 1e-12:
                 self.queues[arrivals[ai].model].push(arrivals[ai]); ai += 1
-            # completions
-            done = [r for r in self.running if r.end <= now + 1e-12]
-            self.running = [r for r in self.running if r.end > now + 1e-12]
-            for r in done:
+            # completions (heap pop + incremental accumulator update)
+            for r in self._pop_done(now):
                 self._finish(r, now)
             self._plan(now)
-            if sim.drain and ai >= len(arrivals) and not self.running \
+            if sim.drain and ai >= len(arrivals) and not self._running \
                     and all(len(q) == 0 for q in self.queues.values()):
                 break
 

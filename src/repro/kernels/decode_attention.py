@@ -8,8 +8,24 @@ each grid cell owns one kv head and its `rep = H/KV` query heads, so the
 cache is never head-repeated (the jnp lesson from EXPERIMENTS §Perf #9,
 here enforced structurally).
 
-`valid_len` masks unwritten cache slots (scalar, streamed via a (1,)
-input).
+Raggedness: ``lengths`` is a per-sequence ``(B,)`` int32 vector (a scalar
+is accepted and broadcast). It is delivered via scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``) so it is available to the *index maps*,
+not just the kernel body:
+
+  * compute skip — cache blocks entirely past a row's length are skipped
+    with ``pl.when`` (the same fully-masked-tile skip proven in
+    ``flash_attention``), so a 100-token row in a 4096-slot cache does 1
+    block of work, not 32;
+  * DMA skip — the K/V index map clamps the block index to the row's last
+    valid block, so Pallas's revisit-elision never streams dead cache
+    blocks from HBM. Bandwidth, not just FLOPs, scales with actual
+    sequence length — that is the entire game for decode attention, which
+    is memory-bound.
+
+Rows with ``lengths == 0`` produce exact zeros (no blocks run; the
+finalizer's ``l`` guard returns 0), which slot-based continuous batching
+relies on for vacant slots.
 """
 from __future__ import annotations
 
@@ -24,9 +40,10 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, scale: float, block_k: int,
                    nk: int):
+    bi = pl.program_id(0)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -35,7 +52,7 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    valid = valid_ref[0]
+    valid = len_ref[bi]
     k_start = j * block_k
 
     @pl.when(k_start < valid)
@@ -63,37 +80,52 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
                        / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, valid_len, *, block_k: int = 512,
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
                      interpret: bool = False):
-    """q: (B, H, D); caches: (B, C, KV, D); valid_len: scalar int32.
+    """q: (B, H, D); caches: (B, C, KV, D); lengths: int32 scalar or (B,).
 
-    Returns (B, H, D)."""
+    Returns (B, H, D). Rows with length 0 return zeros."""
     b, h, d = q.shape
     _, c, kvh, _ = k_cache.shape
     rep = h // kvh
     block_k = min(block_k, c)
+    while block_k > 1 and c % block_k:      # largest divisor <= requested
+        block_k //= 2
     assert c % block_k == 0, (c, block_k)
     nk = c // block_k
     qg = q.reshape(b, kvh, rep, d)
-    valid = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
     kernel = functools.partial(_decode_kernel, scale=1.0 / np.sqrt(d),
                                block_k=block_k, nk=nk)
-    out = pl.pallas_call(
-        kernel,
+
+    def kv_map(b_, g, j, len_ref):
+        # Clamp past-length blocks onto the row's last live block: Pallas
+        # elides the DMA when the block index repeats, so dead cache never
+        # leaves HBM.
+        last = jnp.maximum((len_ref[b_] + block_k - 1) // block_k, 1) - 1
+        return (b_, jnp.minimum(j, last), g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(b, kvh, nk),
         in_specs=[
-            pl.BlockSpec((1,), lambda b_, g, j: (0,)),
-            pl.BlockSpec((1, 1, rep, d), lambda b_, g, j: (b_, g, 0, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda b_, g, j: (b_, j, g, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda b_, g, j: (b_, j, g, 0)),
+            pl.BlockSpec((1, 1, rep, d), lambda b_, g, j, len_ref: (b_, g, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
+            pl.BlockSpec((1, block_k, 1, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, rep, d), lambda b_, g, j: (b_, g, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, d), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda b_, g, j, len_ref: (b_, g, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((rep, 1), jnp.float32),
             pltpu.VMEM((rep, 1), jnp.float32),
             pltpu.VMEM((rep, d), jnp.float32),
         ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, d), q.dtype),
         interpret=interpret,
-    )(valid, qg, k_cache, v_cache)
+    )(lengths, qg, k_cache, v_cache)
     return out.reshape(b, h, d)

@@ -33,16 +33,24 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
 
 
 def decode_attention_ref(q, k_cache, v_cache, valid_len):
-    """q: (B,H,D); caches (B,C,KV,D); mask entries >= valid_len."""
+    """q: (B,H,D); caches (B,C,KV,D); valid_len: scalar or (B,) lengths.
+
+    Per row, entries >= its length are masked; length-0 rows return zeros
+    (matching the Pallas kernel's no-blocks-run convention)."""
     b, c, kvh, d = k_cache.shape
     h = q.shape[1]
     rep = h // kvh
+    lengths = jnp.broadcast_to(
+        jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
     kr = jnp.repeat(k_cache, rep, axis=2).astype(jnp.float32)
     vr = jnp.repeat(v_cache, rep, axis=2).astype(jnp.float32)
     sc = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) / np.sqrt(d)
-    sc = jnp.where(jnp.arange(c)[None, None, :] < valid_len, sc, -jnp.inf)
+    sc = jnp.where(jnp.arange(c)[None, None, :] < lengths[:, None, None],
+                   sc, -jnp.inf)
     w = jax.nn.softmax(sc, axis=-1)
-    return jnp.einsum("bhk,bkhd->bhd", w, vr).astype(q.dtype)
+    out = jnp.einsum("bhk,bkhd->bhd", w, vr)
+    out = jnp.where(lengths[:, None, None] > 0, out, 0.0)
+    return out.astype(q.dtype)
 
 
 def ssd_ref(x, dt, a, b, c, initial_state=None):

@@ -149,14 +149,15 @@ def cache_plan(cfg, batch: int, cache_len: int) -> dict:
         "v": ParamDef(kv_shape, spec, "zeros"),
         "cross_k": ParamDef(cross_shape, spec, "zeros"),
         "cross_v": ParamDef(cross_shape, spec, "zeros"),
-        "pos": ParamDef((), None, "zeros"),
+        # per-sequence positions: ragged batches + slot reuse
+        "pos": ParamDef((batch,), None, "zeros"),
     }
 
 
 def init_cache(cfg, batch: int, cache_len: int, dtype=None):
     dtype = dtype or jnp.dtype(cfg.dtype)
     cp = cache_plan(cfg, batch, cache_len)
-    return {k: (jnp.zeros((), jnp.int32) if k == "pos"
+    return {k: (jnp.zeros((batch,), jnp.int32) if k == "pos"
                 else jnp.zeros(cp[k].shape, dtype))
             for k in cp}
 
@@ -192,20 +193,20 @@ def prefill(params, cfg, tokens, cache_len: int, enc_embeds):
     x = L.apply_norm(params["final_norm"], x[:, -1], cfg.norm)
     logits = L.unembed(params["embed"], x, cfg)
     return logits, {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
-                    "pos": jnp.int32(s)}
+                    "pos": jnp.full((b,), s, jnp.int32)}
 
 
 def decode_step(params, cfg, token, cache):
     """Self-attention cache is carried + updated in place; the read-only
     cross K/V streams through the scan as xs (no double-buffering)."""
     dtype = jnp.dtype(cfg.dtype)
-    pos = cache["pos"]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), token.shape)
     cache_len = cache["k"].shape[2]
-    slot = pos % cache_len
-    valid = jnp.minimum(pos + 1, cache_len)
+    slot = pos % cache_len                                     # (B,)
+    valid = jnp.minimum(pos + 1, cache_len)                    # (B,)
     x = (L.embed_tokens(params["embed"], token, dtype)
          + params["dec_pos"][pos].astype(dtype))
-    positions = jnp.broadcast_to(pos, token.shape)
+    positions = pos
     enc_len = cache["cross_k"].shape[2]
 
     def body(carry, xs):
@@ -216,8 +217,8 @@ def decode_step(params, cfg, token, cache):
         q = L.constrain_q_decode(cfg, q[:, 0])
         kc = jax.lax.dynamic_slice_in_dim(kfull, idx, 1, axis=0)[0]
         vc = jax.lax.dynamic_slice_in_dim(vfull, idx, 1, axis=0)[0]
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        kc = L.cache_row_update(kc, k, slot)
+        vc = L.cache_row_update(vc, v, slot)
         attn = L.decode_attention(q, kc, vc, valid)
         x1 = h0 + L.attn_out(lp["self_attn"], h0.dtype, attn)
 

@@ -152,17 +152,17 @@ def prefill(params, cfg, tokens, cache_len: int):
     x = L.apply_norm(params["final_norm"], x[:, -1], cfg.norm)
     logits = L.unembed(params["embed"], x, cfg)
     return logits, {"ssm": states, "conv": convs, "attn_k": kc, "attn_v": vc,
-                    "pos": jnp.int32(s)}
+                    "pos": jnp.full((b,), s, jnp.int32)}
 
 
 def decode_step(params, cfg, token, cache):
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed_tokens(params["embed"], token, dtype)
-    pos = cache["pos"]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), token.shape)
     cache_len = cache["attn_k"].shape[2]
-    slot = pos % cache_len
-    valid = jnp.minimum(pos + 1, cache_len)
-    positions = jnp.broadcast_to(pos, token.shape)
+    slot = pos % cache_len                                     # (B,)
+    valid = jnp.minimum(pos + 1, cache_len)                    # (B,)
+    positions = pos
     sp = params["shared_attn"]
     na = n_attn_blocks(cfg)
 
@@ -179,8 +179,8 @@ def decode_step(params, cfg, token, cache):
             q = L.constrain_q_decode(cfg, q[:, 0])
             kj = jax.lax.dynamic_slice_in_dim(kc_, j, 1, axis=0)[0]
             vj = jax.lax.dynamic_slice_in_dim(vc_, j, 1, axis=0)[0]
-            kj = jax.lax.dynamic_update_slice_in_dim(kj, k, slot, axis=1)
-            vj = jax.lax.dynamic_update_slice_in_dim(vj, v, slot, axis=1)
+            kj = L.cache_row_update(kj, k, slot)
+            vj = L.cache_row_update(vj, v, slot)
             attn = L.decode_attention(q, kj, vj, valid)
             h2 = h_ + L.attn_out(sp["attn"], h_.dtype, attn)
             hh2 = L.apply_norm(sp["ln2"], h2, cfg.norm)

@@ -223,13 +223,35 @@ def big_attention(q, k, v, *, causal: bool, window: int = 0):
     return attention_dense(q, k, v, causal=causal)
 
 
+def cache_row_update(buf, new, slot):
+    """Write ``new`` (B, 1, ...) into ``buf`` (B, C, ...) at per-row ring
+    position ``slot`` (B,) along axis 1.
+
+    Implemented as a batched scatter (``.at[b, slot_b]``), which touches one
+    row per sequence; inside the decode layer-scan the buffer is a carry, so
+    XLA applies it in place. The one-hot-select alternative rewrites the
+    whole cache every layer — measured 1.5x slower per decode step at
+    C=128 on CPU, and O(cache) instead of O(row) HBM traffic at real
+    cache lengths."""
+    bidx = jnp.arange(buf.shape[0])
+    return buf.at[bidx, slot].set(new[:, 0])
+
+
 def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
                      ring_pos=None):
     """Single-token attention over a KV cache.
 
-    q: (B, H, D); k_cache/v_cache: (B, C, KV, D); valid_len: scalar int —
-    number of valid cache entries. For ring-buffer (sliding-window) caches the
-    whole buffer is valid once full; masking handles the partial-fill phase.
+    q: (B, H, D); k_cache/v_cache: (B, C, KV, D); valid_len: scalar int or
+    per-sequence (B,) int32 lengths — number of valid cache entries per row,
+    so mixed-length batches don't pay for the longest sequence. For
+    ring-buffer (sliding-window) caches the whole buffer is valid once full;
+    masking handles the partial-fill phase. Rows with length 0 (vacant
+    continuous-batching slots) return zeros.
+
+    On real TPUs this dispatches to the ragged Pallas kernel
+    (repro.kernels.decode_attention), whose per-row cache-block skip makes
+    HBM traffic scale with each row's actual length. The jnp path below is
+    the CPU/dry-run fallback: masked full-cache compute with static shapes.
 
     GQA is computed as a grouped einsum — NOT a materialized repeat_kv.
     A repeat broadcasts the whole cache to H heads, which under SPMD turns
@@ -238,17 +260,23 @@ def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
     """
     b, c, kvh, d = k_cache.shape
     h = q.shape[1]
+    lengths = jnp.broadcast_to(
+        jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
+    if jax.default_backend() == "tpu" and c % 128 == 0:
+        from repro.kernels.decode_attention import decode_attention as _pallas
+        return _pallas(q, k_cache, v_cache, lengths)
     qg = q.reshape(b, kvh, h // kvh, d)
     # preferred_element_type keeps the cache operands bf16 (no hoisted
     # full-cache f32 convert) while accumulating scores in f32
     sc = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache,
                     preferred_element_type=jnp.float32)
     sc = sc / np.sqrt(d)
-    mask = jnp.arange(c)[None, None, None, :] < valid_len
+    mask = jnp.arange(c)[None, None, None, :] < lengths[:, None, None, None]
     sc = jnp.where(mask, sc, -1e30)
     w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
     out = jnp.einsum("bgrk,bkgd->bgrd", w, v_cache,
                      preferred_element_type=jnp.float32)
+    out = jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
     return out.reshape(b, h, d).astype(q.dtype)
 
 

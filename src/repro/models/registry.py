@@ -49,7 +49,8 @@ class ModelAPI:
         return jax.tree.map(
             lambda pd: jax.ShapeDtypeStruct(
                 tuple(pd.shape),
-                jnp.int32 if pd.shape == () else
+                # 0/1-D leaves are the int32 per-sequence position vector
+                jnp.int32 if len(pd.shape) <= 1 else
                 (jnp.float32 if pd.spec and "ssm_heads" in pd.spec and len(pd.shape) == 5
                  else dtype)),
             cp, is_leaf=lambda x: isinstance(x, L.ParamDef))

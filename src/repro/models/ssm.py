@@ -175,7 +175,8 @@ def cache_plan(cfg, batch: int, cache_len: int) -> dict:
                         ("stack", "batch", "ssm_heads", None, None), "zeros"),
         "conv": ParamDef((nlayer, batch, w - 1, di + 2 * n),
                          ("stack", "batch", None, None), "zeros"),
-        "pos": ParamDef((), None, "zeros"),
+        # per-sequence positions: slot-based continuous batching
+        "pos": ParamDef((batch,), None, "zeros"),
     }
 
 
@@ -185,7 +186,7 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=None):
     return {
         "ssm": jnp.zeros(cp["ssm"].shape, jnp.float32),
         "conv": jnp.zeros(cp["conv"].shape, dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -201,7 +202,8 @@ def prefill(params, cfg, tokens, cache_len: int):
     x, (states, convs) = jax.lax.scan(body, x, params["layers"])
     x = L.apply_norm(params["final_norm"], x[:, -1], cfg.norm)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits, {"ssm": states, "conv": convs, "pos": jnp.int32(s)}
+    return logits, {"ssm": states, "conv": convs,
+                    "pos": jnp.full((b,), s, jnp.int32)}
 
 
 def decode_step(params, cfg, token, cache):
@@ -217,4 +219,5 @@ def decode_step(params, cfg, token, cache):
         body, x, (params["layers"], cache["ssm"], cache["conv"]))
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits, {"ssm": states, "conv": convs, "pos": cache["pos"] + 1}
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), token.shape)
+    return logits, {"ssm": states, "conv": convs, "pos": pos + 1}

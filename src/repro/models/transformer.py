@@ -104,7 +104,8 @@ def cache_plan(cfg, batch: int, cache_len: int) -> dict:
     return {
         "k": L.ParamDef(lcfg, spec, "zeros"),
         "v": L.ParamDef(lcfg, spec, "zeros"),
-        "pos": L.ParamDef((), None, "zeros"),
+        # per-sequence positions/lengths: ragged batches + slot reuse
+        "pos": L.ParamDef((batch,), None, "zeros"),
     }
 
 
@@ -114,7 +115,7 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=None):
     return {
         "k": jnp.zeros(cp["k"].shape, dtype),
         "v": jnp.zeros(cp["v"].shape, dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -150,12 +151,17 @@ def prefill(params, cfg, tokens, cache_len: int):
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
     x = L.apply_norm(params["final_norm"], x[:, -1], cfg.norm)
     logits = L.unembed(params["embed"], x, cfg)
-    new_cache = {"k": ks, "v": vs, "pos": jnp.int32(s)}
+    new_cache = {"k": ks, "v": vs, "pos": jnp.full((b,), s, jnp.int32)}
     return logits, new_cache
 
 
 def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
     """token: (B,) int32; one autoregressive step against the KV cache.
+
+    ``cache["pos"]`` is a per-sequence (B,) vector: each row writes its new
+    K/V at its own ring slot and attends only up to its own length, so a
+    mixed-length (ragged) batch never pays for the longest row and vacant
+    continuous-batching slots cost nothing but the row's lane.
 
     The cache is threaded through the layer scan as CARRY and updated with
     dynamic_update_slice at the layer index — a scan-over-(xs -> ys) cache
@@ -164,11 +170,11 @@ def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
     """
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed_tokens(params["embed"], token, dtype)          # (B, d)
-    pos = cache["pos"]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), token.shape)
     cache_len = cache["k"].shape[2]
-    positions = jnp.broadcast_to(pos, token.shape)
-    slot = jnp.where(cache_len > 0, pos % cache_len, 0)
-    valid = jnp.minimum(pos + 1, cache_len)
+    positions = pos
+    slot = jnp.where(cache_len > 0, pos % cache_len, 0)        # (B,)
+    valid = jnp.minimum(pos + 1, cache_len)                    # (B,)
 
     def body(carry, xs):
         h0, kfull, vfull = carry
@@ -178,8 +184,8 @@ def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
         q = L.constrain_q_decode(cfg, q[:, 0])                 # (B, H, hd)
         kc = jax.lax.dynamic_slice_in_dim(kfull, idx, 1, axis=0)[0]
         vc = jax.lax.dynamic_slice_in_dim(vfull, idx, 1, axis=0)[0]
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        kc = L.cache_row_update(kc, k, slot)
+        vc = L.cache_row_update(vc, v, slot)
         attn = L.decode_attention(q, kc, vc, valid, window=cfg.sliding_window)
         x1 = h0 + L.attn_out(lp["attn"], h0.dtype, attn)
         h2 = L.apply_norm(lp["ln2"], x1, cfg.norm)

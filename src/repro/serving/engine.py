@@ -7,11 +7,44 @@ TPU analogue of the paper's CUDA-MPS process with a fixed GPU% (§3.2): the
 compiled executable pins the spatial allocation, and re-allocation means
 switching to a standby engine compiled for a different sub-mesh while the
 active one keeps serving.
+
+Decode hot-path architecture
+----------------------------
+The paper's throughput gains assume the data plane keeps the accelerator
+saturated while the scheduler multiplexes models; three mechanisms here
+make that true on the host side:
+
+1. **Scan-based generation.** ``generate`` runs the whole autoregressive
+   loop as a single jitted ``jax.lax.scan`` with the KV cache donated into
+   the executable — ONE dispatch per generate call instead of one per
+   token. The eager per-token loop survives as ``generate_eager`` (it is
+   the benchmark baseline; see ``benchmarks/bench_decode.py``).
+
+2. **Power-of-two bucketing.** Executables specialize on cache shape AND
+   scan length, so naively sizing the cache to ``prompt +
+   max_new_tokens`` (or the scan to the exact token count) re-compiles
+   for every distinct request. ``bucket_len`` rounds the cache length up
+   to the next power of two (floored at the engine's base ``cache_len``)
+   and ``generate`` buckets the scan length the same way (surplus tokens
+   discarded): prefill/decode/generate executables are compiled once per
+   bucket — O(log max_len) compilations total — and reused for every
+   request that fits.
+
+3. **Slot-based continuous batching.** ``init_slots`` allocates a
+   fixed-slot cache (batch = n_slots, ring length = slot cache_len);
+   ``insert`` prefills one request and writes its rows into a free slot
+   mid-stream, ``step`` decodes one token for all slots in a single
+   dispatch, ``free`` releases a slot (its length resets to 0 so the
+   ragged decode-attention path treats the row as empty). Because every
+   sequence carries its own position/length (``cache["pos"]`` is a (B,)
+   vector end to end), admitting a new request never repads, recompiles,
+   or perturbs other slots — the paper's "efficient batch size under SLO"
+   lever implemented at the kernel level.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,11 +52,16 @@ import jax.numpy as jnp
 from repro.models.registry import ModelAPI
 
 
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
 @dataclasses.dataclass
 class EngineStats:
     prefills: int = 0
     decode_steps: int = 0
     tokens_out: int = 0
+    inserts: int = 0
 
 
 class InferenceEngine:
@@ -34,6 +72,7 @@ class InferenceEngine:
         self.params = params
         self.cache_len = cache_len
         self.mesh = mesh
+        self.donate_cache = donate_cache
         self.stats = EngineStats()
 
         if mesh is not None:
@@ -43,25 +82,41 @@ class InferenceEngine:
         else:
             self._param_sh = None
 
-        self._prefill = jax.jit(
-            lambda p, batch: api.prefill(p, batch, cache_len),
-            static_argnums=())
+        self._prefill_jit: Dict[int, Any] = {}
+        self._gen_jit: Dict[Any, Any] = {}
         donate = (2,) if donate_cache else ()
         self._decode = jax.jit(
             lambda p, tok, cache: api.decode_step(p, tok, cache),
             donate_argnums=donate)
+        self._slot_step = jax.jit(
+            lambda p, tok, cache, active: _slot_decode_step(
+                api, p, tok, cache, active),
+            donate_argnums=donate)
+        self._write_slot = jax.jit(_write_slot, donate_argnums=(0,))
+
+        # slot state (populated by init_slots)
+        self._slot_cache = None
+        self._slot_free: List[int] = []
+        self._slot_active: List[bool] = []
+        self._last_tok = None
 
     # ------------------------------------------------------------------
+    def bucket_len(self, need: int) -> int:
+        """Cache-length bucket for ``need`` tokens: next power of two,
+        floored at the engine's base cache_len (compile once per bucket)."""
+        return max(self.cache_len, _pow2_at_least(need))
+
     def new_cache(self, batch: int, cache_len: Optional[int] = None):
         return self.api.init_cache(batch, cache_len or self.cache_len)
 
     def prefill(self, batch: Dict[str, Any], cache_len: Optional[int] = None):
-        if cache_len is not None and cache_len != self.cache_len:
-            logits, cache = jax.jit(
-                lambda p, b: self.api.prefill(p, b, cache_len))(
-                    self.params, batch)
-        else:
-            logits, cache = self._prefill(self.params, batch)
+        clen = cache_len or self.cache_len
+        fn = self._prefill_jit.get(clen)
+        if fn is None:
+            api = self.api
+            fn = jax.jit(lambda p, b, _c=clen: api.prefill(p, b, _c))
+            self._prefill_jit[clen] = fn
+        logits, cache = fn(self.params, batch)
         self.stats.prefills += 1
         return logits, cache
 
@@ -71,12 +126,72 @@ class InferenceEngine:
         return logits, cache
 
     # ------------------------------------------------------------------
+    def _gen_fn(self, max_new_tokens: int, greedy: bool):
+        key = (max_new_tokens, greedy)
+        fn = self._gen_jit.get(key)
+        if fn is None:
+            api = self.api
+
+            def gen(params, logits, cache, rng):
+                tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+
+                def body(carry, _):
+                    tok, cache, rng = carry
+                    lg, cache = api.decode_step(params, tok, cache)
+                    if greedy:
+                        nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+                    else:
+                        rng, sub = jax.random.split(rng)
+                        nxt = jax.random.categorical(sub, lg).astype(jnp.int32)
+                    return (nxt, cache, rng), tok
+
+                (_, cache, _), toks = jax.lax.scan(
+                    body, (tok0, cache, rng), None, length=max_new_tokens)
+                # cache is returned (and discarded by the caller) so the
+                # donated input can alias the output — true in-place reuse
+                return toks.swapaxes(0, 1), cache           # (B, T), cache
+
+            fn = jax.jit(gen, donate_argnums=(2,) if self.donate_cache else ())
+            self._gen_jit[key] = fn
+        return fn
+
     def generate(self, batch: Dict[str, Any], max_new_tokens: int,
                  greedy: bool = True, rng: Optional[jax.Array] = None):
-        """Prefill + autoregressive decode. Returns (B, max_new_tokens)."""
+        """Prefill + one fused scan over all decode steps (single dispatch).
+
+        Returns (B, max_new_tokens). Bit-equivalent to ``generate_eager``
+        under greedy decoding. The scan length is bucketed to a power of
+        two (like the cache length) so a stream of varying generation
+        lengths compiles O(log) executables, not one per distinct length;
+        surplus tokens are discarded."""
         b = batch["tokens"].shape[0]
-        need = batch["tokens"].shape[1] + max_new_tokens
-        logits, cache = self.prefill(batch, max(self.cache_len, need))
+        t_bucket = max(1, _pow2_at_least(max_new_tokens))
+        need = batch["tokens"].shape[1] + t_bucket
+        logits, cache = self.prefill(batch, self.bucket_len(need))
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        toks, _ = self._gen_fn(t_bucket, greedy)(
+            self.params, logits, cache, rng)
+        self.stats.decode_steps += t_bucket
+        self.stats.tokens_out += b * max_new_tokens
+        return toks[:, :max_new_tokens]
+
+    def generate_eager(self, batch: Dict[str, Any], max_new_tokens: int,
+                       greedy: bool = True, rng: Optional[jax.Array] = None):
+        """Seed-engine reference path, kept as the bench_decode baseline and
+        for parity tests: one jitted dispatch per token from a Python loop,
+        and an UNBUCKETED exact-length prefill that re-traces/compiles
+        whenever the request needs more than the base cache_len (the seed
+        constructed a fresh ``jax.jit`` per such call)."""
+        b = batch["tokens"].shape[0]
+        need = max(self.cache_len, batch["tokens"].shape[1] + max_new_tokens)
+        if need != self.cache_len:
+            api = self.api
+            logits, cache = jax.jit(
+                lambda p, bt: api.prefill(p, bt, need))(self.params, batch)
+            self.stats.prefills += 1
+        else:
+            logits, cache = self.prefill(batch, self.cache_len)
         outs = []
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         for i in range(max_new_tokens):
@@ -89,6 +204,93 @@ class InferenceEngine:
                 tok = jax.random.categorical(sub, logits).astype(jnp.int32)
         self.stats.tokens_out += b * max_new_tokens
         return jnp.stack(outs, axis=1)
+
+    # ------------------------------------------ slot continuous batching
+    @property
+    def n_slots(self) -> int:
+        return 0 if self._slot_cache is None else len(self._slot_active)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._slot_free)
+
+    def init_slots(self, n_slots: int, cache_len: Optional[int] = None):
+        """Allocate a fixed-slot cache for continuous batching."""
+        self.slot_len = cache_len or self.cache_len
+        self._slot_cache = self.api.init_cache(n_slots, self.slot_len)
+        self._slot_free = list(range(n_slots))
+        self._slot_active = [False] * n_slots
+        self._active_mask = jnp.zeros((n_slots,), bool)
+        self._last_tok = jnp.zeros((n_slots,), jnp.int32)
+        return self
+
+    def insert(self, batch: Dict[str, Any]) -> int:
+        """Admit one request (batch size 1) into a free slot mid-stream.
+
+        Prefills the prompt against the slot ring length and writes the
+        resulting cache rows into the slot; other slots' rows are untouched
+        so their decoding is unaffected. Returns the slot id."""
+        if not self._slot_free:
+            raise RuntimeError("no free slots")
+        assert batch["tokens"].shape[0] == 1, "insert admits one request"
+        slot = self._slot_free.pop(0)
+        logits, one = self.prefill(batch, self.slot_len)
+        self._slot_cache = self._write_slot(self._slot_cache, one,
+                                            jnp.int32(slot))
+        self._last_tok = self._last_tok.at[slot].set(
+            jnp.argmax(logits[0], -1).astype(jnp.int32))
+        self._slot_active[slot] = True
+        self._active_mask = self._active_mask.at[slot].set(True)
+        self.stats.inserts += 1
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Release a slot. Its position pins to 0 (here and after every
+        subsequent step), so vacant rows attend over at most one cache
+        slot instead of drifting back toward full-cache cost."""
+        if not self._slot_active[slot]:
+            return
+        self._slot_active[slot] = False
+        self._slot_free.append(slot)
+        self._active_mask = self._active_mask.at[slot].set(False)
+        self._slot_cache["pos"] = self._slot_cache["pos"].at[slot].set(0)
+
+    def step(self):
+        """One decode step for ALL slots in a single dispatch.
+
+        Returns (tokens (n_slots,), logits-argmax already applied). Tokens
+        for inactive slots are garbage and must be ignored by the caller
+        (``slot_active``)."""
+        tok, self._slot_cache = self._slot_step(
+            self.params, self._last_tok, self._slot_cache,
+            self._active_mask)
+        self._last_tok = tok
+        self.stats.decode_steps += 1
+        self.stats.tokens_out += sum(self._slot_active)
+        return tok
+
+    def slot_active(self, slot: int) -> bool:
+        return self._slot_active[slot]
+
+
+def _slot_decode_step(api, params, tok, cache, active):
+    logits, cache = api.decode_step(params, tok, cache)
+    # vacant rows' positions stay pinned at 0: decode_step increments pos
+    # for every row, and an un-pinned vacant row would creep back to
+    # full-cache attention cost within cache_len steps
+    cache["pos"] = jnp.where(active, cache["pos"], 0)
+    return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+
+def _write_slot(big, one, slot):
+    """Write a batch-1 cache into row ``slot`` of a slotted cache. Every
+    stacked leaf is (layers, batch, ...); the position vector is (batch,)."""
+    def wr(b_leaf, o_leaf):
+        o_leaf = o_leaf.astype(b_leaf.dtype)
+        axis = 0 if b_leaf.ndim == 1 else 1
+        return jax.lax.dynamic_update_slice_in_dim(b_leaf, o_leaf, slot,
+                                                   axis=axis)
+    return jax.tree.map(wr, big, one)
 
 
 def make_engine(cfg, *, seed: int = 0, cache_len: int = 256,

@@ -76,7 +76,9 @@ def test_reduced_serve_path(arch):
     logits2, cache = api.decode_step(params, tok, cache)
     assert logits2.shape == (2, cfg.vocab_size)
     assert jnp.isfinite(logits2).all()
-    assert int(cache["pos"]) == 17
+    # pos is a per-sequence (B,) vector (ragged decode / slot batching)
+    assert cache["pos"].shape == (2,)
+    assert int(cache["pos"][0]) == 17
 
 
 def test_param_counts_match_plan():

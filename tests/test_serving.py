@@ -57,7 +57,7 @@ def test_ring_cache_wraps_beyond_window():
         logits, cache = api.decode_step(params, tok, cache)
         assert bool(jnp.isfinite(logits).all())
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    assert int(cache["pos"]) == 24
+    assert int(cache["pos"][0]) == 24
 
 
 # ------------------------------------------------------------- requests --
