@@ -22,6 +22,7 @@ MODULES = [
     "roofline",
     "kernels_micro",
     "bench_decode",
+    "bench_pool",
 ]
 
 

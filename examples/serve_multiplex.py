@@ -1,132 +1,54 @@
 """END-TO-END DRIVER: D-STACK multiplexing real models with batched requests.
 
-Four reduced-config models share one "pod" (this host). Requests arrive on
-a Poisson-ish process; D-STACK decides, at every step, which model runs
-next — and the chosen model executes a REAL jitted decode step through the
-InferenceEngine's slot-based continuous batching: arriving requests are
-prefilled and inserted into free KV-cache slots MID-STREAM (no repadding,
-no recompiling, no disturbing in-flight sequences), every engine step
-decodes one token for all of that model's active slots in a single
-dispatch, and finished requests free their slot for the next arrival.
+Thin wrapper over the serving control plane (``repro.serving.pool`` +
+``repro.serving.controller``): the SAME faithful policy objects that drive
+the analytic simulator (``repro.core.scheduler``) here drive a pool of
+real jitted slot engines — arriving requests are prefilled and inserted
+into free KV-cache slots mid-stream, every engine step decodes one token
+for all of that engine's active slots in a single dispatch, and a policy's
+chip-fraction decision selects a standby engine compiled up front for that
+allocation (no per-request recompilation).
 
-    PYTHONPATH=src python examples/serve_multiplex.py [--duration 10]
+Virtual time comes from the profile rooflines (so the spatial-packing
+advantage D-STACK banks on is visible even though this host is one CPU
+core — a purely temporal device); every decode step is still a real
+dispatch, and the wall clock that took is printed alongside.
+
+    PYTHONPATH=src python examples/serve_multiplex.py [--duration 0.05]
 """
 import argparse
-import time
 
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.core.profiles import build_profile
-from repro.serving import frontend
-from repro.serving.engine import make_engine
-from repro.serving.request import RequestGenerator, RequestQueue
+from repro.serving.controller import run_policy
+from repro.serving.pool import build_pool
 
 MODELS = ["qwen2-0.5b", "mamba2-1.3b", "olmo-1b", "whisper-small"]
-N_SLOTS = 4
-PROMPT_LEN = 8
-
-
-def _prompt_batch(cfg, b=1):
-    batch = {"tokens": jnp.ones((b, PROMPT_LEN), jnp.int32)}
-    if cfg.has_encoder:
-        batch["enc_embeds"] = frontend.audio_frames(cfg, b)
-    return batch
-
-
-def run(policy_name: str, duration: float, rate: float, gen_len: int = 4):
-    engines, profiles, queues, gens = {}, {}, {}, []
-    for i, name in enumerate(MODELS):
-        cfg = get_config(name).reduced()
-        engines[cfg.name] = make_engine(cfg, cache_len=32).init_slots(N_SLOTS)
-        prof = build_profile(name, request_rate=rate)
-        profiles[prof.name] = prof
-        queues[prof.name] = RequestQueue(prof.name, prof.slo)
-        gens.append(RequestGenerator(prof.name, rate, slo=10.0, seed=i))
-
-    # warm up the jit caches (insert prefill + slot decode) so the measured
-    # loop is execution only
-    for name, eng in engines.items():
-        s = eng.insert(_prompt_batch(eng.cfg))
-        eng.step()
-        eng.free(s)
-
-    arrivals = []
-    for g in gens:
-        arrivals.extend(g.until(duration * 20))   # over-generate; clock gates
-    arrivals.sort(key=lambda r: r.arrival)
-
-    served = {n: 0 for n in engines}
-    # slot -> (request, tokens generated so far), per engine
-    in_flight = {n: {} for n in engines}
-    t0 = time.time()
-    ai = 0
-    order = sorted(engines)
-    rr = 0
-    while time.time() - t0 < duration:
-        now = time.time() - t0
-        while ai < len(arrivals) and arrivals[ai].arrival <= now:
-            queues[arrivals[ai].model].push(arrivals[ai])
-            ai += 1
-        # admit queued requests into free slots mid-stream (continuous
-        # batching: in-flight sequences in other slots are untouched)
-        for n in order:
-            eng = engines[n]
-            while eng.free_slots and len(queues[n]) > 0:
-                (req,) = queues[n].pop_batch(1, now, drop_expired=False)
-                slot = eng.insert(_prompt_batch(eng.cfg))
-                in_flight[n][slot] = (req, 0)
-        # pick next model to step: D-STACK = least-served fairness + queue
-        # pressure; temporal = round robin
-        busy = [n for n in order if in_flight[n]]
-        if not busy:
-            time.sleep(0.002)
-            continue
-        if policy_name == "dstack":
-            _, name = min((served[n] * profiles[n].runtime(), n) for n in busy)
-        else:
-            name = busy[rr % len(busy)]
-            rr += 1
-        eng = engines[name]
-        eng.step()                                # ONE dispatch, all slots
-        now = time.time() - t0
-        for slot in list(in_flight[name]):
-            req, done = in_flight[name][slot]
-            done += 1
-            if done >= gen_len:
-                queues[name].complete([req], now)
-                eng.free(slot)
-                del in_flight[name][slot]
-                served[name] += 1
-            else:
-                in_flight[name][slot] = (req, done)
-
-    total = sum(served.values())
-    wall = time.time() - t0
-    print(f"  policy={policy_name:8s} served={total:5d} "
-          f"({total/wall:7.1f} req/s) per-model=" +
-          " ".join(f"{n.split('-')[0]}:{c}" for n, c in served.items()))
-    return total / wall
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--duration", type=float, default=8.0)
-    ap.add_argument("--rate", type=float, default=200.0)
+    ap.add_argument("--duration", type=float, default=0.05,
+                    help="virtual seconds of offered load per policy")
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="arrivals/s per model (virtual time)")
+    ap.add_argument("--gen-len", type=int, default=4)
     args = ap.parse_args()
-    print(f"serving {len(MODELS)} real reduced models for "
-          f"{args.duration:.0f}s each policy "
-          f"(slot-based continuous batching, {N_SLOTS} slots/model) ...")
-    print("NOTE: this host is ONE CPU core — a purely temporal device, so "
-          "D-STACK's spatial-packing advantage cannot show in wall clock "
-          "here; what this driver demonstrates is the real jitted data "
-          "plane (slot insert/free continuous batching, ragged decode) "
-          "under scheduler control + fairness across models. The spatial "
-          "win is quantified in the pod simulator "
-          "(python -m repro.launch.serve --mode sim).")
-    thr_t = run("temporal", args.duration, args.rate)
-    thr_d = run("dstack", args.duration, args.rate)
-    print(f"  dstack/temporal wall-clock ratio on 1 core: {thr_d/thr_t:.2f}x")
+
+    print(f"building engine pool: {len(MODELS)} real reduced models, "
+          "standby engines per allocation (compiled once, up front) ...")
+    pool = build_pool(MODELS, request_rate=args.rate, base_slots=4,
+                      cache_len=32)
+    results = {}
+    for pol in ("temporal", "dstack"):
+        res = run_policy(pool, pol, rate=args.rate, duration=args.duration,
+                         gen_len=args.gen_len)
+        results[pol] = res
+        for line in res.table_rows():
+            print(line)
+    ratio = results["dstack"].throughput() / max(
+        results["temporal"].throughput(), 1e-9)
+    print(f"  dstack/temporal virtual-throughput ratio: {ratio:.2f}x "
+          f"(same engines, same arrivals; spatial packing is the paper's "
+          f"§6 win)")
 
 
 if __name__ == "__main__":

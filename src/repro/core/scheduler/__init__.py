@@ -1,4 +1,4 @@
-from repro.core.scheduler.base import Policy, chips_for_frac
+from repro.core.scheduler.base import Policy, SchedView, chips_for_frac
 from repro.core.scheduler.baselines import (
     FixedBatchMPSPolicy, GSLICEPolicy, MaxMinPolicy, MaxThroughputPolicy,
     TemporalPolicy, TritonPolicy)
@@ -16,7 +16,7 @@ POLICIES = {
 }
 
 __all__ = [
-    "Policy", "chips_for_frac", "POLICIES", "TemporalPolicy",
+    "Policy", "SchedView", "chips_for_frac", "POLICIES", "TemporalPolicy",
     "FixedBatchMPSPolicy", "GSLICEPolicy", "TritonPolicy", "MaxMinPolicy",
     "MaxThroughputPolicy", "DStackPolicy", "IdealSimulator",
 ]

@@ -2,24 +2,51 @@
 from __future__ import annotations
 
 import math
-from typing import List, Protocol
+from typing import Any, Dict, List, Protocol, runtime_checkable
 
 from repro.core.simulator import RunRequest
+
+
+@runtime_checkable
+class SchedView(Protocol):
+    """What a ``Policy`` may observe at a planning point — the adapter
+    between the control plane's policy objects and whichever data plane is
+    underneath. Both the analytic ``repro.core.simulator.Simulator`` and the
+    real-engine ``repro.serving.pool.EnginePool`` implement this, so the
+    same policy instances drive either without modification:
+
+      profiles    name -> ModelProfile (latency fn, knee, SLO, operating pt)
+      queues      name -> RequestQueue (len, oldest_deadline)
+      running     in-flight runs; each exposes at least ``.model``/``.frac``
+      free_frac   1 - aggregate allocated chip fraction at ``now``
+      sim         capacity config: ``.total_chips`` and ``.dispatch_gap``
+    """
+
+    profiles: Dict[str, Any]
+    queues: Dict[str, Any]
+    sim: Any
+
+    @property
+    def running(self) -> List[Any]: ...
+
+    def free_frac(self, now: float) -> float: ...
 
 
 class Policy(Protocol):
     name: str
 
-    def plan(self, now: float, sim) -> List[RunRequest]:
+    def plan(self, now: float, sim: SchedView) -> List[RunRequest]:
         ...
 
     def next_wakeup(self, now: float) -> float:
         return math.inf
 
 
-def chips_for_frac(frac: float, total: int = 256) -> int:
+def chips_for_frac(frac: float, total: int) -> int:
     """Largest power-of-two chip count <= frac·total (sub-meshes are
-    rectangular power-of-two slices of the torus)."""
+    rectangular power-of-two slices of the torus). ``total`` is the hosting
+    pod's chip count — pass the profile's ``hw.chips_per_pod`` rather than
+    assuming a 256-chip pod."""
     c = int(frac * total + 1e-9)
     if c <= 0:
         return 0

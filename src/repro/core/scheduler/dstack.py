@@ -23,8 +23,6 @@ from typing import Dict, List
 from repro.core.scheduler.base import running_models
 from repro.core.simulator import RunRequest
 
-CHIP_STEPS = (256, 128, 64, 32, 16, 8, 4, 2, 1)
-
 
 class DStackPolicy:
     name = "dstack"
@@ -66,13 +64,16 @@ class DStackPolicy:
                        max(prof.knee_chips, prof.opt_chips))
         return prof.opt_chips
 
-    def _fit_chips(self, prof, want: int, free_chips: int) -> int:
-        """Largest power-of-two allocation <= min(want, free), >= min fit."""
-        lo = prof.min_chips()
-        for c in CHIP_STEPS:
-            if c <= min(want, free_chips) and c >= lo:
-                return c
-        return 0
+    def _fit_chips(self, prof, want: int, free_chips: int,
+                   total: int) -> int:
+        """Largest power-of-two allocation <= min(want, free, pod), >= min
+        fit — steps derive from the pod size, not a hard-coded 256-chip
+        table (pods are not always 256 chips)."""
+        cap = min(want, free_chips, total)
+        if cap < 1:
+            return 0
+        c = 1 << (int(cap).bit_length() - 1)
+        return c if c >= prof.min_chips() else 0
 
     # ---------------------------------------------------------------- plan
     def plan(self, now: float, sim) -> List[RunRequest]:
@@ -99,7 +100,7 @@ class DStackPolicy:
                 continue
             prof = sim.profiles[n]
             want = self._want_chips(prof, len(sim.queues[n]))
-            chips = self._fit_chips(prof, want, free_chips)
+            chips = self._fit_chips(prof, want, free_chips, total)
             if chips == 0:
                 continue
             budget = max(ddl - now, prof.slo / 2)
@@ -117,7 +118,7 @@ class DStackPolicy:
         for _, n in avail:
             prof = sim.profiles[n]
             want = self._want_chips(prof, len(sim.queues[n]))
-            chips = self._fit_chips(prof, want, free_chips)
+            chips = self._fit_chips(prof, want, free_chips, total)
             if chips == 0:
                 continue
             # budget: must clear before this model's own deadline AND leave

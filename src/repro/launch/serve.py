@@ -3,20 +3,20 @@
 Two modes:
   * ``--mode sim``  — full-fidelity control-plane simulation on the
     roofline latency model (any subset of the 10 archs, production rates).
-  * ``--mode real`` — end-to-end on this host: reduced-config models, real
-    jitted prefill/decode through the InferenceEngine, D-STACK making the
-    run decisions with wall-clock latencies.
+  * ``--mode real`` — end-to-end on this host through the engine pool
+    (``repro.serving.pool``): reduced-config models, real jitted
+    prefill/decode through standby InferenceEngines, the chosen policy
+    making every run decision (chips, batch, order).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --mode sim \
       --models qwen2-0.5b,mamba2-1.3b,deepseek-7b,yi-9b --duration 5
   PYTHONPATH=src python -m repro.launch.serve --mode real \
-      --models qwen2-0.5b,olmo-1b --requests 64
+      --models qwen2-0.5b,olmo-1b --duration 0.05 --policy dstack
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 
 def run_sim(model_names, duration: float, policy_name: str, rate: float):
@@ -42,30 +42,24 @@ def run_sim(model_names, duration: float, policy_name: str, rate: float):
     return res
 
 
-def run_real(model_names, n_requests: int, prompt_len: int = 32,
-             gen_len: int = 8):
-    import jax.numpy as jnp
-    from repro.configs import get_config
-    from repro.serving.engine import make_engine
+def run_real(model_names, duration: float, policy_name: str, rate: float,
+             gen_len: int = 4):
+    """Thin wrapper over the engine pool: the named policy drives real
+    jitted slot engines end to end (standby allocations compiled once)."""
+    from repro.serving.controller import run_policy
+    from repro.serving.pool import build_pool
 
-    engines = {}
-    for n in model_names:
-        cfg = get_config(n).reduced()
-        engines[n] = make_engine(cfg, cache_len=prompt_len + gen_len + 8)
-        print(f"  built engine for {cfg.name} (reduced)")
-    t0 = time.time()
-    served = 0
-    for n, eng in engines.items():
-        batch = {"tokens": jnp.ones((4, prompt_len), jnp.int32)}
-        if eng.cfg.has_encoder:
-            from repro.serving import frontend
-            batch["enc_embeds"] = frontend.audio_frames(eng.cfg, 4)
-        for _ in range(max(1, n_requests // 4)):
-            out = eng.generate(batch, gen_len)
-            served += out.shape[0]
-    dt = time.time() - t0
-    print(f"served {served} requests across {len(engines)} models "
-          f"in {dt:.2f}s ({served/dt:.1f} req/s on CPU)")
+    pool = build_pool(model_names, request_rate=rate, base_slots=4,
+                      cache_len=32)
+    for n, host in sorted(pool.hosts.items()):
+        allocs = ", ".join(f"{a.chips}ch/{a.n_slots}sl"
+                           for a in host.allocations.values())
+        print(f"  {n:26s} standby engines: {allocs}")
+    res = run_policy(pool, policy_name, rate=rate, duration=duration,
+                     gen_len=gen_len)
+    for line in res.table_rows():
+        print(line)
+    return res
 
 
 def main() -> None:
@@ -74,15 +68,19 @@ def main() -> None:
     ap.add_argument("--models",
                     default="qwen2-0.5b,mamba2-1.3b,deepseek-7b,yi-9b")
     ap.add_argument("--policy", default="dstack")
-    ap.add_argument("--duration", type=float, default=5.0)
+    ap.add_argument("--duration", type=float, default=None,
+                    help="virtual seconds (default: 5.0 sim, 0.05 real)")
     ap.add_argument("--rate", type=float, default=2000.0)
-    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=4)
     args = ap.parse_args()
     names = args.models.split(",")
     if args.mode == "sim":
-        run_sim(names, args.duration, args.policy, args.rate)
+        dur = args.duration if args.duration is not None else 5.0
+        run_sim(names, dur, args.policy, args.rate)
     else:
-        run_real(names, args.requests)
+        # real mode defaults to a CPU-sized virtual duration
+        dur = args.duration if args.duration is not None else 0.05
+        run_real(names, dur, args.policy, args.rate, gen_len=args.gen_len)
 
 
 if __name__ == "__main__":

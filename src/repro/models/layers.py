@@ -419,6 +419,48 @@ def apply_mlp(p, x):
 
 
 # --------------------------------------------------------------------------
+# sampling
+# --------------------------------------------------------------------------
+def top_k_top_p_filter(logits: jax.Array, *, top_k: int = 0,
+                       top_p: float = 1.0) -> jax.Array:
+    """Mask logits outside the top-k set and/or the top-p nucleus to -1e30.
+
+    ``top_k``/``top_p`` are static Python values, so this is jit-safe inside
+    the decode scan body — each (top_k, top_p) pair is one executable, not a
+    per-step branch. The arg-max token is always kept, so a degenerate
+    ``top_p`` can never mask the whole vocabulary."""
+    if top_k and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if top_p < 1.0:
+        srt = jnp.sort(logits, axis=-1)[..., ::-1]          # descending
+        probs = jax.nn.softmax(srt.astype(jnp.float32), axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep tokens whose cumulative mass BEFORE them is < top_p
+        keep = (cum - probs) < top_p
+        keep = keep.at[..., 0].set(True)
+        thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                         keepdims=True).astype(logits.dtype)
+        logits = jnp.where(logits < thresh, -1e30, logits)
+    return logits
+
+
+def sample_logits(rng: jax.Array, logits: jax.Array, *,
+                  temperature: float = 1.0, top_k: int = 0,
+                  top_p: float = 1.0) -> jax.Array:
+    """Draw next tokens (B,) int32 from (B, V) logits.
+
+    temperature <= 0 degenerates to greedy arg-max (bit-exact with the
+    greedy decode path); otherwise temperature-scaled top-k/top-p
+    (nucleus) sampling via Gumbel trick (``jax.random.categorical``)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    lg = top_k_top_p_filter(lg, top_k=top_k, top_p=top_p)
+    return jax.random.categorical(rng, lg).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
 # embeddings / unembedding
 # --------------------------------------------------------------------------
 def embed_plan(cfg) -> dict:

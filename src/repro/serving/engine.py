@@ -49,11 +49,22 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models import layers as L
 from repro.models.registry import ModelAPI
 
 
 def _pow2_at_least(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Static sampling configuration — hashable, so it is part of the jitted
+    generate executable's cache key (one executable per distinct setting,
+    reused across requests). temperature <= 0 means greedy arg-max."""
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
 
 
 @dataclasses.dataclass
@@ -66,13 +77,19 @@ class EngineStats:
 
 class InferenceEngine:
     def __init__(self, api: ModelAPI, params, *, cache_len: int = 256,
-                 mesh=None, donate_cache: bool = True):
+                 mesh=None, donate_cache: bool = True,
+                 alloc_chips: Optional[int] = None):
         self.api = api
         self.cfg = api.cfg
         self.params = params
         self.cache_len = cache_len
         self.mesh = mesh
         self.donate_cache = donate_cache
+        # chip count of the sub-mesh this engine's executables are compiled
+        # for — purely a label on this host, but the EnginePool keys standby
+        # engines by it (the paper's re-allocation story: switching
+        # allocation = switching to a pre-built engine, never recompiling)
+        self.alloc_chips = alloc_chips
         self.stats = EngineStats()
 
         if mesh is not None:
@@ -126,23 +143,28 @@ class InferenceEngine:
         return logits, cache
 
     # ------------------------------------------------------------------
-    def _gen_fn(self, max_new_tokens: int, greedy: bool):
-        key = (max_new_tokens, greedy)
+    def _gen_fn(self, max_new_tokens: int, greedy: bool,
+                sampling: SamplingParams):
+        key = (max_new_tokens, greedy, sampling)
         fn = self._gen_jit.get(key)
         if fn is None:
             api = self.api
 
+            def pick(rng, lg):
+                if greedy:
+                    return rng, jnp.argmax(lg, -1).astype(jnp.int32)
+                rng, sub = jax.random.split(rng)
+                return rng, L.sample_logits(
+                    sub, lg, temperature=sampling.temperature,
+                    top_k=sampling.top_k, top_p=sampling.top_p)
+
             def gen(params, logits, cache, rng):
-                tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+                rng, tok0 = pick(rng, logits)
 
                 def body(carry, _):
                     tok, cache, rng = carry
                     lg, cache = api.decode_step(params, tok, cache)
-                    if greedy:
-                        nxt = jnp.argmax(lg, -1).astype(jnp.int32)
-                    else:
-                        rng, sub = jax.random.split(rng)
-                        nxt = jax.random.categorical(sub, lg).astype(jnp.int32)
+                    rng, nxt = pick(rng, lg)
                     return (nxt, cache, rng), tok
 
                 (_, cache, _), toks = jax.lax.scan(
@@ -156,21 +178,28 @@ class InferenceEngine:
         return fn
 
     def generate(self, batch: Dict[str, Any], max_new_tokens: int,
-                 greedy: bool = True, rng: Optional[jax.Array] = None):
+                 greedy: bool = True, rng: Optional[jax.Array] = None,
+                 sampling: Optional[SamplingParams] = None):
         """Prefill + one fused scan over all decode steps (single dispatch).
 
         Returns (B, max_new_tokens). Bit-equivalent to ``generate_eager``
-        under greedy decoding. The scan length is bucketed to a power of
-        two (like the cache length) so a stream of varying generation
-        lengths compiles O(log) executables, not one per distinct length;
-        surplus tokens are discarded."""
+        under greedy decoding. Passing ``sampling`` switches the scan body
+        to temperature/top-k/top-p sampling (greedy is ignored); the
+        sampler runs INSIDE the fused loop, so sampled generation still
+        costs one dispatch per call. The scan length is bucketed to a
+        power of two (like the cache length) so a stream of varying
+        generation lengths compiles O(log) executables per sampling
+        config, not one per distinct length; surplus tokens discarded."""
+        if sampling is not None:
+            greedy = False
+        sampling = sampling or SamplingParams()
         b = batch["tokens"].shape[0]
         t_bucket = max(1, _pow2_at_least(max_new_tokens))
         need = batch["tokens"].shape[1] + t_bucket
         logits, cache = self.prefill(batch, self.bucket_len(need))
         if rng is None:
             rng = jax.random.PRNGKey(0)
-        toks, _ = self._gen_fn(t_bucket, greedy)(
+        toks, _ = self._gen_fn(t_bucket, greedy, sampling)(
             self.params, logits, cache, rng)
         self.stats.decode_steps += t_bucket
         self.stats.tokens_out += b * max_new_tokens
@@ -271,6 +300,44 @@ class InferenceEngine:
 
     def slot_active(self, slot: int) -> bool:
         return self._slot_active[slot]
+
+    # --------------------------------------------- pool accounting hooks
+    def release_all_slots(self) -> None:
+        """Force-free every slot (pool reset between policy runs)."""
+        for slot, active in enumerate(self._slot_active):
+            if active:
+                self.free(slot)
+
+    def reset_stats(self) -> None:
+        """Zero the counters WITHOUT touching the jit caches — the pool
+        warms executables once, then resets before the measured run."""
+        self.stats = EngineStats()
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Executable-cache cardinality, for asserting the pool's
+        no-per-request-recompilation invariant. Counts traced signatures
+        where jax exposes them (``_cache_size``), else cache-key entries."""
+        def n(fn) -> int:
+            try:
+                return fn._cache_size()
+            except (AttributeError, TypeError):
+                # private jax API gone: fall back to counting the function
+                # itself — new cache keys are still caught, intra-key
+                # retraces are not. Warn so the no-recompilation check
+                # can't degrade silently.
+                import warnings
+                warnings.warn(
+                    "jax private _cache_size() unavailable; recompilation "
+                    "accounting degrades to cache-key counting",
+                    RuntimeWarning, stacklevel=2)
+                return 1
+        return {
+            "prefill": sum(n(f) for f in self._prefill_jit.values()),
+            "generate": sum(n(f) for f in self._gen_jit.values()),
+            "decode": n(self._decode),
+            "slot_step": n(self._slot_step),
+            "write_slot": n(self._write_slot),
+        }
 
 
 def _slot_decode_step(api, params, tok, cache, active):

@@ -1,0 +1,374 @@
+"""Policy-driven engine pool: D-STACK's control plane over real engines.
+
+This module is the serving control plane the paper builds in §6, realized
+over the real jitted data plane of ``repro.serving.engine`` instead of the
+analytic simulator. Component → paper map:
+
+* **StandbyAllocation / ModelHost** — §3.2 + §6.1.2. On GPUs, one model at
+  one GPU% is a CUDA-MPS process with a fixed thread percentage; here it is
+  one ``InferenceEngine`` whose executables are compiled for one sub-mesh
+  chip count. A host keeps one *standby* engine per candidate allocation
+  (all sharing one set of weights), compiled once up front — so a policy's
+  chip-fraction decision *selects a pre-built executable*; re-allocation is
+  an engine switch, never a recompile (the paper's fast re-allocation
+  story, and this repo's acceptance bar of zero per-request compilation).
+
+* **EnginePool (a SchedView)** — the policy↔data-plane adapter. The same
+  ``plan(now, view)`` that drives ``repro.core.simulator.Simulator`` drives
+  this pool: it exposes ``profiles`` / ``queues`` / ``running`` /
+  ``free_frac`` / ``sim.total_chips``, and enforces the §6 invariant that
+  aggregate allocated chip fraction never exceeds 1.0 (except for policies
+  that explicitly model uncontrolled sharing, e.g. Fixed-Batch MPS).
+
+* **Admission (``admit``)** — §6.1 + Eq. 11/12. The policy sizes each run's
+  batch with ``ModelProfile.feasible_batch_for`` (largest batch whose
+  assembly + inference fits the SLO budget); admission additionally caps it
+  to the chosen engine's free KV-cache slots, prefills each request into a
+  slot mid-stream (continuous batching), and charges the model's runtime
+  scoreboard — the quantity D-STACK's fair opportunistic pass (§6.1.1)
+  equalizes.
+
+* **PoolMetrics** (``repro.serving.metrics``) — §7/Fig. 10 reporting:
+  per-model throughput, completion-latency p50/p99, SLO violations
+  (dropped *and* late-but-served), runtime shares and their Jain fairness
+  index, and allocation occupancy.
+
+Time is virtual (discrete-event, from the profile's roofline latency at
+the *granted* allocation) while every decode step is a real jitted
+dispatch — so policy comparisons are deterministic and SLO-meaningful on a
+one-core host, yet exercise the true engine hot path end to end. The
+driver loop lives in ``repro.serving.controller``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profiles import ModelProfile, build_profile
+from repro.core.simulator import RunRequest
+from repro.serving.engine import InferenceEngine
+from repro.serving.metrics import ModelPoolMetrics, PoolResult
+from repro.serving.request import Request, RequestQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolCaps:
+    """Capacity config — the ``view.sim`` leg of the SchedView protocol."""
+    total_chips: int
+    dispatch_gap: float = 100e-6
+
+
+@dataclasses.dataclass
+class StandbyAllocation:
+    """One pre-built (sub-mesh, executable) pair for a hosted model."""
+    chips: int
+    n_slots: int
+    engine: InferenceEngine
+
+
+class ModelHost:
+    """One hosted model: shared weights + standby engines keyed by chips."""
+
+    def __init__(self, cfg, api, params, profile: ModelProfile,
+                 allocations: Dict[int, StandbyAllocation],
+                 prompt_len: int = 8):
+        self.cfg = cfg
+        self.api = api
+        self.params = params
+        self.profile = profile
+        self.allocations = allocations
+        self.prompt_len = prompt_len
+        self._prompt = None
+
+    def prompt_batch(self) -> Dict[str, jax.Array]:
+        """Deterministic single-request prompt (fixed shape: one traced
+        prefill signature per engine for the whole workload)."""
+        if self._prompt is None:
+            b = {"tokens": jnp.ones((1, self.prompt_len), jnp.int32)}
+            if self.cfg.has_encoder:
+                from repro.serving import frontend
+                b["enc_embeds"] = frontend.audio_frames(self.cfg, 1)
+            self._prompt = b
+        return self._prompt
+
+    def engines(self) -> List[InferenceEngine]:
+        return [a.engine for a in self.allocations.values()]
+
+
+@dataclasses.dataclass
+class PoolRun:
+    """One in-flight (model, allocation, batch) run — the pool analogue of
+    ``simulator.Run``; policies see ``.model`` and ``.frac``."""
+    seq: int
+    model: str
+    req_chips: int             # what the policy asked for
+    chips: int                 # granted (largest standby allocation <= ask)
+    frac: float
+    batch: int
+    engine: InferenceEngine
+    slots: Dict[int, Request]
+    remaining: Dict[int, int]  # decode tokens left per slot
+    latency: float             # modeled total run latency at granted chips
+    step_cost: float           # latency / gen_len — virtual cost per step
+    start: float
+    next_time: float
+
+
+class EnginePool:
+    """A pool of slot engines that any ``Policy`` can drive (SchedView)."""
+
+    def __init__(self, hosts: Dict[str, ModelHost],
+                 caps: Optional[PoolCaps] = None):
+        self.hosts = hosts
+        self.profiles: Dict[str, ModelProfile] = {
+            n: h.profile for n, h in hosts.items()}
+        total = max(p.hw.chips_per_pod for p in self.profiles.values())
+        self.sim = caps or PoolCaps(total_chips=total)
+        self.queues: Dict[str, RequestQueue] = {}
+        self._runs: Dict[int, PoolRun] = {}
+        self._metrics: Dict[str, ModelPoolMetrics] = {}
+        self._seq = 0
+        self._alloc_frac = 0.0
+        self._occ_area = 0.0
+        self._last_t = 0.0
+        self.reset()
+
+    # ------------------------------------------------- SchedView protocol
+    @property
+    def running(self) -> List[PoolRun]:
+        return list(self._runs.values())
+
+    def free_frac(self, now: float) -> float:
+        return 1.0 - self._alloc_frac
+
+    # --------------------------------------------------------- lifecycle
+    def reset(self) -> None:
+        """Fresh queues/metrics/clock; engines keep their compiled
+        executables (reuse the pool across policies without re-warming)."""
+        self.queues = {n: RequestQueue(n, p.slo)
+                       for n, p in self.profiles.items()}
+        self._metrics = {n: ModelPoolMetrics() for n in self.profiles}
+        self._runs.clear()
+        self._seq = 0
+        self._alloc_frac = 0.0
+        self._occ_area = 0.0
+        self._last_t = 0.0
+        for host in self.hosts.values():
+            for eng in host.engines():
+                eng.release_all_slots()
+                eng.reset_stats()
+
+    def warmup(self) -> None:
+        """Compile every standby engine's insert-prefill + slot-step path
+        once, up front — after this, serving recompiles nothing."""
+        for host in self.hosts.values():
+            for eng in host.engines():
+                slot = eng.insert(host.prompt_batch())
+                eng.step()
+                eng.free(slot)
+        self.reset()
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for n, host in self.hosts.items():
+            for alloc in host.allocations.values():
+                for k, v in alloc.engine.jit_cache_sizes().items():
+                    out[f"{n}/{alloc.chips}ch/{k}"] = v
+        return out
+
+    # ----------------------------------------------------------- serving
+    def push(self, req: Request) -> None:
+        self.queues[req.model].push(req)
+
+    def advance_time(self, t: float) -> None:
+        """Accumulate allocation occupancy up to ``t`` (controller owns
+        the clock and calls this before moving ``now`` forward)."""
+        self._occ_area += min(self._alloc_frac, 1.0) * (t - self._last_t)
+        self._last_t = t
+
+    def admit(self, rr: RunRequest, now: float, gen_len: int,
+              drop_expired: bool = True) -> Optional[PoolRun]:
+        """Translate one policy ``RunRequest`` into an engine run.
+
+        Grants the largest standby allocation <= the requested chips (the
+        paper's power-of-two sub-mesh quantization; the latency cost of the
+        rounding is charged to the run), caps the batch to the engine's
+        free slots, prefills each admitted request into a slot, and books
+        the allocation. When the ask is below every standby engine, the
+        smallest pre-built one runs instead IF it fits free capacity — a
+        real system can only run allocations it has executables for
+        (GSLICE's over-committed partitions depend on this). The granted
+        chips are what is booked, and every divergence from the policy's
+        own ledger stays visible: ``alloc_upgrades`` counts fallbacks to a
+        bigger-than-asked engine, ``alloc_downgrades`` counts runs granted
+        fewer chips than asked (quantization between standby points, or
+        capacity pressure) whose latency exceeds what the policy budgeted.
+        Returns None when nothing could start (model already running, no
+        queue, no slots, or no capacity)."""
+        host = self.hosts.get(rr.model)
+        if host is None:
+            return None
+        if any(r.model == rr.model for r in self._runs.values()):
+            return None                       # one run per model at a time
+        q = self.queues[rr.model]
+        if len(q) == 0:
+            return None
+        total = self.sim.total_chips
+        free = self.free_frac(now)
+        fitting = sorted((c for c in host.allocations if c <= rr.chips),
+                         reverse=True)
+        upgraded = not fitting
+        cands = fitting or [min(host.allocations)]
+        alloc = None
+        for c in cands:
+            if rr.oversubscribe or c / total <= free + 1e-9:
+                alloc = host.allocations[c]
+                break
+        downgraded = (alloc is not None and not upgraded
+                      and alloc.chips < min(rr.chips, total))
+        if alloc is None or alloc.engine.free_slots == 0:
+            return None
+        batch = q.pop_batch(min(rr.batch, alloc.engine.free_slots), now,
+                            drop_expired)
+        if not batch:
+            return None
+        prof = self.profiles[rr.model]
+        lat = prof.latency(alloc.chips, len(batch)) * rr.dilation
+        gen_len = max(1, gen_len)
+        run = PoolRun(
+            seq=self._seq, model=rr.model, req_chips=rr.chips,
+            chips=alloc.chips, frac=alloc.chips / total,
+            batch=len(batch), engine=alloc.engine, slots={}, remaining={},
+            latency=lat, step_cost=lat / gen_len, start=now,
+            next_time=now + self.sim.dispatch_gap + lat / gen_len)
+        for req in batch:
+            slot = alloc.engine.insert(host.prompt_batch())
+            run.slots[slot] = req
+            run.remaining[slot] = gen_len
+        self._seq += 1
+        self._runs[run.seq] = run
+        self._alloc_frac += run.frac
+        m = self._metrics[rr.model]
+        m.runs += 1
+        m.alloc_upgrades += int(upgraded)
+        m.alloc_downgrades += int(downgraded)
+        m.runtime += lat
+        m.chip_seconds += alloc.chips * lat
+        return run
+
+    def step_run(self, run: PoolRun, now: float) -> bool:
+        """One REAL decode dispatch for all of this run's slots; completes
+        and frees slots whose token budget is exhausted. True when the run
+        finished and its allocation was released."""
+        run.engine.step()
+        done: List[Request] = []
+        for slot in list(run.remaining):
+            run.remaining[slot] -= 1
+            if run.remaining[slot] <= 0:
+                run.engine.free(slot)
+                done.append(run.slots.pop(slot))
+                del run.remaining[slot]
+        self._metrics[run.model].tokens += len(done) + len(run.remaining)
+        if done:
+            self.queues[run.model].complete(done, now)
+        if not run.remaining:
+            del self._runs[run.seq]
+            self._alloc_frac -= run.frac
+            if not self._runs:        # re-zero: no float-drift build-up
+                self._alloc_frac = 0.0
+            return True
+        run.next_time = now + run.step_cost
+        return False
+
+    def snapshot(self, policy: str, duration: float, wall_s: float,
+                 steps: int) -> PoolResult:
+        """Fold queue-level SLO accounting into the per-model metrics.
+        Requests still queued at the end count as violations, and requests
+        still decoding in KV slots are reported as ``abandoned`` — both
+        mirror the simulator's accounting (which likewise neither
+        completes nor violates in-flight work at the cutoff), but nothing
+        disappears without a trace."""
+        in_flight: Dict[str, int] = {n: 0 for n in self.queues}
+        for run in self._runs.values():
+            in_flight[run.model] += len(run.slots)
+        per: Dict[str, ModelPoolMetrics] = {}
+        for n, q in self.queues.items():
+            m = self._metrics[n]
+            m.completed = q.completed
+            m.violated = q.violated + len(q)
+            m.dropped = q.dropped
+            m.late = q.late
+            m.abandoned = in_flight[n]
+            m.latencies = list(q.latencies)
+            per[n] = m
+        duration = duration or 1e-9
+        return PoolResult(policy=policy, duration=duration, wall_s=wall_s,
+                          per_model=per, occupancy=self._occ_area / duration,
+                          steps=steps)
+
+
+# --------------------------------------------------------------------------
+# construction
+# --------------------------------------------------------------------------
+def default_allocations(profile: ModelProfile) -> List[int]:
+    """Standby allocation candidates for one model: its efficacy-optimal
+    chips and its knee (§5) — the two operating points D-STACK's dynamic
+    adaptation moves between — plus the full pod, because temporal /
+    Triton-style baselines schedule whole-accelerator runs and must get
+    the latency they budgeted for, not a silently-downgraded sub-mesh."""
+    return sorted({max(1, profile.opt_chips), max(1, profile.knee_chips),
+                   profile.hw.chips_per_pod})
+
+
+def build_host(name: str, *, profile: Optional[ModelProfile] = None,
+               allocations: Optional[Sequence[int]] = None,
+               base_slots: int = 4, cache_len: int = 32,
+               prompt_len: int = 8, seed: int = 0,
+               request_rate: float = 500.0, reduced: bool = True) -> ModelHost:
+    """Build one hosted model: weights once, one standby engine per
+    allocation. Every standby hosts the same ``base_slots`` KV slots so
+    batch capacity is identical across allocations — what the policy's
+    chip choice changes is the run's (modeled) latency, not how much it
+    can batch, which isolates the spatial-allocation effect the paper
+    studies."""
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    profile = profile or build_profile(name, request_rate=request_rate)
+    cfg = get_config(name)
+    if reduced:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    chip_opts = sorted(set(allocations or default_allocations(profile)))
+    standby: Dict[int, StandbyAllocation] = {}
+    for chips in chip_opts:
+        eng = InferenceEngine(api, params, cache_len=cache_len,
+                              alloc_chips=chips).init_slots(base_slots)
+        standby[chips] = StandbyAllocation(chips, base_slots, eng)
+    return ModelHost(cfg, api, params, profile, standby,
+                     prompt_len=prompt_len)
+
+
+def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
+               base_slots: int = 4, cache_len: int = 32, prompt_len: int = 8,
+               allocations: Optional[Dict[str, Sequence[int]]] = None,
+               caps: Optional[PoolCaps] = None, warm: bool = True,
+               reduced: bool = True) -> EnginePool:
+    """Build an EnginePool over reduced real models and (by default) warm
+    every standby executable so the measured run compiles nothing."""
+    hosts: Dict[str, ModelHost] = {}
+    for i, name in enumerate(names):
+        host = build_host(
+            name, allocations=(allocations or {}).get(name),
+            base_slots=base_slots, cache_len=cache_len,
+            prompt_len=prompt_len, seed=i, request_rate=request_rate,
+            reduced=reduced)
+        hosts[host.profile.name] = host
+    pool = EnginePool(hosts, caps=caps)
+    if warm:
+        pool.warmup()
+    return pool

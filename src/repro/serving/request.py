@@ -28,13 +28,19 @@ class Request:
 class RequestQueue:
     """Per-model FIFO with SLO accounting."""
 
-    def __init__(self, model: str, slo: float):
+    def __init__(self, model: str, slo: float, track_latency: bool = True):
         self.model = model
         self.slo = slo
+        self.track_latency = track_latency
         self._q: List[Request] = []
         self.completed = 0
-        self.violated = 0
-        self.dropped = 0
+        self.violated = 0      # expired-at-pop (dropped) + late-but-served
+        self.dropped = 0       # expired before ever being scheduled
+        self.late = 0          # served, but finished past the deadline
+        # arrival -> completion latency of every SERVED request — feeds
+        # p50/p99 reporting (paper §7 tables). O(completed) memory, so the
+        # analytic simulator (which never reads it) opts out.
+        self.latencies: List[float] = []
 
     def push(self, req: Request) -> None:
         heapq.heappush(self._q, req)
@@ -59,10 +65,44 @@ class RequestQueue:
         return batch
 
     def complete(self, batch: List[Request], finish_time: float) -> None:
+        """Record served requests: completion latency (arrival→complete)
+        always, and a violation for every late-but-served completion —
+        serving a request past its deadline is an SLO miss just like
+        dropping it (paper Eq. 11 counts end-to-end latency)."""
         for req in batch:
             self.completed += 1
+            if self.track_latency:
+                self.latencies.append(finish_time - req.arrival)
             if finish_time > req.deadline:
+                self.late += 1
                 self.violated += 1
+
+    def latency_quantile(self, q: float,
+                         default: float = float("nan")) -> float:
+        """Nearest-rank quantile of served completion latencies (q in
+        [0, 1]); ``default`` when nothing completed yet."""
+        from repro.serving.metrics import percentile
+        return percentile(self.latencies, q, default)
+
+
+def materialize_arrivals(generators, horizon: float,
+                         drain: bool = False) -> List[Request]:
+    """Materialize every generator's arrivals in [0, horizon), sorted.
+
+    Shared by the analytic simulator and the engine-pool controller so
+    drain/horizon semantics cannot diverge: a drain run over rate-based
+    generators that produced no arrivals is an error (the pre-fix
+    simulator silently simulated an empty workload)."""
+    arrivals: List[Request] = []
+    for g in generators:
+        arrivals.extend(g.until(max(horizon, 1e-9)))
+    if drain and not arrivals and any(
+            getattr(g, "rate", 0) > 0 for g in generators):
+        raise ValueError(
+            "drain=True with rate-based generators produced no arrivals; "
+            "set arrival_horizon (or duration) > 0")
+    arrivals.sort(key=lambda r: r.arrival)
+    return arrivals
 
 
 class RequestGenerator:

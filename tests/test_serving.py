@@ -83,6 +83,36 @@ def test_request_queue_edf_order():
     assert batch[0].rid == 1                      # oldest first
 
 
+def test_request_queue_records_completion_latency():
+    q = RequestQueue("m", slo=0.05)
+    q.push(Request(arrival=0.0, rid=0, model="m", slo=0.05))
+    q.push(Request(arrival=0.01, rid=1, model="m", slo=0.05))
+    q.complete(q.pop_batch(10, now=0.02), finish_time=0.04)
+    assert q.latencies == pytest.approx([0.04, 0.03])
+    assert q.latency_quantile(0.5) == pytest.approx(0.03)
+    assert q.latency_quantile(0.99) == pytest.approx(0.04)
+    assert q.late == 0
+
+
+def test_request_queue_late_completion_is_violation():
+    """A request SERVED past its deadline is an SLO miss, distinct from
+    one dropped while queued."""
+    q = RequestQueue("m", slo=0.05)
+    q.push(Request(arrival=0.0, rid=0, model="m", slo=0.05))
+    batch = q.pop_batch(1, now=0.04)              # popped in time ...
+    q.complete(batch, finish_time=0.09)           # ... but finished late
+    assert q.completed == 1
+    assert q.late == 1 and q.violated == 1 and q.dropped == 0
+    assert q.latencies == pytest.approx([0.09])
+
+
+def test_latency_quantile_empty_queue_default():
+    import math
+    q = RequestQueue("m", slo=0.05)
+    assert math.isnan(q.latency_quantile(0.5))
+    assert q.latency_quantile(0.5, default=0.0) == 0.0
+
+
 def test_generator_rate_and_determinism():
     g1 = RequestGenerator("m", rate_per_s=1000, slo=0.1, seed=5)
     g2 = RequestGenerator("m", rate_per_s=1000, slo=0.1, seed=5)
