@@ -17,8 +17,18 @@ actually banks on.
    is reported in the derived column; interpret-mode per-block overheads
    make direct kernel timing on CPU meaningless).
 
-CLI: ``python benchmarks/bench_decode.py [--smoke|--full]``; also wired
-into ``benchmarks/run.py``.
+3. **ring vs paged KV slots** (``--paged``) — the same mixed-length
+   request stream served by the ring-slot engine and by the paged engine
+   at an EQUAL KV byte budget. Rings pin ``cache_len`` per admitted
+   request no matter how little it generates; pages pin only the
+   request's prompt + token budget, so more sequences are resident at
+   once (deeper continuous batch → fewer dispatches per served token)
+   and KV bytes per resident request drop. Reported: tokens/s, peak
+   resident sequences, and KV bytes per resident request for both.
+
+CLI: ``python benchmarks/bench_decode.py [--smoke|--full|--paged]``
+(``--paged`` runs section 3 alone; the default modes include it); also
+wired into ``benchmarks/run.py`` and the CI smoke.
 """
 from __future__ import annotations
 
@@ -137,6 +147,77 @@ def bench_ragged(rows, *, cache_len: int, block_k: int, iters: int):
     return t_pad / t_rag
 
 
+def bench_paged(rows, *, n_slots: int, cache_len: int, page_size: int,
+                n_requests: int, gen_range, iters: int = 1):
+    """Serve one mixed-length stream through ring slots and through paged
+    slots holding the SAME KV page budget (ring bytes == paged pool
+    bytes); the paged engine gets surplus slot rows (cheap: a slot row is
+    bookkeeping + lane, pages are the memory) and lets admission be gated
+    by pages instead.
+    """
+    import numpy as np
+    from repro.configs import get_config
+    from repro.serving.engine import make_engine
+
+    cfg = get_config("olmo-1b").reduced()
+    prompt_len = 8
+    total_pages = n_slots * (cache_len // page_size)
+    rng = np.random.default_rng(0)
+    budgets = rng.integers(gen_range[0], gen_range[1] + 1,
+                           size=n_requests).tolist()
+    prompt = {"tokens": jnp.ones((1, prompt_len), jnp.int32)}
+
+    def serve(eng):
+        """Continuous-batching loop: admit whatever fits, step, free done
+        slots as their ragged budgets exhaust."""
+        nxt = 0
+        served = steps = 0
+        peak = 0
+        while served < n_requests:
+            while nxt < n_requests and eng.can_admit(prompt_len,
+                                                     budgets[nxt]):
+                eng.insert(prompt, n_tokens=budgets[nxt])
+                nxt += 1
+            peak = max(peak, eng.n_slots - eng.free_slots)
+            _, done = eng.step()
+            steps += 1
+            for slot in done:
+                eng.free(slot)
+                served += 1
+        return steps, peak
+
+    results = {}
+    for mode in ("ring", "paged"):
+        if mode == "ring":
+            eng = make_engine(cfg, cache_len=cache_len).init_slots(
+                n_slots, paged=False)
+        else:
+            eng = make_engine(cfg, cache_len=cache_len).init_slots(
+                4 * n_slots, paged=True, page_size=page_size,
+                total_pages=total_pages)
+        steps, peak = serve(eng)    # warm + stats (serve is deterministic)
+        t = _time(lambda e=eng: serve(e), iters=iters)
+        toks = sum(budgets)
+        kv_bytes = eng.kv_cache_bytes()
+        results[mode] = (t, steps, peak, kv_bytes)
+        rows.append((f"decode/{mode}_slots_tok_s", t * 1e6,
+                     f"{toks / t:.0f} tok/s ({steps} dispatches)"))
+        rows.append((f"decode/{mode}_peak_resident", 0.0,
+                     f"{peak} seqs in {kv_bytes / 1e6:.2f} MB KV "
+                     f"({kv_bytes / max(1, peak) / 1e3:.0f} KB/seq)"))
+    (t_r, st_r, pk_r, by_r), (t_p, st_p, pk_p, by_p) = (results["ring"],
+                                                        results["paged"])
+    rows.append(("decode/paged_resident_ratio", 0.0,
+                 f"{pk_p / max(1, pk_r):.2f}x more resident seqs at "
+                 f"equal page budget"))
+    rows.append(("decode/paged_kv_bytes_per_seq_ratio", 0.0,
+                 f"{(by_r / max(1, pk_r)) / (by_p / max(1, pk_p)):.2f}x "
+                 f"fewer KV bytes per resident seq"))
+    rows.append(("decode/paged_speedup_vs_ring", 0.0,
+                 f"{t_r / t_p:.2f}x tokens/s"))
+    return pk_p / max(1, pk_r)
+
+
 def run(quick: bool = True, smoke: bool = False):
     rows = []
     if smoke:
@@ -150,6 +231,21 @@ def run(quick: bool = True, smoke: bool = False):
         bench_generate(rows, batch_size=8, gen_tokens=32, iters=3,
                        prompt_lens=(24, 40, 56, 72, 96, 128))
         bench_ragged(rows, cache_len=8192, block_k=512, iters=5)
+    rows.extend(run_paged(quick=quick, smoke=smoke))
+    return rows
+
+
+def run_paged(quick: bool = True, smoke: bool = False):
+    rows = []
+    if smoke:
+        bench_paged(rows, n_slots=2, cache_len=32, page_size=8,
+                    n_requests=8, gen_range=(2, 7), iters=1)
+    elif quick:
+        bench_paged(rows, n_slots=4, cache_len=64, page_size=8,
+                    n_requests=48, gen_range=(4, 40), iters=2)
+    else:
+        bench_paged(rows, n_slots=8, cache_len=128, page_size=8,
+                    n_requests=128, gen_range=(4, 96), iters=3)
     return rows
 
 
@@ -159,9 +255,12 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, 1 iter (CI import-and-run check)")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="ring vs paged KV slots on a mixed-length stream")
     args = ap.parse_args()
+    fn = run_paged if args.paged else run
     print("name,us_per_call,derived")
-    for name, us, derived in run(quick=not args.full, smoke=args.smoke):
+    for name, us, derived in fn(quick=not args.full, smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
 

@@ -15,9 +15,9 @@ import heapq
 import math
 from typing import Dict, List, Optional, Sequence
 
+from repro.core.eventloop import LoopConfig, run_event_loop
 from repro.core.profiles import ModelProfile
-from repro.serving.request import (Request, RequestGenerator, RequestQueue,
-                                   materialize_arrivals)
+from repro.serving.request import Request, RequestGenerator, RequestQueue
 
 
 @dataclasses.dataclass
@@ -158,9 +158,9 @@ class Simulator:
             m.runs += 1
             m.runtime += lat
 
-    def _pop_done(self, now: float) -> List[Run]:
+    def _pop_done(self, now: float, epsilon: float = 1e-12) -> List[Run]:
         done = []
-        while self._end_heap and self._end_heap[0][0] <= now + 1e-12:
+        while self._end_heap and self._end_heap[0][0] <= now + epsilon:
             _, seq = heapq.heappop(self._end_heap)
             run = self._running.pop(seq)
             self._alloc_frac -= run.frac
@@ -180,48 +180,48 @@ class Simulator:
         m.violated = q.violated
         self._makespan = max(self._makespan, now)
 
+    # ----------------------------------------- EventLoopHooks (core loop)
+    # The arrival / epsilon / cutoff / drain semantics live ONCE in
+    # ``repro.core.eventloop`` — the same skeleton drives the real-engine
+    # Controller, so the two planes cannot drift. These hooks are the
+    # analytic machinery the skeleton calls into.
+    def deliver(self, req: Request) -> None:
+        self.queues[req.model].push(req)
+
+    def next_completion(self) -> float:
+        return self._end_heap[0][0] if self._end_heap else math.inf
+
+    def next_wakeup(self, now: float) -> float:
+        return (self.policy.next_wakeup(now)
+                if hasattr(self.policy, "next_wakeup") else math.inf)
+
+    def advance(self, t: float) -> None:
+        self._advance(t)
+
+    def fire(self, now: float, epsilon: float = 1e-12) -> int:
+        # completions (heap pop + incremental accumulator update); atomic
+        # analytic runs dispatch nothing real, so the event cost is 0
+        for r in self._pop_done(now, epsilon):
+            self._finish(r, now)
+        return 0
+
+    def plan(self, now: float) -> None:
+        reqs = self.policy.plan(now, self)
+        if reqs:
+            self._start_runs(now, reqs)
+
+    def drained(self) -> bool:
+        return (not self._running
+                and all(len(q) == 0 for q in self.queues.values()))
+
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
         sim = self.sim
-        # materialize arrivals; drain mode gets an explicit arrival horizon
-        # (pre-fix it was 0.0, so rate-based generators silently emitted
-        # nothing and drain simulations ran empty)
-        horizon = (sim.arrival_horizon if sim.arrival_horizon is not None
-                   else sim.duration)
-        arrivals: List[Request] = materialize_arrivals(
-            self.generators, horizon, drain=sim.drain)
-        ai = 0
-        now = 0.0
-        # deliver t=0 arrivals
-        while ai < len(arrivals) and arrivals[ai].arrival <= now:
-            self.queues[arrivals[ai].model].push(arrivals[ai]); ai += 1
-        self._plan(now)
-
-        while now < sim.max_time:
-            next_end = self._end_heap[0][0] if self._end_heap else math.inf
-            next_arr = arrivals[ai].arrival if ai < len(arrivals) else math.inf
-            wake = self.policy.next_wakeup(now) if hasattr(
-                self.policy, "next_wakeup") else math.inf
-            t = min(next_end, next_arr, wake)
-            if math.isinf(t):
-                break
-            if not sim.drain and t > sim.duration:
-                self._advance(sim.duration)
-                now = sim.duration
-                break
-            self._advance(t)
-            now = t
-            # deliver arrivals
-            while ai < len(arrivals) and arrivals[ai].arrival <= now + 1e-12:
-                self.queues[arrivals[ai].model].push(arrivals[ai]); ai += 1
-            # completions (heap pop + incremental accumulator update)
-            for r in self._pop_done(now):
-                self._finish(r, now)
-            self._plan(now)
-            if sim.drain and ai >= len(arrivals) and not self._running \
-                    and all(len(q) == 0 for q in self.queues.values()):
-                break
-
+        run_event_loop(
+            LoopConfig(duration=sim.duration, drain=sim.drain,
+                       max_time=sim.max_time,
+                       arrival_horizon=sim.arrival_horizon),
+            self.generators, self)
         duration = (self._makespan if sim.drain else sim.duration) or 1e-9
         for name, q in self.queues.items():
             self.metrics[name].violated = q.violated + len(q)  # unserved count
@@ -230,8 +230,3 @@ class Simulator:
             utilization=self._util_area / duration,
             per_model=self.metrics,
             makespan=self._makespan)
-
-    def _plan(self, now: float) -> None:
-        reqs = self.policy.plan(now, self)
-        if reqs:
-            self._start_runs(now, reqs)

@@ -1,0 +1,136 @@
+"""Block-table-indexed (paged) single-token decode attention as a Pallas kernel.
+
+The paged sibling of ``repro.kernels.decode_attention``: instead of one
+contiguous ``(B, C, KV, D)`` ring per sequence, K/V live in a shared pool of
+fixed-size pages ``(P, page_size, KV, D)`` and each sequence owns an ordered
+list of page ids — its *block table*, a ``(B, max_pages)`` int32 row (the
+vLLM PagedAttention layout; on TPU the same design ships as
+``ragged_paged_attention``). A sequence's logical cache position ``t`` lives
+at ``(block_tables[b, t // page_size], t % page_size)``.
+
+TPU design mirrors the ragged decode kernel: grid ``(batch, kv_heads,
+max_pages)`` with the page dim innermost; the ``(rep, D)`` query group stays
+resident in VMEM while pages stream HBM→VMEM; online softmax in VMEM
+scratch. Both the block table AND the per-sequence lengths ride in via
+scalar prefetch (``pltpu.PrefetchScalarGridSpec``) so they are available to
+the *index maps*, which is where paging actually happens:
+
+  * indirection — the K/V index map looks the j-th logical page up in the
+    block table, so the kernel walks each row's pages in logical order no
+    matter where they sit in the physical pool;
+  * compute skip — pages entirely past a row's length are skipped with
+    ``pl.when`` (same fully-masked-tile skip as ``decode_attention``);
+  * DMA skip — past-length lookups clamp onto the row's last live page, so
+    Pallas's revisit-elision never streams dead pages from HBM. Bandwidth
+    scales with each row's actual length, not with ``max_pages``.
+
+Rows with ``lengths == 0`` produce exact zeros (no pages run; the
+finalizer's ``l`` guard returns 0) — vacant continuous-batching slots point
+their whole table row at the reserved null page and cost nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+                  n_pages: int):
+    bi = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = len_ref[bi]
+    k_start = j * page_size
+
+    @pl.when(k_start < valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (rep, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page_size, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           interpret: bool = False):
+    """q: (B, H, D); pages: (P, page_size, KV, D); block_tables:
+    (B, max_pages) int32 page ids; lengths: int32 scalar or (B,).
+
+    Returns (B, H, D). Rows with length 0 return zeros. Table entries at or
+    past a row's last live page are never dereferenced (the index map clamps
+    onto the last live page), so padding rows with any page id — by
+    convention the null page 0 — is safe."""
+    b, h, d = q.shape
+    _, page_size, kvh, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, d)
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    kernel = functools.partial(_paged_kernel, scale=1.0 / np.sqrt(d),
+                               page_size=page_size, n_pages=max_pages)
+
+    def kv_map(b_, g, j, tbl_ref, len_ref):
+        # Clamp past-length logical pages onto the row's last live one —
+        # the block index then repeats and Pallas elides the DMA, so dead
+        # pages never leave HBM. The table lookup is the paging itself.
+        last = jnp.maximum(
+            (len_ref[b_] + page_size - 1) // page_size, 1) - 1
+        page = tbl_ref[b_, jnp.minimum(j, last)]
+        return (page, 0, g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d),
+                         lambda b_, g, j, tbl_ref, len_ref: (b_, g, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d), kv_map),
+            pl.BlockSpec((1, page_size, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, d),
+                               lambda b_, g, j, tbl_ref, len_ref:
+                               (b_, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_pages, v_pages)
+    return out.reshape(b, h, d)

@@ -139,6 +139,11 @@ def forward(params, cfg, batch_tokens, enc_embeds, *, remat: bool = False):
 # --------------------------------------------------------------------------
 # serving
 # --------------------------------------------------------------------------
+# decoder self-attention KV pages; the cross K/V is a fixed encoder_seq-long
+# read-only block per request, so it stays a per-slot dense leaf
+PAGED_KEYS = ("k", "v")
+
+
 def cache_plan(cfg, batch: int, cache_len: int) -> dict:
     hd = cfg.resolved_head_dim
     kv_shape = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, hd)
@@ -158,6 +163,31 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=None):
     dtype = dtype or jnp.dtype(cfg.dtype)
     cp = cache_plan(cfg, batch, cache_len)
     return {k: (jnp.zeros((batch,), jnp.int32) if k == "pos"
+                else jnp.zeros(cp[k].shape, dtype))
+            for k in cp}
+
+
+def paged_cache_plan(cfg, batch: int, num_pages: int, page_size: int,
+                     max_pages: int) -> dict:
+    hd = cfg.resolved_head_dim
+    kv_shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads, hd)
+    cross_shape = (cfg.num_layers, batch, cfg.encoder_seq, cfg.num_kv_heads, hd)
+    return {
+        "k": ParamDef(kv_shape, L.paged_kv_cache_spec(cfg), "zeros"),
+        "v": ParamDef(kv_shape, L.paged_kv_cache_spec(cfg), "zeros"),
+        "cross_k": ParamDef(cross_shape, L.kv_cache_spec(cfg), "zeros"),
+        "cross_v": ParamDef(cross_shape, L.kv_cache_spec(cfg), "zeros"),
+        "block_tables": ParamDef((batch, max_pages), None, "zeros"),
+        "pos": ParamDef((batch,), None, "zeros"),
+    }
+
+
+def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
+                     max_pages: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cp = paged_cache_plan(cfg, batch, num_pages, page_size, max_pages)
+    return {k: (jnp.zeros(cp[k].shape, jnp.int32)
+                if k in ("pos", "block_tables")
                 else jnp.zeros(cp[k].shape, dtype))
             for k in cp}
 
@@ -201,9 +231,7 @@ def decode_step(params, cfg, token, cache):
     cross K/V streams through the scan as xs (no double-buffering)."""
     dtype = jnp.dtype(cfg.dtype)
     pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), token.shape)
-    cache_len = cache["k"].shape[2]
-    slot = pos % cache_len                                     # (B,)
-    valid = jnp.minimum(pos + 1, cache_len)                    # (B,)
+    update, attend, _ = L.decode_index(pos, cache, "k")
     x = (L.embed_tokens(params["embed"], token, dtype)
          + params["dec_pos"][pos].astype(dtype))
     positions = pos
@@ -217,9 +245,9 @@ def decode_step(params, cfg, token, cache):
         q = L.constrain_q_decode(cfg, q[:, 0])
         kc = jax.lax.dynamic_slice_in_dim(kfull, idx, 1, axis=0)[0]
         vc = jax.lax.dynamic_slice_in_dim(vfull, idx, 1, axis=0)[0]
-        kc = L.cache_row_update(kc, k, slot)
-        vc = L.cache_row_update(vc, v, slot)
-        attn = L.decode_attention(q, kc, vc, valid)
+        kc = update(kc, k)
+        vc = update(vc, v)
+        attn = attend(q, kc, vc)
         x1 = h0 + L.attn_out(lp["self_attn"], h0.dtype, attn)
 
         h2 = L.apply_norm(lp["ln2"], x1, cfg.norm)
@@ -240,5 +268,6 @@ def decode_step(params, cfg, token, cache):
          jnp.arange(cfg.num_layers)))
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits, {"k": ks, "v": vs, "cross_k": cache["cross_k"],
-                    "cross_v": cache["cross_v"], "pos": pos + 1}
+    return logits, L.carry_cache_meta(
+        {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+         "cross_v": cache["cross_v"], "pos": pos + 1}, cache)

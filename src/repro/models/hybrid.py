@@ -93,6 +93,11 @@ def forward(params, cfg, tokens, *, remat: bool = False):
 # --------------------------------------------------------------------------
 # serving
 # --------------------------------------------------------------------------
+# only the shared-attention KV is paged; the mamba state is O(1) per row
+# and stays per-slot dense (paging a fixed-size state buys nothing)
+PAGED_KEYS = ("attn_k", "attn_v")
+
+
 def cache_plan(cfg, batch: int, cache_len: int) -> dict:
     base = ssm.cache_plan(cfg, batch, cache_len)
     na = n_attn_blocks(cfg)
@@ -109,6 +114,30 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=None):
     cp = cache_plan(cfg, batch, cache_len)
     cache["attn_k"] = jnp.zeros(cp["attn_k"].shape, dtype)
     cache["attn_v"] = jnp.zeros(cp["attn_v"].shape, dtype)
+    return cache
+
+
+def paged_cache_plan(cfg, batch: int, num_pages: int, page_size: int,
+                     max_pages: int) -> dict:
+    base = ssm.cache_plan(cfg, batch, 0)
+    na = n_attn_blocks(cfg)
+    kv_shape = (na, num_pages, page_size, cfg.num_kv_heads,
+                cfg.resolved_head_dim)
+    spec = L.paged_kv_cache_spec(cfg)
+    base["attn_k"] = ParamDef(kv_shape, spec, "zeros")
+    base["attn_v"] = ParamDef(kv_shape, spec, "zeros")
+    base["block_tables"] = ParamDef((batch, max_pages), None, "zeros")
+    return base
+
+
+def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
+                     max_pages: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cache = ssm.init_cache(cfg, batch, 0, dtype)
+    cp = paged_cache_plan(cfg, batch, num_pages, page_size, max_pages)
+    cache["attn_k"] = jnp.zeros(cp["attn_k"].shape, dtype)
+    cache["attn_v"] = jnp.zeros(cp["attn_v"].shape, dtype)
+    cache["block_tables"] = jnp.zeros((batch, max_pages), jnp.int32)
     return cache
 
 
@@ -159,9 +188,7 @@ def decode_step(params, cfg, token, cache):
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed_tokens(params["embed"], token, dtype)
     pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), token.shape)
-    cache_len = cache["attn_k"].shape[2]
-    slot = pos % cache_len                                     # (B,)
-    valid = jnp.minimum(pos + 1, cache_len)                    # (B,)
+    update, attend, _ = L.decode_index(pos, cache, "attn_k")
     positions = pos
     sp = params["shared_attn"]
     na = n_attn_blocks(cfg)
@@ -179,9 +206,9 @@ def decode_step(params, cfg, token, cache):
             q = L.constrain_q_decode(cfg, q[:, 0])
             kj = jax.lax.dynamic_slice_in_dim(kc_, j, 1, axis=0)[0]
             vj = jax.lax.dynamic_slice_in_dim(vc_, j, 1, axis=0)[0]
-            kj = L.cache_row_update(kj, k, slot)
-            vj = L.cache_row_update(vj, v, slot)
-            attn = L.decode_attention(q, kj, vj, valid)
+            kj = update(kj, k)
+            vj = update(vj, v)
+            attn = attend(q, kj, vj)
             h2 = h_ + L.attn_out(sp["attn"], h_.dtype, attn)
             hh2 = L.apply_norm(sp["ln2"], h2, cfg.norm)
             h2 = h2 + L.apply_mlp(sp["mlp"], hh2)
@@ -200,5 +227,6 @@ def decode_step(params, cfg, token, cache):
          jnp.arange(cfg.num_layers)))
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits, {"ssm": states, "conv": convs, "attn_k": kc, "attn_v": vc,
-                    "pos": pos + 1}
+    return logits, L.carry_cache_meta(
+        {"ssm": states, "conv": convs, "attn_k": kc, "attn_v": vc,
+         "pos": pos + 1}, cache)

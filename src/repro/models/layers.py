@@ -237,6 +237,135 @@ def cache_row_update(buf, new, slot):
     return buf.at[bidx, slot].set(new[:, 0])
 
 
+def paged_cache_update(buf, new, pages, slots):
+    """Write ``new`` (B, 1, ...) into a paged pool ``buf``
+    (P, page_size, ...) at per-row physical page ``pages`` (B,) and
+    in-page offset ``slots`` (B,).
+
+    Live rows own disjoint pages so the scatter rows never collide; vacant
+    rows all target the reserved null page 0 at offset 0 — duplicate
+    indices there are harmless because the null page is never read (see
+    ``repro.serving.kv_cache``)."""
+    return buf.at[pages, slots].set(new[:, 0])
+
+
+def _masked_decode_attention(q, k_cache, v_cache, lengths):
+    """The jnp (CPU/dry-run) decode-attention body: masked full-cache
+    compute with static shapes. Shared verbatim by the contiguous and the
+    paged (post-gather) paths so ring and paged greedy decode stay
+    bit-exact on the fallback backend."""
+    b, c, kvh, d = k_cache.shape
+    h = q.shape[1]
+    qg = q.reshape(b, kvh, h // kvh, d)
+    # preferred_element_type keeps the cache operands bf16 (no hoisted
+    # full-cache f32 convert) while accumulating scores in f32
+    sc = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    sc = sc / np.sqrt(d)
+    mask = jnp.arange(c)[None, None, None, :] < lengths[:, None, None, None]
+    sc = jnp.where(mask, sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrk,bkgd->bgrd", w, v_cache,
+                     preferred_element_type=jnp.float32)
+    out = jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, valid_len):
+    """Single-token attention over a block-table paged KV cache.
+
+    q: (B, H, D); k_pages/v_pages: (P, page_size, KV, D) shared physical
+    pools; block_tables: (B, max_pages) int32 page ids; valid_len: scalar
+    or per-sequence (B,) int32 lengths. Rows with length 0 (vacant slots,
+    table rows parked on the null page) return zeros.
+
+    On real TPUs this dispatches to the paged Pallas kernel
+    (repro.kernels.paged_attention): the block table rides in via scalar
+    prefetch and pages the index maps directly, so HBM traffic scales with
+    each row's actual length. The fallback gathers each row's pages into
+    logical order and reuses the exact masked-decode body of the
+    contiguous path — bit-identical to ring decode for equal contents.
+    """
+    b = q.shape[0]
+    _, page_size, kvh, d = k_pages.shape
+    max_pages = block_tables.shape[1]
+    lengths = jnp.broadcast_to(
+        jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
+    # sublane-aligned pages dispatch to the kernel (the streamed page is a
+    # (page_size, d) tile — same shape family the ragged decode kernel
+    # streams); everything the repo builds uses page_size % 8 == 0
+    if jax.default_backend() == "tpu" and page_size % 8 == 0:
+        from repro.kernels.paged_attention import \
+            paged_decode_attention as _pallas
+        return _pallas(q, k_pages, v_pages, block_tables, lengths)
+    # jnp gather fallback: pages -> logical (B, C, KV, D) view
+    kc = k_pages[block_tables].reshape(b, max_pages * page_size, kvh, d)
+    vc = v_pages[block_tables].reshape(b, max_pages * page_size, kvh, d)
+    return _masked_decode_attention(q, kc, vc, lengths)
+
+
+def decode_index(pos, cache, key):
+    """Per-row write/read machinery for one decode step over EITHER cache
+    layout — the single place the paged-vs-ring storage contract lives, so
+    the three attention families cannot drift (the layout is a static
+    pytree property: ``block_tables`` present = paged).
+
+    pos: (B,) int32 current positions; ``key``: the K leaf the layout is
+    read from. Returns ``(update, attend, valid)``: ``update(buf, new)``
+    writes the step's (B, 1, ...) entries at each row's coordinates;
+    ``attend(q, kc, vc, window=0)`` runs decode attention against the
+    updated buffer; ``valid`` is the (B,) lengths vector."""
+    if "block_tables" in cache:
+        tables = cache["block_tables"]
+        page_size = cache[key].shape[2]
+        bidx = jnp.arange(pos.shape[0])
+        # past-capacity clamp is belt-and-braces: the engine caps every
+        # slot's token budget at its page capacity, so live rows never
+        # reach it (vacant rows sit at pos 0 on the null page)
+        page = tables[bidx, jnp.minimum(pos // page_size,
+                                        tables.shape[1] - 1)]
+        slot = pos % page_size
+        valid = jnp.minimum(pos + 1, tables.shape[1] * page_size)
+
+        def update(buf, new):
+            return paged_cache_update(buf, new, page, slot)
+
+        def attend(q, kc, vc, window: int = 0):
+            if window:
+                # a paged slot retains FULL history (pages never evict),
+                # so windowed attention needs page-level masking that is
+                # not implemented — the engine keeps windowed configs on
+                # ring slots, whose overwrite IS the window. Loud > wrong.
+                raise NotImplementedError(
+                    "sliding-window attention over a paged cache")
+            return paged_decode_attention(q, kc, vc, tables, valid)
+
+        return update, attend, valid
+
+    cache_len = cache[key].shape[2]
+    slot = (pos % cache_len) if cache_len > 0 else jnp.zeros_like(pos)
+    valid = jnp.minimum(pos + 1, cache_len)
+
+    def update(buf, new):
+        return cache_row_update(buf, new, slot)
+
+    def attend(q, kc, vc, window: int = 0):
+        return decode_attention(q, kc, vc, valid, window=window)
+
+    return update, attend, valid
+
+
+def carry_cache_meta(out, cache):
+    """Thread the storage-contract leaves a decode step only reads
+    (``block_tables``) from the old cache into the new one, preserving the
+    pytree structure the donated input had — the other half of the
+    contract ``decode_index`` owns, so model families never hand-write
+    paged-vs-ring knowledge."""
+    if "block_tables" in cache:
+        out["block_tables"] = cache["block_tables"]
+    return out
+
+
 def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
                      ring_pos=None):
     """Single-token attention over a KV cache.
@@ -259,25 +388,12 @@ def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0,
     25.8 GB/layer on yi-9b decode_32k).
     """
     b, c, kvh, d = k_cache.shape
-    h = q.shape[1]
     lengths = jnp.broadcast_to(
         jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
     if jax.default_backend() == "tpu" and c % 128 == 0:
         from repro.kernels.decode_attention import decode_attention as _pallas
         return _pallas(q, k_cache, v_cache, lengths)
-    qg = q.reshape(b, kvh, h // kvh, d)
-    # preferred_element_type keeps the cache operands bf16 (no hoisted
-    # full-cache f32 convert) while accumulating scores in f32
-    sc = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache,
-                    preferred_element_type=jnp.float32)
-    sc = sc / np.sqrt(d)
-    mask = jnp.arange(c)[None, None, None, :] < lengths[:, None, None, None]
-    sc = jnp.where(mask, sc, -1e30)
-    w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bgrk,bkgd->bgrd", w, v_cache,
-                     preferred_element_type=jnp.float32)
-    out = jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
-    return out.reshape(b, h, d).astype(q.dtype)
+    return _masked_decode_attention(q, k_cache, v_cache, lengths)
 
 
 # --------------------------------------------------------------------------
@@ -377,6 +493,17 @@ def kv_cache_spec(cfg, tp: int = 16):
     if cfg.num_kv_heads and cfg.num_kv_heads % tp == 0:
         return ("stack", "batch", None, "kv_heads", None)
     return ("stack", "batch", "kv_seq", None, None)
+
+
+def paged_kv_cache_spec(cfg, tp: int = 16):
+    """Sharding for a (layers, num_pages, page_size, kv_heads, head_dim)
+    paged pool. KV heads shard when they divide the TP width (same local
+    decode-attention argument as ``kv_cache_spec``); otherwise the *page*
+    dim shards — pages are the paged analogue of the sequence dim, and the
+    block table (host-replicated int32) stays tiny either way."""
+    if cfg.num_kv_heads and cfg.num_kv_heads % tp == 0:
+        return ("stack", None, None, "kv_heads", None)
+    return ("stack", "kv_seq", None, None, None)
 
 
 def attn_qkv(p, cfg, x, positions):

@@ -11,7 +11,7 @@ dry-run never branch on architecture:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,13 @@ class ModelAPI:
     decode_step: Callable
     cache_plan: Callable
     init_cache: Callable
+    # paged KV cache (block tables; see repro.serving.kv_cache). Families
+    # with no KV to page (pure SSM) have paged_keys == () and None
+    # builders — the engine then falls back to per-slot dense state while
+    # keeping the shared ragged-lengths/done-flag plumbing.
+    paged_keys: tuple = ()
+    paged_cache_plan: Optional[Callable] = None
+    init_paged_cache: Optional[Callable] = None
 
     # ------------------------------------------------------------- sharding
     def param_specs(self, mesh):
@@ -110,6 +117,17 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         def prefill(params, batch, cache_len):
             return mod.prefill(params, cfg, batch["tokens"], cache_len)
 
+    paged_keys = tuple(getattr(mod, "PAGED_KEYS", ()))
+    paged_plan = init_paged = None
+    if paged_keys:
+        def paged_plan(batch, num_pages, page_size, max_pages):
+            return mod.paged_cache_plan(cfg, batch, num_pages, page_size,
+                                        max_pages)
+
+        def init_paged(batch, num_pages, page_size, max_pages, dtype=None):
+            return mod.init_paged_cache(cfg, batch, num_pages, page_size,
+                                        max_pages, dtype)
+
     return ModelAPI(
         cfg=cfg,
         plan=mod.plan(cfg),
@@ -121,4 +139,7 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         cache_plan=lambda batch, cache_len: mod.cache_plan(cfg, batch, cache_len),
         init_cache=lambda batch, cache_len, dtype=None: mod.init_cache(
             cfg, batch, cache_len, dtype),
+        paged_keys=paged_keys,
+        paged_cache_plan=paged_plan,
+        init_paged_cache=init_paged,
     )

@@ -166,6 +166,12 @@ def forward(params, cfg, tokens, *, remat: bool = False):
     return logits, aux
 
 
+# the SSD state is O(1) per sequence — there is nothing to page. The paged
+# engine still runs this family (shared lengths/done-flag plumbing); it
+# just skips the page allocator.
+PAGED_KEYS = ()
+
+
 def cache_plan(cfg, batch: int, cache_len: int) -> dict:
     nlayer = cfg.num_layers
     di, n, nh, p, w = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,

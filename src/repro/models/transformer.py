@@ -98,6 +98,11 @@ def forward(params, cfg, tokens, *, remat: bool = False) -> Tuple[jax.Array, dic
 # --------------------------------------------------------------------------
 # KV-cache serving
 # --------------------------------------------------------------------------
+# cache leaves that live in the shared page pool when the cache is paged
+# (everything else — here just "pos" — stays per-row)
+PAGED_KEYS = ("k", "v")
+
+
 def cache_plan(cfg, batch: int, cache_len: int) -> dict:
     lcfg = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, cfg.resolved_head_dim)
     spec = L.kv_cache_spec(cfg)
@@ -115,6 +120,34 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=None):
     return {
         "k": jnp.zeros(cp["k"].shape, dtype),
         "v": jnp.zeros(cp["v"].shape, dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def paged_cache_plan(cfg, batch: int, num_pages: int, page_size: int,
+                     max_pages: int) -> dict:
+    """Block-table paged layout: K/V live in a shared (num_pages,
+    page_size) pool; each row maps logical pages to physical via its
+    ``block_tables`` row (see ``repro.serving.kv_cache``)."""
+    lcfg = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+            cfg.resolved_head_dim)
+    spec = L.paged_kv_cache_spec(cfg)
+    return {
+        "k": L.ParamDef(lcfg, spec, "zeros"),
+        "v": L.ParamDef(lcfg, spec, "zeros"),
+        "block_tables": L.ParamDef((batch, max_pages), None, "zeros"),
+        "pos": L.ParamDef((batch,), None, "zeros"),
+    }
+
+
+def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
+                     max_pages: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cp = paged_cache_plan(cfg, batch, num_pages, page_size, max_pages)
+    return {
+        "k": jnp.zeros(cp["k"].shape, dtype),
+        "v": jnp.zeros(cp["v"].shape, dtype),
+        "block_tables": jnp.zeros((batch, max_pages), jnp.int32),
         "pos": jnp.zeros((batch,), jnp.int32),
     }
 
@@ -167,14 +200,19 @@ def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
     dynamic_update_slice at the layer index — a scan-over-(xs -> ys) cache
     double-buffers (measured +2x cache HBM on deepseek decode_32k); the
     carried buffer updates in place and aliases with the donated input.
+
+    A cache built by ``init_paged_cache`` (it carries ``block_tables``; a
+    static pytree property, so this is a trace-time branch, not a runtime
+    one) stores K/V in the shared page pool instead: each row writes its
+    new entry at (block_tables[b, pos // page_size], pos % page_size) and
+    attends through ``paged_decode_attention``. Same scan-carry structure,
+    same per-sequence raggedness — only the storage indexing differs.
     """
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed_tokens(params["embed"], token, dtype)          # (B, d)
     pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), token.shape)
-    cache_len = cache["k"].shape[2]
     positions = pos
-    slot = jnp.where(cache_len > 0, pos % cache_len, 0)        # (B,)
-    valid = jnp.minimum(pos + 1, cache_len)                    # (B,)
+    update, attend, _ = L.decode_index(pos, cache, "k")
 
     def body(carry, xs):
         h0, kfull, vfull = carry
@@ -184,9 +222,9 @@ def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
         q = L.constrain_q_decode(cfg, q[:, 0])                 # (B, H, hd)
         kc = jax.lax.dynamic_slice_in_dim(kfull, idx, 1, axis=0)[0]
         vc = jax.lax.dynamic_slice_in_dim(vfull, idx, 1, axis=0)[0]
-        kc = L.cache_row_update(kc, k, slot)
-        vc = L.cache_row_update(vc, v, slot)
-        attn = L.decode_attention(q, kc, vc, valid, window=cfg.sliding_window)
+        kc = update(kc, k)
+        vc = update(vc, v)
+        attn = attend(q, kc, vc, window=cfg.sliding_window)
         x1 = h0 + L.attn_out(lp["attn"], h0.dtype, attn)
         h2 = L.apply_norm(lp["ln2"], x1, cfg.norm)
         if cfg.num_experts:
@@ -202,4 +240,5 @@ def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
         (params["layers"], jnp.arange(cfg.num_layers)))
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits, {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, L.carry_cache_meta({"k": ks, "v": vs, "pos": pos + 1},
+                                      cache)

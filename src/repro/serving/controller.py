@@ -22,18 +22,23 @@ import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.eventloop import LoopConfig, run_event_loop
 from repro.serving.metrics import PoolResult
 from repro.serving.pool import EnginePool
-from repro.serving.request import (Request, RequestGenerator,
-                                   materialize_arrivals)
+from repro.serving.request import Request, RequestGenerator
 
 
 @dataclasses.dataclass
 class ControllerConfig:
     duration: float = 1.0           # virtual seconds (ignored when drain)
-    gen_len: int = 4                # decode tokens per admitted request
+    gen_len: int = 4                # default decode tokens per request —
+                                    # a request's own n_tokens overrides it
     drain: bool = False             # run until all queued work completes
     drop_expired: bool = True
+    # mid-run re-admission: when ragged n_tokens budgets free a run's slot
+    # early, refill it from the queue without waiting for the run (or the
+    # policy). Uniform-budget workloads never trip it (no early frees).
+    topup: bool = True
     # horizon up to which rate generators materialize arrivals; None ->
     # ``duration`` (drain runs MUST set one of them, like the simulator)
     arrival_horizon: Optional[float] = None
@@ -57,6 +62,8 @@ class Controller:
         self.oversubscribed = False
         self.served_timeline: List[Tuple[float, int]] = []
         self._makespan = 0.0
+        self._heap: List[Tuple[float, int]] = []  # (next decode time, seq)
+        self._last_served = 0
 
     # ------------------------------------------------------------------
     def _plan(self, now: float, heap: List[Tuple[float, int]]) -> None:
@@ -76,73 +83,79 @@ class Controller:
     def _total_served(self) -> int:
         return sum(q.completed for q in self.pool.queues.values())
 
+    # ----------------------------------------- EventLoopHooks (core loop)
+    # The loop semantics live ONCE in ``repro.core.eventloop`` — the same
+    # skeleton drives the analytic Simulator, so the two planes cannot
+    # drift. These hooks are the real-engine machinery inside the events.
+    def deliver(self, req: Request) -> None:
+        self.pool.push(req)
+
+    def next_completion(self) -> float:
+        return self._heap[0][0] if self._heap else math.inf
+
+    def next_wakeup(self, now: float) -> float:
+        return (self.policy.next_wakeup(now)
+                if hasattr(self.policy, "next_wakeup") else math.inf)
+
+    def advance(self, t: float) -> None:
+        self.pool.advance_time(t)
+
+    def fire(self, now: float, epsilon: float = 1e-12) -> int:
+        steps = 0
+        while self._heap and self._heap[0][0] <= now + epsilon:
+            _, seq = heapq.heappop(self._heap)
+            run = self.pool._runs.get(seq)
+            if run is None:
+                continue
+            finished = self.pool.step_run(run, now)  # real jitted dispatch
+            steps += 1
+            served = self._total_served()
+            if served != self._last_served:     # ragged: slots complete
+                self._last_served = served      # mid-run, not only at ends
+                self._makespan = max(self._makespan, now)
+                self.served_timeline.append((now, served))
+            if not finished:
+                heapq.heappush(self._heap, (run.next_time, seq))
+        return steps
+
+    def plan(self, now: float) -> None:
+        if self.cfg.topup:
+            # continuous batching across run boundaries: refill slots that
+            # ragged budgets freed early before asking the policy (the run
+            # keeps its heap entry; only its contents grow)
+            for run in self.pool.running:
+                self.pool.topup(run, now, self.cfg.gen_len,
+                                self.cfg.drop_expired)
+        self._plan(now, self._heap)
+
+    def drained(self) -> bool:
+        return (not self.pool.running
+                and all(len(q) == 0 for q in self.pool.queues.values()))
+
+    # ------------------------------------------------------------------
     def run(self) -> PoolResult:
         cfg = self.cfg
-        pool = self.pool
-        horizon = (cfg.arrival_horizon if cfg.arrival_horizon is not None
-                   else cfg.duration)
-        arrivals: List[Request] = materialize_arrivals(
-            self.generators, horizon, drain=cfg.drain)
-
-        heap: List[Tuple[float, int]] = []   # (next decode time, run seq)
-        ai = 0
-        now = 0.0
-        steps = 0
-        truncated = False                    # hit a backstop, not the end
+        self._heap = []
+        self._last_served = self._total_served()
         wall0 = time.perf_counter()
-        while ai < len(arrivals) and arrivals[ai].arrival <= now:
-            pool.push(arrivals[ai]); ai += 1
-        self._plan(now, heap)
-
-        while steps < cfg.max_steps:
-            if cfg.drain and ai >= len(arrivals) and not pool.running \
-                    and all(len(q) == 0 for q in pool.queues.values()):
-                break
-            t_run = heap[0][0] if heap else math.inf
-            t_arr = arrivals[ai].arrival if ai < len(arrivals) else math.inf
-            t_wake = self.policy.next_wakeup(now) if hasattr(
-                self.policy, "next_wakeup") else math.inf
-            t = min(t_run, t_arr, t_wake)
-            if math.isinf(t):
-                break
-            if t > cfg.max_time:
-                truncated = True
-                break
-            if not cfg.drain and t > cfg.duration:
-                pool.advance_time(cfg.duration)
-                now = cfg.duration
-                break
-            pool.advance_time(t)
-            now = t
-            while ai < len(arrivals) and arrivals[ai].arrival <= now + 1e-12:
-                pool.push(arrivals[ai]); ai += 1
-            while heap and heap[0][0] <= now + 1e-12:
-                _, seq = heapq.heappop(heap)
-                run = pool._runs.get(seq)
-                if run is None:
-                    continue
-                finished = pool.step_run(run, now)   # real jitted dispatch
-                steps += 1
-                if finished:
-                    self._makespan = max(self._makespan, now)
-                    self.served_timeline.append((now, self._total_served()))
-                else:
-                    heapq.heappush(heap, (run.next_time, seq))
-            self._plan(now, heap)
-
-        if steps >= cfg.max_steps:
-            truncated = True
+        out = run_event_loop(
+            LoopConfig(duration=cfg.duration, drain=cfg.drain,
+                       max_time=cfg.max_time,
+                       arrival_horizon=cfg.arrival_horizon,
+                       max_events=cfg.max_steps),
+            self.generators, self)
         # a truncated non-drain run is normalized by the virtual time it
         # actually covered, not the full cfg.duration — and flagged, so it
         # can never masquerade as a complete measurement
         if cfg.drain:
             duration = self._makespan
         else:
-            duration = min(now, cfg.duration) if truncated else cfg.duration
+            duration = (min(out.now, cfg.duration) if out.truncated
+                        else cfg.duration)
         wall = time.perf_counter() - wall0
-        res = pool.snapshot(getattr(self.policy, "name", "?"),
-                            duration or 1e-9, wall, steps)
-        res.truncated = truncated
+        res = self.pool.snapshot(getattr(self.policy, "name", "?"),
+                                 duration or 1e-9, wall, out.events)
+        res.truncated = out.truncated
         return res
 
 
@@ -150,27 +163,34 @@ class Controller:
 # convenience drivers (the thin-wrapper API used by examples/launch/bench)
 # --------------------------------------------------------------------------
 def make_generators(pool: EnginePool, rate: float, *, seed0: int = 0,
-                    slo_scale: float = 1.0) -> List[RequestGenerator]:
+                    slo_scale: float = 1.0,
+                    gen_tokens=None) -> List[RequestGenerator]:
     """One deterministic arrival stream per hosted model (sorted order so
-    seeds are stable across runs and policies)."""
+    seeds are stable across runs and policies). ``gen_tokens``: None keeps
+    every request on the controller's uniform ``gen_len``; an int or a
+    (lo, hi) range stamps per-request ragged token budgets."""
     return [RequestGenerator(n, rate, pool.profiles[n].slo * slo_scale,
-                             seed=seed0 + i)
+                             seed=seed0 + i, gen_tokens=gen_tokens)
             for i, n in enumerate(sorted(pool.profiles))]
 
 
 def run_policy(pool: EnginePool, policy_name: str, *, rate: float,
                duration: float, gen_len: int = 4, seed0: int = 0,
                drain: bool = False, drop_expired: bool = True,
-               slo_scale: float = 1.0,
+               slo_scale: float = 1.0, gen_tokens=None, topup: bool = True,
                policy_kwargs: Optional[Dict] = None) -> PoolResult:
     """Reset the pool, build the named policy over its profiles, and serve
-    one deterministic workload through the real engines."""
+    one deterministic workload through the real engines. ``gen_tokens``
+    (int or (lo, hi)) makes the workload ragged: each request carries its
+    own decode budget, slots free early, and the controller tops runs up
+    mid-flight."""
     from repro.core.scheduler import POLICIES
 
     pool.reset()
     policy = POLICIES[policy_name](pool.profiles, **(policy_kwargs or {}))
-    gens = make_generators(pool, rate, seed0=seed0, slo_scale=slo_scale)
+    gens = make_generators(pool, rate, seed0=seed0, slo_scale=slo_scale,
+                           gen_tokens=gen_tokens)
     cfg = ControllerConfig(duration=duration, gen_len=gen_len, drain=drain,
-                           drop_expired=drop_expired,
+                           drop_expired=drop_expired, topup=topup,
                            arrival_horizon=duration if drain else None)
     return Controller(pool, policy, gens, cfg).run()

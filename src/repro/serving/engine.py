@@ -30,27 +30,35 @@ make that true on the host side:
    bucket — O(log max_len) compilations total — and reused for every
    request that fits.
 
-3. **Slot-based continuous batching.** ``init_slots`` allocates a
-   fixed-slot cache (batch = n_slots, ring length = slot cache_len);
-   ``insert`` prefills one request and writes its rows into a free slot
-   mid-stream, ``step`` decodes one token for all slots in a single
-   dispatch, ``free`` releases a slot (its length resets to 0 so the
-   ragged decode-attention path treats the row as empty). Because every
-   sequence carries its own position/length (``cache["pos"]`` is a (B,)
-   vector end to end), admitting a new request never repads, recompiles,
-   or perturbs other slots — the paper's "efficient batch size under SLO"
-   lever implemented at the kernel level.
+3. **Slot-based continuous batching over a PAGED KV cache.**
+   ``init_slots`` allocates a fixed number of slots whose K/V storage is,
+   by default, a shared pool of fixed-size pages indexed per sequence by a
+   block table (``repro.serving.kv_cache``; ``paged=False`` restores the
+   original per-slot ring, kept as the parity/bench baseline). ``insert``
+   prefills one request, allocates pages for its prompt plus its decode
+   budget (``n_tokens``), and scatters the prompt K/V into them;
+   ``step`` decodes one token for all slots in a single dispatch and
+   reports which slots just exhausted their budget (per-request ragged
+   generation lengths — the done flags drive early slot free and mid-run
+   re-admission upstream); ``free`` returns the slot's pages to the pool
+   and parks its table row on the null page. Because every sequence
+   carries its own position/length (``cache["pos"]`` is a (B,) vector end
+   to end) and pages are fully indirect, admitting a new request never
+   repads, recompiles, moves another sequence's cache, or perturbs other
+   slots — and KV memory in use tracks tokens actually resident instead
+   of n_slots × max_len (the admission bottleneck paging removes).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.registry import ModelAPI
+from repro.serving.kv_cache import NULL_PAGE, PagedKVCache
 
 
 def _pow2_at_least(n: int) -> int:
@@ -102,19 +110,27 @@ class InferenceEngine:
         self._prefill_jit: Dict[int, Any] = {}
         self._gen_jit: Dict[Any, Any] = {}
         donate = (2,) if donate_cache else ()
+        self._donate_cache_argnums = donate
         self._decode = jax.jit(
             lambda p, tok, cache: api.decode_step(p, tok, cache),
             donate_argnums=donate)
-        self._slot_step = jax.jit(
-            lambda p, tok, cache, active: _slot_decode_step(
-                api, p, tok, cache, active),
-            donate_argnums=donate)
+        # one slot-step executable per sampling config (None = greedy);
+        # built lazily, reused for every subsequent step
+        self._slot_step_jit: Dict[Optional[SamplingParams], Any] = {}
         self._write_slot = jax.jit(_write_slot, donate_argnums=(0,))
+        self._write_slot_paged = None      # built by init_slots(paged=True)
+        self._clear_slot = None
 
         # slot state (populated by init_slots)
+        self.paged = False
+        self._kv: Optional[PagedKVCache] = None
         self._slot_cache = None
         self._slot_free: List[int] = []
         self._slot_active: List[bool] = []
+        self._slot_budget: List[Optional[int]] = []
+        self._slot_generated: List[int] = []
+        self._slot_sampling: Optional[SamplingParams] = None
+        self._slot_rng = None
         self._last_tok = None
 
     # ------------------------------------------------------------------
@@ -243,63 +259,225 @@ class InferenceEngine:
     def free_slots(self) -> int:
         return len(self._slot_free)
 
-    def init_slots(self, n_slots: int, cache_len: Optional[int] = None):
-        """Allocate a fixed-slot cache for continuous batching."""
+    @property
+    def free_pages(self) -> int:
+        """Unallocated KV pages (0 when this engine has nothing to page —
+        pure-SSM state is O(1), so pages never gate its admission)."""
+        return self._kv.free_pages if self.paged else 0
+
+    @property
+    def total_pages(self) -> int:
+        return self._kv.allocator.num_pages if self.paged else 0
+
+    def init_slots(self, n_slots: int, cache_len: Optional[int] = None, *,
+                   paged: bool = True, page_size: int = 8,
+                   total_pages: Optional[int] = None,
+                   sampling: Optional[SamplingParams] = None,
+                   rng_seed: int = 0):
+        """Allocate slot state for continuous batching.
+
+        ``paged=True`` (default, for families with KV to page) backs the
+        slots with a block-table page pool of ``total_pages`` usable pages
+        (default ``n_slots * cache_len / page_size`` — same bytes as the
+        rings it replaces; pass fewer pages and more slots to let mixed
+        lengths share memory, which is the whole point). ``paged=False``
+        keeps the original per-slot ring (the parity baseline).
+        ``sampling`` fixes this engine's slot-step sampling config (None =
+        greedy; each distinct config is one executable, compiled once).
+
+        Sliding-window configs stay on ring slots even when ``paged`` is
+        requested: the ring's overwrite IS the window, while a paged slot
+        retains full history (pages never evict) and would silently widen
+        the model's attention."""
         self.slot_len = cache_len or self.cache_len
-        self._slot_cache = self.api.init_cache(n_slots, self.slot_len)
+        self.paged = (bool(paged) and bool(self.api.paged_keys)
+                      and not getattr(self.cfg, "sliding_window", 0))
+        self._slot_sampling = sampling
+        self._slot_rng = jax.random.PRNGKey(rng_seed)
+        if self.paged:
+            if self.slot_len % page_size:
+                raise ValueError(
+                    f"cache_len {self.slot_len} must be a multiple of "
+                    f"page_size {page_size}")
+            self.page_size = page_size
+            self.max_pages = self.slot_len // page_size
+            usable = total_pages or n_slots * self.max_pages
+            self._kv = PagedKVCache(n_slots, page_size, self.max_pages,
+                                    num_pages=usable)
+            # +1 physical page: id 0 is the reserved null page
+            self._slot_cache = self.api.init_paged_cache(
+                n_slots, usable + 1, page_size, self.max_pages)
+            self._write_slot_paged = jax.jit(
+                _make_write_slot_paged(self.api.paged_keys, page_size),
+                donate_argnums=(0,))
+            self._clear_slot = jax.jit(_clear_slot, donate_argnums=(0,))
+        else:
+            self._kv = None
+            self._slot_cache = self.api.init_cache(n_slots, self.slot_len)
         self._slot_free = list(range(n_slots))
         self._slot_active = [False] * n_slots
+        self._slot_budget = [None] * n_slots
+        self._slot_generated = [0] * n_slots
         self._active_mask = jnp.zeros((n_slots,), bool)
         self._last_tok = jnp.zeros((n_slots,), jnp.int32)
         return self
 
-    def insert(self, batch: Dict[str, Any]) -> int:
+    # ------------------------------------------------ admission accounting
+    def _need_tokens(self, prompt_len: int, n_tokens: Optional[int]) -> int:
+        """KV entries a request pins: prompt + decode budget, capped at the
+        slot maximum (an unbudgeted request reserves the full slot — the
+        ring-equivalent worst case)."""
+        cap = self.slot_len
+        if n_tokens is None:
+            return cap
+        return min(cap, int(prompt_len) + max(1, int(n_tokens)))
+
+    def pages_needed(self, prompt_len: int, n_tokens: Optional[int]) -> int:
+        if not self.paged:
+            return 0
+        return self._kv.pages_needed(self._need_tokens(prompt_len, n_tokens))
+
+    def can_admit(self, prompt_len: int, n_tokens: Optional[int]) -> bool:
+        """Admission check: a free slot AND enough free pages for the
+        request's whole horizon. Pages are reserved for the full prompt +
+        budget up front (not grown lazily per step) so an admitted run can
+        never deadlock mid-decode on a page it cannot get. Mirrors every
+        condition ``insert`` enforces — including the paged requirement
+        that the prompt leave decode room — so a True here can never turn
+        into an insert-time exception."""
+        if not self._slot_free:
+            return False
+        if not self.paged:
+            return True
+        if prompt_len >= self.slot_len:
+            return False
+        return self._kv.allocator.can_alloc(
+            self.pages_needed(prompt_len, n_tokens))
+
+    def insert(self, batch: Dict[str, Any],
+               n_tokens: Optional[int] = None) -> int:
         """Admit one request (batch size 1) into a free slot mid-stream.
 
-        Prefills the prompt against the slot ring length and writes the
-        resulting cache rows into the slot; other slots' rows are untouched
-        so their decoding is unaffected. Returns the slot id."""
+        Prefills the prompt and writes the resulting cache into the slot —
+        paged: scatter into freshly allocated pages + set the slot's block
+        table row; ring: write the slot's rows. ``n_tokens`` is the
+        request's decode budget: ``step`` reports the slot done after that
+        many tokens, and (paged) only ``prompt + n_tokens`` worth of pages
+        are claimed instead of the ring's full ``cache_len``. Raises
+        ``OutOfPages`` (slot untouched) when the pool can't cover it."""
         if not self._slot_free:
             raise RuntimeError("no free slots")
         assert batch["tokens"].shape[0] == 1, "insert admits one request"
-        slot = self._slot_free.pop(0)
+        s = batch["tokens"].shape[1]
+        slot = self._slot_free[0]          # claim only after pages are ours
+        if self.paged:
+            if s >= self.slot_len:
+                raise ValueError(
+                    f"prompt of {s} tokens leaves no decode room in a "
+                    f"{self.slot_len}-token paged slot (pages are never "
+                    f"evicted; use a longer cache_len)")
+            # unlike the ring (which wraps, sliding-window style), a paged
+            # slot cannot outgrow its table: the budget is capped at the
+            # page capacity so decode can never write past the last page
+            room = self.slot_len - s
+            budget = room if n_tokens is None else max(
+                1, min(int(n_tokens), room))
+            self._kv.alloc(slot, s + budget)
+            table_row = jnp.asarray(self._kv.table_row(slot), jnp.int32)
+        else:
+            budget = None if n_tokens is None else max(1, int(n_tokens))
+        self._slot_free.pop(0)
         logits, one = self.prefill(batch, self.slot_len)
-        self._slot_cache = self._write_slot(self._slot_cache, one,
-                                            jnp.int32(slot))
+        if self.paged:
+            self._slot_cache = self._write_slot_paged(
+                self._slot_cache, one, jnp.int32(slot), table_row)
+        else:
+            self._slot_cache = self._write_slot(self._slot_cache, one,
+                                                jnp.int32(slot))
         self._last_tok = self._last_tok.at[slot].set(
             jnp.argmax(logits[0], -1).astype(jnp.int32))
         self._slot_active[slot] = True
+        self._slot_budget[slot] = budget
+        self._slot_generated[slot] = 0
         self._active_mask = self._active_mask.at[slot].set(True)
         self.stats.inserts += 1
         return slot
 
     def free(self, slot: int) -> None:
-        """Release a slot. Its position pins to 0 (here and after every
-        subsequent step), so vacant rows attend over at most one cache
-        slot instead of drifting back toward full-cache cost."""
+        """Release a slot: its pages return to the pool, its block-table
+        row parks on the null page, and its position pins to 0 (here and
+        after every subsequent step) so vacant rows' dead writes land in
+        the null page and their attention reads are masked to zero."""
         if not self._slot_active[slot]:
             return
         self._slot_active[slot] = False
         self._slot_free.append(slot)
         self._active_mask = self._active_mask.at[slot].set(False)
-        self._slot_cache["pos"] = self._slot_cache["pos"].at[slot].set(0)
+        if self.paged:
+            self._kv.free(slot)
+            self._slot_cache = self._clear_slot(self._slot_cache,
+                                                jnp.int32(slot))
+        else:
+            self._slot_cache["pos"] = self._slot_cache["pos"].at[slot].set(0)
 
-    def step(self):
+    def _get_slot_step(self, sampling: Optional[SamplingParams]):
+        fn = self._slot_step_jit.get(sampling)
+        if fn is None:
+            api = self.api
+            if sampling is None:
+                fn = jax.jit(
+                    lambda p, tok, cache, active: _slot_decode_step(
+                        api, p, tok, cache, active),
+                    donate_argnums=self._donate_cache_argnums)
+            else:
+                fn = jax.jit(
+                    lambda p, tok, cache, active, rng, _s=sampling:
+                    _slot_decode_step(api, p, tok, cache, active, rng, _s),
+                    donate_argnums=self._donate_cache_argnums)
+            self._slot_step_jit[sampling] = fn
+        return fn
+
+    def step(self) -> Tuple[jax.Array, List[int]]:
         """One decode step for ALL slots in a single dispatch.
 
-        Returns (tokens (n_slots,), logits-argmax already applied). Tokens
-        for inactive slots are garbage and must be ignored by the caller
-        (``slot_active``)."""
-        tok, self._slot_cache = self._slot_step(
-            self.params, self._last_tok, self._slot_cache,
-            self._active_mask)
+        Returns ``(tokens, done)``: tokens (n_slots,) with sampling (or
+        greedy arg-max) already applied — entries for inactive slots are
+        garbage and must be ignored (``slot_active``) — and ``done``, the
+        active slots whose per-request token budget is now exhausted
+        (reported every step until the caller frees them). The done flags
+        are host-side counters, so reading them never syncs the device."""
+        fn = self._get_slot_step(self._slot_sampling)
+        if self._slot_sampling is None:
+            tok, self._slot_cache = fn(
+                self.params, self._last_tok, self._slot_cache,
+                self._active_mask)
+        else:
+            self._slot_rng, sub = jax.random.split(self._slot_rng)
+            tok, self._slot_cache = fn(
+                self.params, self._last_tok, self._slot_cache,
+                self._active_mask, sub)
         self._last_tok = tok
+        done: List[int] = []
+        for slot, active in enumerate(self._slot_active):
+            if active:
+                self._slot_generated[slot] += 1
+                budget = self._slot_budget[slot]
+                if budget is not None and self._slot_generated[slot] >= budget:
+                    done.append(slot)
         self.stats.decode_steps += 1
         self.stats.tokens_out += sum(self._slot_active)
-        return tok
+        return tok, done
 
     def slot_active(self, slot: int) -> bool:
         return self._slot_active[slot]
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes held by the slot cache (all leaves — the paged
+        pool's block tables and the null page are charged too, so paged
+        vs ring comparisons are honest)."""
+        if self._slot_cache is None:
+            return 0
+        return int(sum(x.nbytes for x in jax.tree.leaves(self._slot_cache)))
 
     # --------------------------------------------- pool accounting hooks
     def release_all_slots(self) -> None:
@@ -331,22 +509,33 @@ class InferenceEngine:
                     "accounting degrades to cache-key counting",
                     RuntimeWarning, stacklevel=2)
                 return 1
-        return {
+        out = {
             "prefill": sum(n(f) for f in self._prefill_jit.values()),
             "generate": sum(n(f) for f in self._gen_jit.values()),
             "decode": n(self._decode),
-            "slot_step": n(self._slot_step),
+            "slot_step": sum(n(f) for f in self._slot_step_jit.values()),
             "write_slot": n(self._write_slot),
         }
+        if self._write_slot_paged is not None:
+            out["write_slot_paged"] = n(self._write_slot_paged)
+            out["clear_slot"] = n(self._clear_slot)
+        return out
 
 
-def _slot_decode_step(api, params, tok, cache, active):
+def _slot_decode_step(api, params, tok, cache, active, rng=None,
+                      sampling: Optional[SamplingParams] = None):
     logits, cache = api.decode_step(params, tok, cache)
     # vacant rows' positions stay pinned at 0: decode_step increments pos
     # for every row, and an un-pinned vacant row would creep back to
-    # full-cache attention cost within cache_len steps
+    # full-cache attention cost (ring) or walk off its null-page table
+    # row (paged) within cache_len steps
     cache["pos"] = jnp.where(active, cache["pos"], 0)
-    return jnp.argmax(logits, -1).astype(jnp.int32), cache
+    if sampling is None:
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    else:
+        nxt = L.sample_logits(rng, logits, temperature=sampling.temperature,
+                              top_k=sampling.top_k, top_p=sampling.top_p)
+    return nxt, cache
 
 
 def _write_slot(big, one, slot):
@@ -358,6 +547,48 @@ def _write_slot(big, one, slot):
         return jax.lax.dynamic_update_slice_in_dim(b_leaf, o_leaf, slot,
                                                    axis=axis)
     return jax.tree.map(wr, big, one)
+
+
+def _make_write_slot_paged(paged_keys, page_size: int):
+    """Build the paged insert-scatter: paged leaves route the batch-1
+    dense prefill cache through the slot's block-table row into the page
+    pool; per-row leaves (pos, SSM state, cross K/V) take the dense row
+    write. The table row is always the full padded (max_pages,) vector —
+    one static shape, so a stream of varying prompt/budget page counts
+    compiles exactly one executable (padding entries scatter their zeros
+    into the never-read null page)."""
+    paged_keys = frozenset(paged_keys)
+
+    def write(big, one, slot, table_row):
+        max_pages = table_row.shape[0]
+        out = {}
+        for key, b_leaf in big.items():
+            if key == "block_tables":
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    b_leaf, table_row[None], slot, axis=0)
+            elif key in paged_keys:
+                o = one[key]                     # (layers, 1, slot_len, ...)
+                o = o[:, 0].reshape(
+                    (o.shape[0], max_pages, page_size) + o.shape[3:])
+                out[key] = b_leaf.at[:, table_row].set(o.astype(b_leaf.dtype))
+            else:
+                o_leaf = one[key].astype(b_leaf.dtype)
+                axis = 0 if b_leaf.ndim == 1 else 1
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    b_leaf, o_leaf, slot, axis=axis)
+        return out
+
+    return write
+
+
+def _clear_slot(cache, slot):
+    """Park a freed slot: position 0 + whole table row on the null page,
+    so its dead writes can never alias a page later granted to another
+    sequence."""
+    cache = dict(cache)
+    cache["pos"] = cache["pos"].at[slot].set(0)
+    cache["block_tables"] = cache["block_tables"].at[slot].set(NULL_PAGE)
+    return cache
 
 
 def make_engine(cfg, *, seed: int = 0, cache_len: int = 256,

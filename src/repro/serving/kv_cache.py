@@ -1,0 +1,217 @@
+"""Paged KV-cache management: a page pool, block tables, and ragged lengths.
+
+Why paging (the memory-side dual of D-STACK's packing argument)
+---------------------------------------------------------------
+The slot engine's original storage contract gave every slot a fixed-length
+ring: a sequence that generates 12 tokens pays the same KV memory as one
+that generates 512, so KV capacity — not compute — caps how many concurrent
+DNN instances the accelerator multiplexes (``EnginePool.admit`` blocks on
+free slots). The paged layout replaces the per-slot ring with a shared pool
+of fixed-size **pages** so long and short sequences share cache memory and
+memory in use tracks the tokens actually resident.
+
+Block-table layout (vLLM PagedAttention; on TPU, ``ragged_paged_attention``)
+---------------------------------------------------------------------------
+A paged cache is a pytree of ``(num_pages, page_size, ...)`` K/V buffers —
+the *physical* pool — plus two small per-sequence arrays:
+
+  ``block_tables``  (B, max_pages) int32   logical page i of row b lives in
+                                           physical page block_tables[b, i]
+  ``lengths``       (B,)           int32   valid tokens per row (the cache's
+                                           ``pos`` vector in the engine)
+
+Logical cache position ``t`` of row ``b`` is stored at
+``(block_tables[b, t // page_size], t % page_size)``. The decode kernel
+(``repro.kernels.paged_attention``) walks each row's table in logical order
+via scalar-prefetched index maps, skipping pages past the row's length, so
+both FLOPs and HBM traffic scale with actual sequence length.
+
+Physical page 0 is the reserved **null page**: the allocator never hands it
+out, freed rows point their whole table row at it, and vacant
+continuous-batching rows harmlessly scatter their dead writes into it
+(length 0 masks every read). That preserves the ring engine's "vacant rows
+cost nothing and corrupt nothing" invariant even though pages — unlike ring
+rows — are shared across sequences.
+
+``PageAllocator`` is the host-side free list (admission control reads
+``free_pages``); ``PagedKVCache`` wraps one model's device buffers with
+alloc / append / free and raises ``OutOfPages`` as the admission-blocking
+signal. The serving engine embeds the same pieces directly
+(``InferenceEngine.init_slots(paged=True)``); this module is the layer the
+engine, pool admission, and tests all share.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+NULL_PAGE = 0
+
+
+class OutOfPages(RuntimeError):
+    """The page pool cannot satisfy an allocation — the admission-control
+    signal: callers (``EnginePool.admit``) must defer or shrink the batch,
+    not crash."""
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` cache entries (at least one — every
+    live sequence owns a page so its writes never touch the null page)."""
+    return max(1, math.ceil(max(0, int(tokens)) / page_size))
+
+
+class PageAllocator:
+    """Host-side free list over a pool of ``num_pages`` usable pages.
+
+    Page ids are 1..num_pages — id 0 is the reserved null page (see module
+    docstring). Frees are LIFO so a free-then-alloc churn reuses hot pages;
+    fragmentation is a non-issue because every page is the same size and
+    tables provide full indirection (there is nothing contiguous to
+    fragment — the classic paging argument)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"need at least one usable page, got {num_pages}")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages, 0, -1))  # pop() -> 1 first
+        self._allocated: set = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        """Pop ``n`` pages, all-or-nothing. Raises OutOfPages when the pool
+        cannot cover the request (no partial grants — a half-allocated
+        sequence would deadlock against other half-allocated sequences)."""
+        if n > len(self._free):
+            raise OutOfPages(
+                f"requested {n} pages, {len(self._free)} free "
+                f"of {self.num_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Return pages to the pool. Double-frees and frees of the null
+        page are errors (they would alias two sequences onto one page)."""
+        for p in pages:
+            if p == NULL_PAGE:
+                raise ValueError("cannot free the reserved null page")
+            if p not in self._allocated:
+                raise ValueError(f"page {p} is not allocated")
+            self._allocated.remove(p)
+            self._free.append(p)
+
+
+@dataclasses.dataclass
+class SeqPages:
+    """One sequence's page ownership: its table prefix and valid length."""
+    pages: List[int]
+    length: int
+
+
+class PagedKVCache:
+    """Block-table bookkeeping for one paged cache (host side).
+
+    Tracks, per batch row, the ordered pages that row owns and its valid
+    length; the device pytree (K/V page buffers + ``block_tables`` +
+    ``pos``) is built by each model family's ``init_paged_cache`` and
+    updated by the engine's jitted scatter helpers — this class is the
+    source of truth the engine mirrors into those device arrays.
+    """
+
+    def __init__(self, batch: int, page_size: int, max_pages: int,
+                 allocator: Optional[PageAllocator] = None,
+                 num_pages: Optional[int] = None):
+        if allocator is None:
+            allocator = PageAllocator(num_pages or batch * max_pages)
+        self.allocator = allocator
+        self.batch = batch
+        self.page_size = page_size
+        self.max_pages = max_pages
+        self._rows: Dict[int, SeqPages] = {}
+
+    # ------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return self.allocator.free_pages
+
+    @property
+    def used_pages(self) -> int:
+        return self.allocator.used_pages
+
+    def length(self, row: int) -> int:
+        sp = self._rows.get(row)
+        return 0 if sp is None else sp.length
+
+    def pages(self, row: int) -> List[int]:
+        sp = self._rows.get(row)
+        return [] if sp is None else list(sp.pages)
+
+    def table_row(self, row: int) -> List[int]:
+        """Full (max_pages,) table row: owned pages then null-page padding
+        — a fixed shape, so the device-side row write never retraces."""
+        pages = self.pages(row)
+        return pages + [NULL_PAGE] * (self.max_pages - len(pages))
+
+    def pages_needed(self, tokens: int) -> int:
+        return pages_for(tokens, self.page_size)
+
+    def can_admit(self, tokens: int) -> bool:
+        return self.allocator.can_alloc(self.pages_needed(tokens))
+
+    # ------------------------------------------------------------ mutation
+    def alloc(self, row: int, tokens: int) -> List[int]:
+        """Claim a free row and allocate pages for ``tokens`` entries
+        (all-or-nothing; raises OutOfPages)."""
+        if row in self._rows:
+            raise ValueError(f"row {row} already allocated")
+        tokens = int(tokens)
+        if tokens > self.max_pages * self.page_size:
+            raise OutOfPages(
+                f"{tokens} tokens exceed the row maximum "
+                f"{self.max_pages * self.page_size}")
+        pages = self.allocator.alloc(self.pages_needed(tokens))
+        self._rows[row] = SeqPages(pages=pages, length=tokens)
+        return pages
+
+    def append(self, row: int, n: int = 1) -> List[int]:
+        """Advance row's length by ``n`` token slots, allocating new pages
+        lazily as page boundaries are crossed. Returns the newly allocated
+        pages (often empty — within-page appends are free). Raises
+        OutOfPages with the row untouched when the pool can't cover it."""
+        sp = self._rows.get(row)
+        if sp is None:
+            raise ValueError(f"row {row} has no pages (alloc first)")
+        new_len = sp.length + int(n)
+        if new_len > self.max_pages * self.page_size:
+            raise OutOfPages(
+                f"row {row}: {new_len} tokens exceed the row maximum "
+                f"{self.max_pages * self.page_size}")
+        need = pages_for(new_len, self.page_size) - len(sp.pages)
+        fresh = self.allocator.alloc(need) if need > 0 else []
+        sp.pages.extend(fresh)
+        sp.length = new_len
+        return fresh
+
+    def free(self, row: int) -> int:
+        """Release every page the row owns; returns how many. Idempotent
+        for unknown rows (mirrors the engine's ``free`` contract)."""
+        sp = self._rows.pop(row, None)
+        if sp is None:
+            return 0
+        self.allocator.free(sp.pages)
+        return len(sp.pages)
+
+    def reset(self) -> None:
+        for row in list(self._rows):
+            self.free(row)

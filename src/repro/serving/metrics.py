@@ -54,6 +54,14 @@ class ModelPoolMetrics:
     # downgrades got fewer chips than asked (slower than budgeted)
     alloc_upgrades: int = 0
     alloc_downgrades: int = 0
+    # paged-KV admission accounting: requests refused at least once
+    # because the page pool (KV memory), not slot count or chips,
+    # couldn't back their prompt + n_tokens horizon (counted once per
+    # request, however many planning cycles it sat blocked); and requests
+    # inserted into a running run's early-freed slots (mid-run
+    # re-admission)
+    blocked_on_memory: int = 0
+    topups: int = 0
     runtime: float = 0.0       # virtual busy seconds (Σ run latencies)
     chip_seconds: float = 0.0  # allocation-weighted: Σ chips·latency
     tokens: int = 0
@@ -78,6 +86,9 @@ class PoolResult:
     wall_s: float              # host wall-clock spent executing it
     per_model: Dict[str, ModelPoolMetrics]
     occupancy: float           # ∫ min(alloc_frac, 1) dt / duration
+    # ∫ (KV pages in use / usable pages) dt / duration — how hard the
+    # paged cache memory is actually working (0.0 for unpaged pools)
+    page_occupancy: float = 0.0
     steps: int = 0             # real engine decode dispatches issued
     truncated: bool = False    # hit a controller backstop (max_steps /
                                # max_time) — metrics cover a partial run
@@ -112,6 +123,7 @@ class PoolResult:
             f"tok/s={self.total_tokens / self.duration:9.0f} "
             f"viol={self.total_violated:5d} "
             f"jain={self.fairness():.3f} occ={self.occupancy:.3f} "
+            f"pages={self.page_occupancy:.3f} "
             f"steps={self.steps} wall={self.wall_s:.2f}s"
             + (" [TRUNCATED]" if self.truncated else "")]
         for n, m in sorted(self.per_model.items()):
@@ -123,5 +135,8 @@ class PoolResult:
                    if m.alloc_upgrades else "")
                 + (f" alloc_down={m.alloc_downgrades}"
                    if m.alloc_downgrades else "")
+                + (f" mem_blocked={m.blocked_on_memory}"
+                   if m.blocked_on_memory else "")
+                + (f" topups={m.topups}" if m.topups else "")
                 + (f" abandoned={m.abandoned}" if m.abandoned else ""))
         return rows

@@ -110,11 +110,15 @@ class PoolRun:
     batch: int
     engine: InferenceEngine
     slots: Dict[int, Request]
-    remaining: Dict[int, int]  # decode tokens left per slot
+    remaining: Dict[int, int]  # decode tokens left per slot (ragged budgets)
     latency: float             # modeled total run latency at granted chips
-    step_cost: float           # latency / gen_len — virtual cost per step
+    step_cost: float           # latency / max budget — virtual cost per step
     start: float
     next_time: float
+    # a slot finished before the run did (ragged per-request n_tokens) —
+    # the gate for mid-run re-admission (``topup``): uniform-budget runs
+    # never trip it, so they behave exactly as before paging
+    freed_early: bool = False
 
 
 class EnginePool:
@@ -133,6 +137,7 @@ class EnginePool:
         self._seq = 0
         self._alloc_frac = 0.0
         self._occ_area = 0.0
+        self._page_area = 0.0
         self._last_t = 0.0
         self.reset()
 
@@ -151,10 +156,12 @@ class EnginePool:
         self.queues = {n: RequestQueue(n, p.slo)
                        for n, p in self.profiles.items()}
         self._metrics = {n: ModelPoolMetrics() for n in self.profiles}
+        self._blocked_rids = {n: set() for n in self.profiles}
         self._runs.clear()
         self._seq = 0
         self._alloc_frac = 0.0
         self._occ_area = 0.0
+        self._page_area = 0.0
         self._last_t = 0.0
         for host in self.hosts.values():
             for eng in host.engines():
@@ -163,10 +170,15 @@ class EnginePool:
 
     def warmup(self) -> None:
         """Compile every standby engine's insert-prefill + slot-step path
-        once, up front — after this, serving recompiles nothing."""
+        once, up front — after this, serving recompiles nothing. The warm
+        insert uses a 1-token budget: the executables are identical for
+        every budget (the table row is always the full padded shape), and
+        an unbudgeted insert would reserve the whole slot's pages —
+        crashing pools deliberately built with fewer pages than one slot
+        maximum (the oversubscription knob)."""
         for host in self.hosts.values():
             for eng in host.engines():
-                slot = eng.insert(host.prompt_batch())
+                slot = eng.insert(host.prompt_batch(), n_tokens=1)
                 eng.step()
                 eng.free(slot)
         self.reset()
@@ -183,11 +195,83 @@ class EnginePool:
     def push(self, req: Request) -> None:
         self.queues[req.model].push(req)
 
+    def page_usage(self) -> tuple:
+        """(pages in use, servable pages) — the KV-memory analogue of
+        allocation occupancy. Pages in use sum over every standby engine,
+        but the denominator counts each model's LARGEST standby pool only:
+        at most one standby per model serves at a time, so summing all of
+        them would cap the reported occupancy at 1/n_standbys even with
+        the active pool fully allocated."""
+        used = total = 0
+        for host in self.hosts.values():
+            total += max((e.total_pages for e in host.engines()), default=0)
+            used += sum(e.total_pages - e.free_pages for e in host.engines())
+        return used, total
+
     def advance_time(self, t: float) -> None:
-        """Accumulate allocation occupancy up to ``t`` (controller owns
-        the clock and calls this before moving ``now`` forward)."""
-        self._occ_area += min(self._alloc_frac, 1.0) * (t - self._last_t)
+        """Accumulate allocation + page occupancy up to ``t`` (controller
+        owns the clock and calls this before moving ``now`` forward)."""
+        dt = t - self._last_t
+        self._occ_area += min(self._alloc_frac, 1.0) * dt
+        used, total = self.page_usage()
+        if total:
+            self._page_area += (used / total) * dt
         self._last_t = t
+
+    def _pop_admissible(self, model: str, eng: InferenceEngine,
+                        max_batch: int, now: float, gen_len: int,
+                        drop_expired: bool) -> List:
+        """Pop up to ``max_batch`` requests the engine can actually back:
+        a free slot AND pages for each request's whole prompt + n_tokens
+        horizon (``Request.n_tokens``; 0 = the controller default,
+        budgets above the slot's page capacity are capped to it, matching
+        the engine). The single admission gate shared by ``admit`` and
+        ``topup`` — KV memory, not slot count, is what it enforces under
+        paging. Requests the pool cannot back go straight back to the
+        queue; each is counted in ``blocked_on_memory`` ONCE over its
+        lifetime (not once per planning cycle it sits blocked).
+        Returns [(request, token budget)], in queue order.
+
+        Smaller requests may bypass a page-blocked larger one — a
+        deliberate packing choice (throughput over strict FIFO). The
+        bypassed request cannot starve unboundedly: it expires at its SLO
+        deadline and is dropped+counted like any other violation. A
+        reservation/aging scheme that holds pages for the FIFO head is
+        the anti-starvation follow-on noted in the ROADMAP."""
+        q = self.queues[model]
+        host = self.hosts[model]
+        m = self._metrics[model]
+        gen_len = max(1, gen_len)
+        room = max(1, eng.slot_len - host.prompt_len)
+        cap = min(max_batch, eng.free_slots)
+        pages_left = eng.free_pages
+        kept: List = []
+        blocked: List[Request] = []
+        # scan deeper than the cap: page-blocked requests must not consume
+        # batch quota, or admissible requests behind them under-fill the
+        # run in exactly the page-constrained regime paging targets.
+        # Blocked requests are re-pushed only AFTER the scan, so the pop
+        # can never retrieve the same request twice.
+        while len(kept) < cap and len(q):
+            got = q.pop_batch(1, now, drop_expired)
+            if not got:
+                break                       # remainder all expired
+            req = got[0]
+            budget = max(1, req.n_tokens if req.n_tokens > 0 else gen_len)
+            if eng.paged:
+                budget = min(budget, room)
+                need = eng.pages_needed(host.prompt_len, budget)
+                if need > pages_left:
+                    blocked.append(req)
+                    if req.rid not in self._blocked_rids[model]:
+                        self._blocked_rids[model].add(req.rid)
+                        m.blocked_on_memory += 1
+                    continue
+                pages_left -= need
+            kept.append((req, budget))
+        for req in blocked:
+            q.push(req)
+        return kept
 
     def admit(self, rr: RunRequest, now: float, gen_len: int,
               drop_expired: bool = True) -> Optional[PoolRun]:
@@ -212,7 +296,12 @@ class EnginePool:
         if host is None:
             return None
         if any(r.model == rr.model for r in self._runs.values()):
-            return None                       # one run per model at a time
+            # one run per model at a time. Also load-bearing for budget
+            # accounting: engines belong to one model, so this guarantees
+            # at most one run per ENGINE — engine.step() advances every
+            # active slot's generated counter, which is only correct while
+            # all of an engine's slots belong to the same run (+ topups).
+            return None
         q = self.queues[rr.model]
         if len(q) == 0:
             return None
@@ -231,27 +320,28 @@ class EnginePool:
                       and alloc.chips < min(rr.chips, total))
         if alloc is None or alloc.engine.free_slots == 0:
             return None
-        batch = q.pop_batch(min(rr.batch, alloc.engine.free_slots), now,
-                            drop_expired)
-        if not batch:
+        eng = alloc.engine
+        kept = self._pop_admissible(rr.model, eng, rr.batch, now, gen_len,
+                                    drop_expired)
+        if not kept:
             return None
         prof = self.profiles[rr.model]
-        lat = prof.latency(alloc.chips, len(batch)) * rr.dilation
-        gen_len = max(1, gen_len)
+        lat = prof.latency(alloc.chips, len(kept)) * rr.dilation
+        gen_max = max(b for _, b in kept)
         run = PoolRun(
             seq=self._seq, model=rr.model, req_chips=rr.chips,
             chips=alloc.chips, frac=alloc.chips / total,
-            batch=len(batch), engine=alloc.engine, slots={}, remaining={},
-            latency=lat, step_cost=lat / gen_len, start=now,
-            next_time=now + self.sim.dispatch_gap + lat / gen_len)
-        for req in batch:
-            slot = alloc.engine.insert(host.prompt_batch())
+            batch=len(kept), engine=eng, slots={}, remaining={},
+            latency=lat, step_cost=lat / gen_max, start=now,
+            next_time=now + self.sim.dispatch_gap + lat / gen_max)
+        for req, budget in kept:
+            slot = eng.insert(host.prompt_batch(), n_tokens=budget)
             run.slots[slot] = req
-            run.remaining[slot] = gen_len
+            run.remaining[slot] = budget
+        m = self._metrics[rr.model]
         self._seq += 1
         self._runs[run.seq] = run
         self._alloc_frac += run.frac
-        m = self._metrics[rr.model]
         m.runs += 1
         m.alloc_upgrades += int(upgraded)
         m.alloc_downgrades += int(downgraded)
@@ -259,21 +349,62 @@ class EnginePool:
         m.chip_seconds += alloc.chips * lat
         return run
 
+    def topup(self, run: PoolRun, now: float, gen_len: int,
+              drop_expired: bool = True) -> int:
+        """Mid-run re-admission: refill slots that ragged budgets freed
+        early, without waiting for the run (or the policy) — continuous
+        batching at the pool level. Refills never grow the run past its
+        admit-time batch: that batch is what the policy sized against the
+        SLO (Eq. 11/12) and what ``step_cost`` was derived from, so the
+        run's concurrency — and its modeled per-step latency — stay
+        honest. The span the new requests add is what is charged to the
+        model's runtime/chip-seconds ledger (the paper's fairness
+        currency) — concurrent tokens are not double-billed."""
+        if not run.freed_early or run.model not in self.queues:
+            return 0
+        host = self.hosts[run.model]
+        eng = run.engine
+        refill = min(eng.free_slots, run.batch - len(run.remaining))
+        if len(self.queues[run.model]) == 0 or refill <= 0:
+            return 0
+        before = max(run.remaining.values(), default=0)
+        kept = self._pop_admissible(run.model, eng, refill, now,
+                                    gen_len, drop_expired)
+        for req, budget in kept:
+            slot = eng.insert(host.prompt_batch(), n_tokens=budget)
+            run.slots[slot] = req
+            run.remaining[slot] = budget
+        if kept:
+            m = self._metrics[run.model]
+            extension = max(0, max(run.remaining.values()) - before)
+            m.topups += len(kept)
+            m.runtime += extension * run.step_cost
+            m.chip_seconds += run.chips * extension * run.step_cost
+            run.latency += extension * run.step_cost
+        return len(kept)
+
     def step_run(self, run: PoolRun, now: float) -> bool:
-        """One REAL decode dispatch for all of this run's slots; completes
-        and frees slots whose token budget is exhausted. True when the run
+        """One REAL decode dispatch for all of this run's slots. The
+        engine's done flags (per-request token budgets) say which slots
+        finished: their requests complete NOW — mid-run, at ragged times —
+        and their pages return to the pool immediately. True when the run
         finished and its allocation was released."""
-        run.engine.step()
-        done: List[Request] = []
-        for slot in list(run.remaining):
+        _, done = run.engine.step()
+        completed: List[Request] = []
+        for slot in done:
+            req = run.slots.pop(slot, None)
+            if req is None:
+                continue                  # not this run's slot (warm state)
+            run.engine.free(slot)
+            run.remaining.pop(slot, None)
+            completed.append(req)
+        for slot in run.remaining:
             run.remaining[slot] -= 1
-            if run.remaining[slot] <= 0:
-                run.engine.free(slot)
-                done.append(run.slots.pop(slot))
-                del run.remaining[slot]
-        self._metrics[run.model].tokens += len(done) + len(run.remaining)
-        if done:
-            self.queues[run.model].complete(done, now)
+        self._metrics[run.model].tokens += len(completed) + len(run.remaining)
+        if completed:
+            self.queues[run.model].complete(completed, now)
+            if run.remaining:
+                run.freed_early = True
         if not run.remaining:
             del self._runs[run.seq]
             self._alloc_frac -= run.frac
@@ -307,6 +438,7 @@ class EnginePool:
         duration = duration or 1e-9
         return PoolResult(policy=policy, duration=duration, wall_s=wall_s,
                           per_model=per, occupancy=self._occ_area / duration,
+                          page_occupancy=self._page_area / duration,
                           steps=steps)
 
 
@@ -316,24 +448,40 @@ class EnginePool:
 def default_allocations(profile: ModelProfile) -> List[int]:
     """Standby allocation candidates for one model: its efficacy-optimal
     chips and its knee (§5) — the two operating points D-STACK's dynamic
-    adaptation moves between — plus the full pod, because temporal /
-    Triton-style baselines schedule whole-accelerator runs and must get
-    the latency they budgeted for, not a silently-downgraded sub-mesh."""
-    return sorted({max(1, profile.opt_chips), max(1, profile.knee_chips),
-                   profile.hw.chips_per_pod})
+    adaptation moves between — plus, when knee and opt sit far apart, a
+    geometric mid point between them (§6.1.2: the dynamic fair pass then
+    has a standby to *partially* shrink onto instead of jumping the whole
+    way to the knee), plus the full pod, because temporal / Triton-style
+    baselines schedule whole-accelerator runs and must get the latency
+    they budgeted for, not a silently-downgraded sub-mesh."""
+    lo, hi = sorted((max(1, profile.opt_chips), max(1, profile.knee_chips)))
+    allocs = {lo, hi, profile.hw.chips_per_pod}
+    if hi >= 4 * lo:
+        # pow2 geometric mid point of the knee..opt span
+        mid = 1 << ((lo.bit_length() - 1 + hi.bit_length() - 1 + 1) // 2)
+        allocs.add(min(hi, max(lo, mid)))
+    return sorted(allocs)
 
 
 def build_host(name: str, *, profile: Optional[ModelProfile] = None,
                allocations: Optional[Sequence[int]] = None,
                base_slots: int = 4, cache_len: int = 32,
                prompt_len: int = 8, seed: int = 0,
-               request_rate: float = 500.0, reduced: bool = True) -> ModelHost:
+               request_rate: float = 500.0, reduced: bool = True,
+               paged: bool = True, page_size: int = 8,
+               total_pages: Optional[int] = None) -> ModelHost:
     """Build one hosted model: weights once, one standby engine per
     allocation. Every standby hosts the same ``base_slots`` KV slots so
     batch capacity is identical across allocations — what the policy's
     chip choice changes is the run's (modeled) latency, not how much it
     can batch, which isolates the spatial-allocation effect the paper
-    studies."""
+    studies.
+
+    ``base_slots`` / ``page_size`` / ``total_pages`` are the per-model
+    capacity knobs: ``total_pages`` defaults to ``base_slots * cache_len /
+    page_size`` (ring-equivalent bytes); passing fewer pages than that —
+    or more slots over the same pages — is how a host oversubscribes KV
+    memory and lets the page pool, not the slot count, gate admission."""
     from repro.configs import get_config
     from repro.models.registry import build_model
 
@@ -343,11 +491,18 @@ def build_host(name: str, *, profile: Optional[ModelProfile] = None,
         cfg = cfg.reduced()
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(seed))
+    if paged and api.paged_keys and prompt_len >= cache_len:
+        raise ValueError(
+            f"{name}: prompt_len {prompt_len} leaves no decode room in a "
+            f"{cache_len}-token paged slot — every admission would be "
+            f"refused (paged slots never evict; raise cache_len)")
     chip_opts = sorted(set(allocations or default_allocations(profile)))
     standby: Dict[int, StandbyAllocation] = {}
     for chips in chip_opts:
         eng = InferenceEngine(api, params, cache_len=cache_len,
-                              alloc_chips=chips).init_slots(base_slots)
+                              alloc_chips=chips).init_slots(
+            base_slots, paged=paged, page_size=page_size,
+            total_pages=total_pages)
         standby[chips] = StandbyAllocation(chips, base_slots, eng)
     return ModelHost(cfg, api, params, profile, standby,
                      prompt_len=prompt_len)
@@ -357,16 +512,22 @@ def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
                base_slots: int = 4, cache_len: int = 32, prompt_len: int = 8,
                allocations: Optional[Dict[str, Sequence[int]]] = None,
                caps: Optional[PoolCaps] = None, warm: bool = True,
-               reduced: bool = True) -> EnginePool:
+               reduced: bool = True, paged: bool = True, page_size: int = 8,
+               slots: Optional[Dict[str, int]] = None,
+               pages: Optional[Dict[str, int]] = None) -> EnginePool:
     """Build an EnginePool over reduced real models and (by default) warm
-    every standby executable so the measured run compiles nothing."""
+    every standby executable so the measured run compiles nothing.
+    ``slots`` / ``pages`` override slot count / usable page count per
+    model name (the ROADMAP "per-model tuning" knobs — e.g. give a
+    p50-lagging model more slots without re-sizing every host)."""
     hosts: Dict[str, ModelHost] = {}
     for i, name in enumerate(names):
         host = build_host(
             name, allocations=(allocations or {}).get(name),
-            base_slots=base_slots, cache_len=cache_len,
-            prompt_len=prompt_len, seed=i, request_rate=request_rate,
-            reduced=reduced)
+            base_slots=(slots or {}).get(name, base_slots),
+            cache_len=cache_len, prompt_len=prompt_len, seed=i,
+            request_rate=request_rate, reduced=reduced, paged=paged,
+            page_size=page_size, total_pages=(pages or {}).get(name))
         hosts[host.profile.name] = host
     pool = EnginePool(hosts, caps=caps)
     if warm:

@@ -18,7 +18,11 @@ class Request:
     rid: int = dataclasses.field(compare=False)
     model: str = dataclasses.field(compare=False)
     slo: float = dataclasses.field(compare=False)          # seconds
-    n_tokens: int = dataclasses.field(compare=False, default=1)
+    # decode tokens this request wants. 0 means "scheduler default"
+    # (ControllerConfig.gen_len); a positive value is honored as the
+    # slot's per-request token budget — mixed values make runs ragged,
+    # free slots early, and shrink the pages the request pins.
+    n_tokens: int = dataclasses.field(compare=False, default=0)
 
     @property
     def deadline(self) -> float:
@@ -106,16 +110,32 @@ def materialize_arrivals(generators, horizon: float,
 
 
 class RequestGenerator:
-    """Deterministic arrival stream (uniform-jittered, like the paper §6.3)."""
+    """Deterministic arrival stream (uniform-jittered, like the paper §6.3).
 
-    def __init__(self, model: str, rate_per_s: float, slo: float, seed: int = 0):
+    ``gen_tokens`` stamps each request's decode budget (``n_tokens``): an
+    int for a uniform workload, a ``(lo, hi)`` pair for a mixed-length
+    stream (budget drawn uniformly, inclusive, from the same seeded rng as
+    the arrival jitter — fully reproducible), or None to leave requests on
+    the scheduler default."""
+
+    def __init__(self, model: str, rate_per_s: float, slo: float,
+                 seed: int = 0, gen_tokens=None):
         import numpy as np
         self.model = model
         self.rate = rate_per_s
         self.slo = slo
+        self.gen_tokens = gen_tokens
         self._rng = np.random.default_rng(seed)
         self._next_id = 0
         self._t = 0.0
+
+    def _draw_tokens(self) -> int:
+        if self.gen_tokens is None:
+            return 0
+        if isinstance(self.gen_tokens, int):
+            return max(1, self.gen_tokens)
+        lo, hi = self.gen_tokens
+        return int(self._rng.integers(max(1, lo), max(1, hi) + 1))
 
     def until(self, t_end: float) -> List[Request]:
         """All requests arriving in [current position, t_end)."""
@@ -132,7 +152,8 @@ class RequestGenerator:
                 break
             self._t += gap
             out.append(Request(arrival=self._t, rid=self._next_id,
-                               model=self.model, slo=self.slo))
+                               model=self.model, slo=self.slo,
+                               n_tokens=self._draw_tokens()))
             self._next_id += 1
         return out
 

@@ -137,15 +137,15 @@ def test_slot_insert_free_roundtrip_keeps_other_slots_unchanged():
     eng = make_engine(cfg, cache_len=32).init_slots(2)
     sa = eng.insert(pa)
     sb = eng.insert(pb)
-    stream = [np.asarray(eng.step())[sb] for _ in range(2)]
+    stream = [np.asarray(eng.step()[0])[sb] for _ in range(2)]
     eng.free(sa)                              # churn: free + reuse slot
     sc = eng.insert(pc)
     assert sc == sa                           # slot actually reused
-    stream += [np.asarray(eng.step())[sb] for _ in range(2)]
+    stream += [np.asarray(eng.step()[0])[sb] for _ in range(2)]
 
     solo = make_engine(cfg, cache_len=32).init_slots(2)
     sb2 = solo.insert(pb)
-    want = [np.asarray(solo.step())[sb2] for _ in range(4)]
+    want = [np.asarray(solo.step()[0])[sb2] for _ in range(4)]
     assert stream == want
 
 
@@ -159,11 +159,11 @@ def test_slot_free_then_insert_fresh_sequence():
         eng.step()
     eng.free(sa)
     sb = eng.insert(pb)
-    got = [np.asarray(eng.step())[sb] for _ in range(3)]
+    got = [np.asarray(eng.step()[0])[sb] for _ in range(3)]
 
     solo = make_engine(cfg, cache_len=32).init_slots(2)
     sb2 = solo.insert(pb)
-    want = [np.asarray(solo.step())[sb2] for _ in range(3)]
+    want = [np.asarray(solo.step()[0])[sb2] for _ in range(3)]
     assert got == want
 
 
