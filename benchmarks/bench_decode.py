@@ -218,6 +218,115 @@ def bench_paged(rows, *, n_slots: int, cache_len: int, page_size: int,
     return pk_p / max(1, pk_r)
 
 
+def bench_packed_prefill(rows, *, batch_size: int, cache_len: int,
+                         len_range, n_batches: int, iters: int):
+    """Packed ragged prefill vs pad-to-max on a mixed-length prompt stream.
+
+    The padded baseline is what the engine did before: every prompt in an
+    admission batch padded to the batch's pow2 length bucket, one (B, max)
+    prefill dispatch. The packed path concatenates the same prompts into
+    one (1, sum-of-lens bucketed) row with segment ids. Tokens/s is
+    counted over REAL prompt tokens for both, so padding waste shows up as
+    lost throughput, exactly as it does on the accelerator.
+
+    The stream is heavy-tailed (70% of prompts from the low third of
+    ``len_range``, 30% from the high end) — the shape real prompt-length
+    traces have, and the regime the padded path handles worst: one long
+    prompt drags every short prompt in its batch up to the long bucket,
+    while the packed row grows only by the actual tokens. Also reports
+    the admission-side dispatch counts: ``insert_many`` must prefill each
+    admission batch in ONE dispatch (asserted via engine stats) where
+    sequential ``insert`` pays one per request."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.serving.engine import _pow2_at_least, make_engine
+
+    cfg = get_config("olmo-1b").reduced()
+    eng = make_engine(cfg, cache_len=cache_len).init_slots(
+        batch_size, paged=True, page_size=8)
+    rng = np.random.default_rng(0)
+    lo, hi = len_range
+    cut = lo + (hi - lo) // 3
+
+    def draw():
+        if rng.random() < 0.7:
+            return int(rng.integers(lo, cut + 1))
+        return int(rng.integers(max(cut + 1, hi - (hi - lo) // 3), hi + 1))
+
+    stream = [sorted(draw() for _ in range(batch_size))
+              for _ in range(n_batches)]
+
+    def prompts(lens):
+        return [{"tokens": jnp.ones((1, s), jnp.int32)} for s in lens]
+
+    padded, packed = [], []
+    real_tokens = 0
+    for lens in stream:
+        real_tokens += sum(lens)
+        bucket = _pow2_at_least(max(lens))
+        toks = np.zeros((batch_size, bucket), np.int32)
+        for i, s in enumerate(lens):
+            toks[i, :s] = 1
+        padded.append({"tokens": jnp.asarray(toks)})
+        packed.append(eng._pack_prompts(prompts(lens), lens))
+
+    def run_padded():
+        out = None
+        for b in padded:
+            out = eng.prefill(b, cache_len)[0]
+        return out
+
+    def run_packed():
+        out = None
+        for p in packed:
+            out = eng.prefill_packed(p)[0]
+        return out
+
+    jax.block_until_ready(run_padded())       # warm every bucket
+    jax.block_until_ready(run_packed())
+    t_pad = _time(lambda: jax.block_until_ready(run_padded()), iters=iters)
+    t_pkd = _time(lambda: jax.block_until_ready(run_packed()), iters=iters)
+    pad_tokens = sum(b["tokens"].shape[0] * b["tokens"].shape[1]
+                     for b in padded)
+    rows.append((f"prefill/padded_b{batch_size}", t_pad * 1e6,
+                 f"{real_tokens / t_pad:.0f} tok/s "
+                 f"({pad_tokens} padded tokens)"))
+    rows.append((f"prefill/packed_b{batch_size}", t_pkd * 1e6,
+                 f"{real_tokens / t_pkd:.0f} tok/s "
+                 f"({sum(p['tokens'].shape[1] for p in packed)} "
+                 f"packed tokens)"))
+    rows.append(("prefill/packed_speedup_vs_padded", 0.0,
+                 f"{t_pad / t_pkd:.2f}x tokens/s"))
+
+    # admission-side dispatch counts: one packed prefill per admission
+    # batch (asserted) vs one per request for sequential insert
+    def admit_stream(engine, many: bool):
+        for lens in stream:
+            batch = prompts(lens)
+            if many:
+                slots = engine.insert_many(batch, n_tokens=[1] * len(lens))
+            else:
+                slots = [engine.insert(b, n_tokens=1) for b in batch]
+            engine.step()
+            for slot in slots:
+                engine.free(slot)
+
+    seq = make_engine(cfg, cache_len=cache_len).init_slots(
+        batch_size, paged=True, page_size=8)
+    many = make_engine(cfg, cache_len=cache_len).init_slots(
+        batch_size, paged=True, page_size=8)
+    admit_stream(seq, many=False)
+    admit_stream(many, many=True)
+    assert many.stats.packed_prefills == n_batches, (
+        many.stats.packed_prefills, n_batches)
+    assert many.stats.prefills == n_batches
+    fewer = seq.stats.prefills / many.stats.prefills
+    rows.append(("prefill/insert_many_dispatches", 0.0,
+                 f"{many.stats.prefills} vs {seq.stats.prefills} "
+                 f"sequential ({fewer:.1f}x fewer)"))
+    return t_pad / t_pkd
+
+
 def run(quick: bool = True, smoke: bool = False):
     rows = []
     if smoke:
@@ -232,6 +341,7 @@ def run(quick: bool = True, smoke: bool = False):
                        prompt_lens=(24, 40, 56, 72, 96, 128))
         bench_ragged(rows, cache_len=8192, block_k=512, iters=5)
     rows.extend(run_paged(quick=quick, smoke=smoke))
+    rows.extend(run_packed_prefill(quick=quick, smoke=smoke))
     return rows
 
 
@@ -249,6 +359,20 @@ def run_paged(quick: bool = True, smoke: bool = False):
     return rows
 
 
+def run_packed_prefill(quick: bool = True, smoke: bool = False):
+    rows = []
+    if smoke:
+        bench_packed_prefill(rows, batch_size=4, cache_len=32,
+                             len_range=(4, 24), n_batches=2, iters=1)
+    elif quick:
+        bench_packed_prefill(rows, batch_size=8, cache_len=128,
+                             len_range=(16, 120), n_batches=6, iters=3)
+    else:
+        bench_packed_prefill(rows, batch_size=16, cache_len=256,
+                             len_range=(16, 248), n_batches=8, iters=3)
+    return rows
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser()
@@ -257,8 +381,15 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--paged", action="store_true",
                     help="ring vs paged KV slots on a mixed-length stream")
+    ap.add_argument("--packed-prefill", action="store_true",
+                    help="packed ragged prefill vs pad-to-max on a "
+                         "mixed-length prompt stream")
     args = ap.parse_args()
-    fn = run_paged if args.paged else run
+    fn = run
+    if args.paged:
+        fn = run_paged
+    elif args.packed_prefill:
+        fn = run_packed_prefill
     print("name,us_per_call,derived")
     for name, us, derived in fn(quick=not args.full, smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -86,6 +86,131 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
 
 
+def _segment_flash_kernel(seg_smem, q_ref, k_ref, v_ref, qseg_ref, kseg_ref,
+                          o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                          window: int, block_q: int, block_k: int, nk: int):
+    """Packed-prefill flash body: same online softmax as ``_flash_kernel``
+    plus a segment-equality mask, with fully cross-segment tiles skipped.
+
+    ``seg_smem`` is the scalar-prefetched (B, T) segment-id vector — the
+    segment *boundaries* read at tile granularity (the same trick the
+    paged decode kernel plays with its block table): because ids are
+    non-decreasing along the packed row, a kv tile whose LAST id is below
+    the q tile's FIRST id lies entirely in earlier segments and is skipped
+    wholesale via ``pl.when``. ``qseg_ref``/``kseg_ref`` are the same ids
+    as VMEM tiles for the per-element mask inside surviving tiles."""
+    bi = pl.program_id(0)
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    # causal skip (future tiles) + segment skip (tiles wholly in earlier
+    # segments: max kv-tile id < min q-tile id)
+    should_run = k_start <= q_start + block_q - 1
+    should_run &= seg_smem[bi, k_start + block_k - 1] >= seg_smem[bi, q_start]
+    if window:
+        should_run &= (q_start - (k_start + block_k - 1)) < window
+
+    @pl.when(should_run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        qseg = qseg_ref[0, :].reshape(block_q, 1)
+        kseg = kseg_ref[0, :].reshape(1, block_k)
+        mask = (qseg == kseg) & (qpos >= kpos)
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    # the diagonal tile always runs (a token attends at least to itself,
+    # and its kv tile's last id >= its own id), so finalizing there is safe
+    last_j = jnp.minimum(nk - 1, (q_start + block_q - 1) // block_k)
+
+    @pl.when(j == last_j)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def segment_flash_attention(q, k, v, seg_ids, *, window: int = 0,
+                            block_q: int = 512, block_k: int = 512,
+                            interpret: bool = False):
+    """Segment-masked causal flash attention for packed ragged prefill.
+
+    q: (B,T,H,D); k,v: (B,T,KV,D); seg_ids: (T,) or (B,T) non-decreasing
+    int32 segment ids (padding tokens carry an id no real token shares).
+    Token i attends to token j iff their ids match and j <= i. Tiles that
+    lie entirely in earlier segments are skipped via the scalar-prefetched
+    boundary test — packed mixed-length batches pay for their actual
+    token pairs, not the (sum of lengths)² rectangle."""
+    b, t, h, d = q.shape
+    kvh = k.shape[2]
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    nq, nk = t // block_q, t // block_k
+    scale = 1.0 / np.sqrt(d)
+    seg = jnp.asarray(seg_ids, jnp.int32)
+    seg = jnp.broadcast_to(seg.reshape(-1, t) if seg.ndim > 1
+                           else seg[None, :], (b, t))
+
+    kernel = functools.partial(
+        _segment_flash_kernel, scale=scale, window=window,
+        block_q=block_q, block_k=block_k, nk=nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda b_, h_, i, j, seg_ref: (b_, i, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda b_, h_, i, j, seg_ref: (b_, j, h_ * kvh // h, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda b_, h_, i, j, seg_ref: (b_, j, h_ * kvh // h, 0)),
+            pl.BlockSpec((1, block_q),
+                         lambda b_, h_, i, j, seg_ref: (b_, i)),
+            pl.BlockSpec((1, block_k),
+                         lambda b_, h_, i, j, seg_ref: (b_, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda b_, h_, i, j, seg_ref: (b_, i, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(seg, q, k, v, seg, seg)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 512, block_k: int = 512,
                     interpret: bool = False):

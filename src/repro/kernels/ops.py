@@ -46,6 +46,20 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     raise ValueError(backend)
 
 
+def segment_flash_attention(q, k, v, seg_ids, *, window: int = 0,
+                            block_q: int = 512, block_k: int = 512,
+                            backend: Optional[str] = None):
+    """Segment-masked causal attention over a packed ragged-prefill row."""
+    backend = backend or default_backend()
+    if backend in ("pallas", "interpret"):
+        return _fa.segment_flash_attention(
+            q, k, v, seg_ids, window=window, block_q=block_q,
+            block_k=block_k, interpret=(backend == "interpret"))
+    if backend == "ref":
+        return _ref.packed_attention_ref(q, k, v, seg_ids, window=window)
+    raise ValueError(backend)
+
+
 # --------------------------------------------------------------------------
 # SSD (mamba2)
 # --------------------------------------------------------------------------

@@ -32,6 +32,34 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     return jnp.einsum("bhqk,bkhd->bqhd", w, vr.astype(jnp.float32)).astype(q.dtype)
 
 
+def packed_attention_ref(q, k, v, seg_ids, *, window: int = 0):
+    """Segment-blocked causal attention over a packed token row.
+
+    q: (B,T,H,D), k/v: (B,T,KV,D); seg_ids: (T,) or (B,T) int32 — token t
+    belongs to segment seg_ids[..., t] (non-decreasing; padding tokens
+    carry an id no real token shares). Token i attends to token j iff
+    their ids match and j <= i (packed positions are globally ascending,
+    so global causality == within-segment causality). fp32 internals."""
+    b, t, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    kr.astype(jnp.float32)) / np.sqrt(d)
+    seg = jnp.asarray(seg_ids, jnp.int32)
+    seg = jnp.broadcast_to(seg.reshape(-1, t) if seg.ndim > 1
+                           else seg[None, :], (b, t))
+    qp = jnp.arange(t)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = (seg[:, :, None] == seg[:, None, :]) & (qp >= kp)   # (B,T,T)
+    if window:
+        mask &= qp - kp < window
+    sc = jnp.where(mask[:, None], sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vr.astype(jnp.float32)).astype(q.dtype)
+
+
 def decode_attention_ref(q, k_cache, v_cache, valid_len):
     """q: (B,H,D); caches (B,C,KV,D); valid_len: scalar or (B,) lengths.
 

@@ -226,6 +226,56 @@ def prefill(params, cfg, tokens, cache_len: int, enc_embeds):
                     "pos": jnp.full((b,), s, jnp.int32)}
 
 
+def prefill_packed(params, cfg, packed, max_seg_len: int):
+    """Packed ragged prefill: only the DECODER side packs. The encoder
+    runs densely over the per-segment ``enc_embeds`` stack (S, enc_seq,
+    d) — encoder frames are fixed-length per request, there is nothing
+    ragged to pack — and each packed decoder token cross-attends its own
+    segment's encoder output (``layers.packed_cross_attention``).
+    Decoder self-attention K/V comes back in packed per-token order
+    (layers, T, KV, D) for the engine's direct-to-pages scatter; the
+    cross K/V stays a per-segment dense block, exactly like the per-slot
+    layout it is scattered into."""
+    tokens = packed["tokens"]
+    seg_ids, seg_starts = packed["seg_ids"], packed["seg_starts"]
+    seg_lens = packed["seg_lens"]
+    dtype = jnp.dtype(cfg.dtype)
+    b, t = tokens.shape
+    enc_out = encode(params, cfg, packed["enc_embeds"])   # (S, enc_seq, d)
+    pos = L.packed_positions(seg_ids, seg_starts)
+    positions = pos[None, :]
+    x = (L.embed_tokens(params["embed"], tokens, dtype)
+         + params["dec_pos"][pos][None].astype(dtype))
+
+    def body(carry, lp):
+        h = L.apply_norm(lp["ln1"], carry, cfg.norm)
+        q, k, v = L.attn_qkv(lp["self_attn"], cfg, h, positions)
+        attn = L.packed_prefill_attention(q, k, v, seg_ids, pos,
+                                          seg_starts, seg_lens,
+                                          row_len=max_seg_len)
+        x1 = carry + L.attn_out(lp["self_attn"], carry.dtype, attn)
+
+        h2 = L.apply_norm(lp["ln2"], x1, cfg.norm)
+        qc = jnp.einsum("bsd,dhk->bshk", h2,
+                        lp["cross_attn"]["wq"].astype(x1.dtype))
+        kc, vc = _cross_kv(lp, cfg, enc_out)              # (S, enc, KV, hd)
+        cross = L.packed_cross_attention(qc, kc, vc, seg_ids, pos,
+                                         seg_starts, seg_lens,
+                                         row_len=max_seg_len)
+        x2 = x1 + L.attn_out(lp["cross_attn"], x1.dtype, cross)
+
+        h3 = L.apply_norm(lp["ln3"], x2, cfg.norm)
+        x3 = x2 + L.apply_mlp(lp["mlp"], h3)
+        return x3, (k[0], v[0], kc, vc)
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["layers"])
+    last = jnp.clip(seg_starts + seg_lens - 1, 0, t - 1)
+    xl = L.apply_norm(params["final_norm"], x[0, last], cfg.norm)
+    logits = L.unembed(params["embed"], xl, cfg)
+    return logits, {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
+                    "pos": seg_lens.astype(jnp.int32)}
+
+
 def decode_step(params, cfg, token, cache):
     """Self-attention cache is carried + updated in place; the read-only
     cross K/V streams through the scan as xs (no double-buffering)."""

@@ -184,6 +184,62 @@ def prefill(params, cfg, tokens, cache_len: int):
                     "pos": jnp.full((b,), s, jnp.int32)}
 
 
+def prefill_packed(params, cfg, packed, max_seg_len: int):
+    """Packed ragged prefill: mamba backbone with per-segment state resets
+    (``ssm.mamba_block_packed``) + the shared attention block run
+    segment-masked over the packed row. The shared-attention K/V stays in
+    PACKED per-token order (na, T, KV, D) so the engine can scatter each
+    segment's tokens straight into its slot's pages; mamba state/conv are
+    per-segment rows like the pure-SSM family."""
+    tokens = packed["tokens"]
+    seg_ids, seg_starts = packed["seg_ids"], packed["seg_starts"]
+    seg_lens = packed["seg_lens"]
+    dtype = jnp.dtype(cfg.dtype)
+    b, t = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    pos = L.packed_positions(seg_ids, seg_starts)
+    positions = pos[None, :]
+    sp = params["shared_attn"]
+    na = n_attn_blocks(cfg)
+
+    def body(carry, xs):
+        h, kc, vc = carry
+        lp, idx = xs
+        h, (states, tails) = ssm.mamba_block_packed(
+            lp, cfg, h, seg_ids, pos, seg_starts, seg_lens, max_seg_len)
+
+        def attn_branch(args):
+            h_, kc_, vc_ = args
+            hh = L.apply_norm(sp["ln1"], h_, cfg.norm)
+            q, k, v = L.attn_qkv(sp["attn"], cfg, hh, positions)
+            attn = L.packed_prefill_attention(
+                q, k, v, seg_ids, pos, seg_starts, seg_lens,
+                row_len=max_seg_len)
+            h2 = h_ + L.attn_out(sp["attn"], h_.dtype, attn)
+            hh2 = L.apply_norm(sp["ln2"], h2, cfg.norm)
+            h2 = h2 + L.apply_mlp(sp["mlp"], hh2)
+            j = jnp.minimum(idx // cfg.attn_every, na - 1)
+            kc_ = jax.lax.dynamic_update_slice_in_dim(kc_, k, j, axis=0)
+            vc_ = jax.lax.dynamic_update_slice_in_dim(vc_, v, j, axis=0)
+            return h2, kc_, vc_
+
+        h, kc, vc = jax.lax.cond(
+            (idx + 1) % cfg.attn_every == 0, attn_branch,
+            lambda args: args, (h, kc, vc))
+        return (h, kc, vc), (states, tails)
+
+    kv_shape = (na, t, cfg.num_kv_heads, cfg.resolved_head_dim)
+    kc0 = jnp.zeros(kv_shape, dtype)
+    vc0 = jnp.zeros(kv_shape, dtype)
+    (x, kc, vc), (states, convs) = jax.lax.scan(
+        body, (x, kc0, vc0), (params["layers"], jnp.arange(cfg.num_layers)))
+    last = jnp.clip(seg_starts + seg_lens - 1, 0, t - 1)
+    xl = L.apply_norm(params["final_norm"], x[0, last], cfg.norm)
+    logits = L.unembed(params["embed"], xl, cfg)
+    return logits, {"ssm": states, "conv": convs, "attn_k": kc, "attn_v": vc,
+                    "pos": seg_lens.astype(jnp.int32)}
+
+
 def decode_step(params, cfg, token, cache):
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed_tokens(params["embed"], token, dtype)

@@ -223,6 +223,106 @@ def big_attention(q, k, v, *, causal: bool, window: int = 0):
     return attention_dense(q, k, v, causal=causal)
 
 
+# --------------------------------------------------------------------------
+# packed ragged prefill
+# --------------------------------------------------------------------------
+def packed_positions(seg_ids, seg_starts):
+    """Within-segment position of every token in a packed row.
+
+    seg_ids: (T,) int32 non-decreasing segment id per token (padding
+    tokens carry id == S, one past the last real segment); seg_starts:
+    (S,) int32 packed offset of each segment's first token. Padding
+    tokens get position 0 (their rope/pos-embed values are never read —
+    attention masks them and their outputs are discarded)."""
+    t = jnp.arange(seg_ids.shape[0], dtype=jnp.int32)
+    s = seg_starts.shape[0]
+    start = seg_starts[jnp.minimum(seg_ids, s - 1)]
+    return jnp.where(seg_ids < s, t - start, 0)
+
+
+def segments_to_rows(x, seg_starts, seg_lens, row_len):
+    """Gather a packed (T, ...) tensor into per-segment rows
+    (S, row_len, ...): row i holds its segment's tokens at columns
+    0..len_i-1 and exact zeros after — the layout a per-request prefill
+    would see. Segments are CONTIGUOUS in the packed row, so this is a
+    masked gather (start + column), not a scatter — measurably cheaper on
+    the CPU fallback and trivially parallel. Together with
+    ``rows_to_segments`` this bridges the packed layout (where the
+    O(tokens) ops run) and the per-segment row layout the sequence-mixing
+    fallbacks (dense attention, conv, SSD scan) need."""
+    t = x.shape[0]
+    idx = seg_starts[:, None] + jnp.arange(row_len, dtype=jnp.int32)[None, :]
+    rows = x[jnp.clip(idx, 0, t - 1)]                  # (S, row_len, ...)
+    valid = jnp.arange(row_len)[None, :] < seg_lens[:, None]
+    return jnp.where(valid.reshape(valid.shape + (1,) * (x.ndim - 1)),
+                     rows, 0)
+
+
+def rows_to_segments(rows, seg_ids, positions):
+    """Gather per-segment rows back to the packed (T, ...) layout — the
+    inverse of ``segments_to_rows`` for real tokens. Padding tokens (a
+    clamped row/column) read garbage that every consumer discards: their
+    K/V lands on the null page, their activations feed no segment's last
+    logits."""
+    r = jnp.clip(seg_ids, 0, rows.shape[0] - 1)
+    c = jnp.clip(positions, 0, rows.shape[1] - 1)
+    return rows[r, c]
+
+
+def packed_prefill_attention(q, k, v, seg_ids, positions, seg_starts,
+                             seg_lens, *, row_len: int, window: int = 0):
+    """Segment-blocked causal self-attention over a packed token row.
+
+    q: (1, T, H, D); k/v: (1, T, KV, D); seg_ids/positions: (T,);
+    seg_starts/seg_lens: (S,). Token i attends to token j iff
+    seg_ids[i] == seg_ids[j] and j <= i.
+
+    On real TPUs this dispatches to the segment flash kernel
+    (repro.kernels.flash_attention.segment_flash_attention), whose
+    scalar-prefetched segment boundaries skip fully cross-segment tiles —
+    the packed row pays for its actual token pairs. The fallback gathers
+    each segment into its own row (q/k/v in ONE fused gather along the
+    head axis) and runs the SAME ``attention_dense`` body the padded
+    prefill path runs — same key set, same reduction order, exact-zero
+    padding terms — so packed and padded prefill greedy outputs agree
+    bit-for-bit on CPU; its attention FLOPs match pad-to-``row_len``
+    while every other prefill op runs on sum(lens) tokens instead of
+    batch × max."""
+    b, t, h, d = q.shape
+    kvh = k.shape[2]
+    # half-step buckets (3·2^k) are 256-multiples, not 512-multiples —
+    # drop to 256-wide tiles there so the kernel stays in play for every
+    # packed bucket >= 512
+    if jax.default_backend() == "tpu" and t >= 512 and t % 256 == 0:
+        from repro.kernels.ops import segment_flash_attention
+        blk = 512 if t % 512 == 0 else 256
+        return segment_flash_attention(q, k, v, seg_ids, window=window,
+                                       block_q=blk, block_k=blk)
+    qkv = jnp.concatenate([q[0], k[0], v[0]], axis=1)   # (T, H+2KV, D)
+    rows = segments_to_rows(qkv, seg_starts, seg_lens, row_len)
+    qr, kr, vr = rows[:, :, :h], rows[:, :, h:h + kvh], rows[:, :, h + kvh:]
+    # big_attention applies the SAME dispatch rule the padded prefill path
+    # uses (dense under 1024, chunked flash above — no materialized
+    # (S, H, row, row) scores for long rows, and bit-parity with padded
+    # prefill holds whenever both land on the same side of that rule)
+    ar = big_attention(qr, kr, vr, causal=True, window=window)
+    return rows_to_segments(ar, seg_ids, positions)[None]
+
+
+def packed_cross_attention(q, k_cross, v_cross, seg_ids, positions,
+                           seg_starts, seg_lens, *, row_len: int):
+    """Per-segment cross-attention for packed encoder-decoder prefill.
+
+    q: (1, T, H, D) packed decoder queries; k_cross/v_cross:
+    (S, enc_seq, KV, D) — one read-only encoder block per segment. Each
+    packed token attends its OWN segment's encoder output: queries are
+    gathered to per-segment rows, run through the same dense non-causal
+    attention the padded path uses, and gathered back."""
+    qr = segments_to_rows(q[0], seg_starts, seg_lens, row_len)
+    ar = attention_dense(qr, k_cross, v_cross, causal=False)
+    return rows_to_segments(ar, seg_ids, positions)[None]
+
+
 def cache_row_update(buf, new, slot):
     """Write ``new`` (B, 1, ...) into ``buf`` (B, C, ...) at per-row ring
     position ``slot`` (B,) along axis 1.

@@ -6,6 +6,7 @@ dry-run never branch on architecture:
 
   forward(params, batch, remat=False)        -> (logits (B,S,V), aux)
   prefill(params, batch, cache)              -> (last_logits (B,V), cache)
+  prefill_packed(params, packed, row_len)    -> (seg_logits (S,V), packed cache)
   decode_step(params, token (B,), cache)     -> (logits (B,V), cache)
 """
 from __future__ import annotations
@@ -29,6 +30,11 @@ class ModelAPI:
     init: Callable
     forward: Callable
     prefill: Callable
+    # packed ragged prefill: a whole admission batch concatenated into one
+    # (1, total_tokens) row with per-token segment ids (see each family's
+    # ``prefill_packed``); returns per-SEGMENT last logits plus a packed
+    # cache whose per-token leaves the engine scatters straight into pages
+    prefill_packed: Callable
     decode_step: Callable
     cache_plan: Callable
     init_cache: Callable
@@ -128,12 +134,16 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             return mod.init_paged_cache(cfg, batch, num_pages, page_size,
                                         max_pages, dtype)
 
+    def prefill_packed(params, packed, max_seg_len):
+        return mod.prefill_packed(params, cfg, packed, max_seg_len)
+
     return ModelAPI(
         cfg=cfg,
         plan=mod.plan(cfg),
         init=lambda key, dtype=jnp.float32: mod.init(key, cfg, dtype),
         forward=forward,
         prefill=prefill,
+        prefill_packed=prefill_packed,
         decode_step=lambda params, token, cache: mod.decode_step(
             params, cfg, token, cache),
         cache_plan=lambda batch, cache_len: mod.cache_plan(cfg, batch, cache_len),

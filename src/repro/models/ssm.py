@@ -142,6 +142,59 @@ def mamba_block_decode(lp, cfg, h, ssm_state, conv_buf) -> Tuple[jax.Array, Tupl
     return h + out, (state, window[:, 1:, :])
 
 
+def mamba_block_packed(lp, cfg, h, seg_ids, pos, seg_starts, seg_lens,
+                       row_len: int) -> Tuple[jax.Array, Tuple]:
+    """Packed-ragged mamba2 block. h: (1, T, d) packed tokens.
+
+    The FLOP-heavy parts (projections, gating, out-projection) run on the
+    packed row — sum(lens) tokens, no padding. Only the sequence-mixing
+    ops (causal conv, SSD scan) need contiguous per-sequence layout: the
+    post-projection activations are gathered into per-segment rows
+    (``layers.segments_to_rows``), mixed there, and gathered back. The
+    scan state RESETS at segment boundaries for free — each segment is
+    its own row, and ``dt`` is exactly zero on row padding (the masked
+    gather zeroes it; decay exp(0)=1, update 0: the state freezes EXACTLY
+    at each segment's last token, so the returned per-segment states
+    match per-request prefill bit for bit; see ops._ssd_chunked_jnp's
+    padding note).
+
+    Returns (h_out (1, T, d), (per-segment ssm states (S, H, N, P),
+    per-segment conv tails (S, W-1, di+2N)))."""
+    b, t, d = h.shape
+    di, n, nh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+    s_max = seg_lens.shape[0]
+    xin = L.apply_norm(lp["norm"], h, cfg.norm)
+    z, xr, bc, cc, dt = _proj_in(lp, cfg, xin)                  # packed
+
+    xbc = jnp.concatenate([xr, bc, cc], axis=-1)                # (1,T,di+2N)
+    raw_rows = L.segments_to_rows(xbc[0], seg_starts, seg_lens, row_len)
+    conv_w = jnp.concatenate(
+        [lp["conv_x"], lp["conv_B"], lp["conv_C"]], axis=-1).astype(h.dtype)
+    mixed = jax.nn.silu(
+        _causal_conv(raw_rows, conv_w).astype(jnp.float32)).astype(h.dtype)
+    xr_r, bc_r, cc_r = jnp.split(mixed, [di, di + n], axis=-1)
+
+    dt_rows = L.segments_to_rows(dt[0], seg_starts, seg_lens, row_len)
+
+    x4 = xr_r.reshape(s_max, row_len, nh, p)
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y_r, states = ops.ssd(x4, dt_rows, a, bc_r, cc_r, chunk=cfg.ssm_chunk)
+    y_r = y_r + x4 * lp["D"].astype(y_r.dtype)[None, None, :, None]
+    y = L.rows_to_segments(y_r.reshape(s_max, row_len, di),
+                           seg_ids, pos)[None]
+    out = _gate_out(lp, cfg, y, z, h.dtype)
+
+    # conv tail: each segment's last W-1 RAW (pre-conv) inputs,
+    # left-padded with zeros for segments shorter than the window
+    j = jnp.arange(w - 1)
+    idx = seg_lens[:, None] - (w - 1) + j[None, :]              # (S, W-1)
+    tails = raw_rows[jnp.arange(s_max)[:, None],
+                     jnp.clip(idx, 0, row_len - 1)]
+    tails = jnp.where((idx >= 0)[..., None], tails, 0.0).astype(h.dtype)
+    return h + out, (states, tails)
+
+
 # --------------------------------------------------------------------------
 # model-level API
 # --------------------------------------------------------------------------
@@ -210,6 +263,33 @@ def prefill(params, cfg, tokens, cache_len: int):
     logits = L.unembed(params["embed"], x, cfg)
     return logits, {"ssm": states, "conv": convs,
                     "pos": jnp.full((b,), s, jnp.int32)}
+
+
+def prefill_packed(params, cfg, packed, max_seg_len: int):
+    """Packed ragged prefill for the attention-free family: one
+    (1, total_tokens) row, SSD state reset at segment boundaries (see
+    ``mamba_block_packed``). Returns per-segment last logits (S, V) and a
+    per-segment cache ({ssm, conv, pos} — there is nothing per-token to
+    page; the engine dense-scatters the S rows into slot rows)."""
+    tokens = packed["tokens"]
+    seg_ids, seg_starts = packed["seg_ids"], packed["seg_starts"]
+    seg_lens = packed["seg_lens"]
+    dtype = jnp.dtype(cfg.dtype)
+    b, t = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    pos = L.packed_positions(seg_ids, seg_starts)
+
+    def body(carry, lp):
+        y, (states, tails) = mamba_block_packed(
+            lp, cfg, carry, seg_ids, pos, seg_starts, seg_lens, max_seg_len)
+        return y, (states, tails)
+
+    x, (states, convs) = jax.lax.scan(body, x, params["layers"])
+    last = jnp.clip(seg_starts + seg_lens - 1, 0, t - 1)
+    xl = L.apply_norm(params["final_norm"], x[0, last], cfg.norm)
+    logits = L.unembed(params["embed"], xl, cfg)
+    return logits, {"ssm": states, "conv": convs,
+                    "pos": seg_lens.astype(jnp.int32)}
 
 
 def decode_step(params, cfg, token, cache):

@@ -188,6 +188,53 @@ def prefill(params, cfg, tokens, cache_len: int):
     return logits, new_cache
 
 
+def prefill_packed(params, cfg, packed, max_seg_len: int):
+    """Packed ragged prefill: a whole admission batch of variable-length
+    prompts concatenated into ONE (1, total_tokens) row.
+
+    ``packed`` carries ``tokens`` (1, T), ``seg_ids`` (T,) non-decreasing
+    int32 (padding tokens = S), ``seg_starts``/``seg_lens`` (S,). Returns
+    (per-segment last-token logits (S, V), a PACKED cache: per-token K/V
+    (layers, T, KV, D) in packed order — the engine scatters each
+    segment's tokens straight into its slot's pages — and ``pos`` =
+    seg_lens). Unlike ``prefill`` there is no padding to a common prompt
+    length: every non-attention op runs on sum(lens) tokens, and the
+    attention is segment-masked (see ``layers.packed_prefill_attention``).
+
+    MoE caveat: expert-capacity dropping is computed per dispatch group,
+    so a packed MoE prefill can drop different tokens than per-request
+    prefills of the same prompts (dense families are bit-exact)."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = packed["tokens"]
+    seg_ids, seg_starts = packed["seg_ids"], packed["seg_starts"]
+    seg_lens = packed["seg_lens"]
+    b, t = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    pos = L.packed_positions(seg_ids, seg_starts)
+    positions = pos[None, :]
+    window = cfg.sliding_window
+
+    def body(carry, lp):
+        h = L.apply_norm(lp["ln1"], carry, cfg.norm)
+        q, k, v = L.attn_qkv(lp["attn"], cfg, h, positions)
+        attn = L.packed_prefill_attention(q, k, v, seg_ids, pos,
+                                          seg_starts, seg_lens,
+                                          row_len=max_seg_len, window=window)
+        x1 = carry + L.attn_out(lp["attn"], carry.dtype, attn)
+        h2 = L.apply_norm(lp["ln2"], x1, cfg.norm)
+        if cfg.num_experts:
+            y, _ = apply_moe(lp["moe"], cfg, h2)
+        else:
+            y = L.apply_mlp(lp["mlp"], h2)
+        return x1 + y, (k[0], v[0])
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    last = jnp.clip(seg_starts + seg_lens - 1, 0, t - 1)
+    xl = L.apply_norm(params["final_norm"], x[0, last], cfg.norm)
+    logits = L.unembed(params["embed"], xl, cfg)
+    return logits, {"k": ks, "v": vs, "pos": seg_lens.astype(jnp.int32)}
+
+
 def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
     """token: (B,) int32; one autoregressive step against the KV cache.
 

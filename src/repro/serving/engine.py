@@ -30,7 +30,18 @@ make that true on the host side:
    bucket — O(log max_len) compilations total — and reused for every
    request that fits.
 
-3. **Slot-based continuous batching over a PAGED KV cache.**
+3. **Packed ragged prefill for admission bursts.** ``insert_many``
+   admits a WHOLE admission batch in one prefill dispatch: the prompts
+   are concatenated into a single (1, total_tokens) row with per-token
+   segment ids (bucketed to a power of two — O(log max_len)
+   executables), run through the family's ``prefill_packed`` (segment-
+   masked attention; SSM state resets at segment boundaries), and each
+   segment's K/V is scattered DIRECTLY into its slot's pages by one
+   jitted token-indexed scatter — no per-request dispatches, no
+   pad-to-max FLOPs, no intermediate dense per-slot copy. The pool's
+   admission and topup paths batch through it.
+
+4. **Slot-based continuous batching over a PAGED KV cache.**
    ``init_slots`` allocates a fixed number of slots whose K/V storage is,
    by default, a shared pool of fixed-size pages indexed per sequence by a
    block table (``repro.serving.kv_cache``; ``paged=False`` restores the
@@ -58,11 +69,22 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.registry import ModelAPI
-from repro.serving.kv_cache import NULL_PAGE, PagedKVCache
+from repro.serving.kv_cache import NULL_PAGE, OutOfPages, PagedKVCache
 
 
 def _pow2_at_least(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
+
+
+def _packed_bucket(n: int) -> int:
+    """Packed-token bucket: smallest of {2^k, 3·2^(k-1)} >= n. The packed
+    prefill row is the SUM of an admission batch's prompt lengths, so its
+    padding waste is pure lost prefill throughput; the half-step doubles
+    the executable count per octave (still O(log max_len)) and caps the
+    waste at 33% instead of 100%."""
+    p = _pow2_at_least(n)
+    half = 3 * p // 4
+    return half if half >= n else p
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +99,12 @@ class SamplingParams:
 
 @dataclasses.dataclass
 class EngineStats:
-    prefills: int = 0
+    prefills: int = 0          # prefill DISPATCHES (a packed one counts 1)
+    packed_prefills: int = 0   # of which packed multi-segment dispatches
+    # prompt tokens prefilled: what the dispatch actually computed — the
+    # packed path charges sum(real lens), `prefill` charges B×S as given
+    # (includes padding only if the CALLER padded the batch)
+    prefill_tokens: int = 0
     decode_steps: int = 0
     tokens_out: int = 0
     inserts: int = 0
@@ -120,6 +147,10 @@ class InferenceEngine:
         self._write_slot = jax.jit(_write_slot, donate_argnums=(0,))
         self._write_slot_paged = None      # built by init_slots(paged=True)
         self._clear_slot = None
+        # packed ragged prefill: one executable per (total-token bucket,
+        # row_len) pair — O(log max_len) total; built lazily
+        self._packed_prefill_jit: Dict[Any, Any] = {}
+        self._write_segments = None        # built by init_slots
 
         # slot state (populated by init_slots)
         self.paged = False
@@ -151,7 +182,41 @@ class InferenceEngine:
             self._prefill_jit[clen] = fn
         logits, cache = fn(self.params, batch)
         self.stats.prefills += 1
+        self.stats.prefill_tokens += int(
+            batch["tokens"].shape[0] * batch["tokens"].shape[1])
         return logits, cache
+
+    def prefill_packed(self, packed: Dict[str, Any],
+                       row_len: Optional[int] = None):
+        """One dispatch over a packed batch of variable-length prompts.
+
+        ``packed`` is the pytree ``_pack_prompts`` builds: ``tokens``
+        (1, T) with T already bucketed to a power of two, ``seg_ids``
+        (T,), ``seg_starts``/``seg_lens`` (S,), plus ``enc_embeds`` for
+        encoder models. Returns (per-segment last logits (S, V), packed
+        cache). One executable per (T, row_len) pair.
+
+        ``row_len`` defaults to the pow2 bucket of the batch's longest
+        prompt (capped at slot_len), NOT slot_len itself: the fallback's
+        per-segment row work (attention, conv, SSD) is quadratic/linear
+        in row_len, and an engine with a long cache serving short
+        prompts must not pay cache-sized rows per admission."""
+        if row_len is None:
+            row_len = min(self.slot_len, _pow2_at_least(
+                int(jnp.max(packed["seg_lens"]))))
+        row_len = max(1, row_len)
+        key = (packed["tokens"].shape[1], row_len)
+        fn = self._packed_prefill_jit.get(key)
+        if fn is None:
+            api = self.api
+            fn = jax.jit(lambda p, pk, _r=row_len: api.prefill_packed(
+                p, pk, _r))
+            self._packed_prefill_jit[key] = fn
+        logits, pcache = fn(self.params, packed)
+        self.stats.prefills += 1
+        self.stats.packed_prefills += 1
+        self.stats.prefill_tokens += int(jnp.sum(packed["seg_lens"]))
+        return logits, pcache
 
     def decode(self, token, cache):
         logits, cache = self._decode(self.params, token, cache)
@@ -314,6 +379,8 @@ class InferenceEngine:
         else:
             self._kv = None
             self._slot_cache = self.api.init_cache(n_slots, self.slot_len)
+        self._write_segments = jax.jit(
+            _make_write_segments(self.api.paged_keys), donate_argnums=(0, 1))
         self._slot_free = list(range(n_slots))
         self._slot_active = [False] * n_slots
         self._slot_budget = [None] * n_slots
@@ -402,6 +469,155 @@ class InferenceEngine:
         self._active_mask = self._active_mask.at[slot].set(True)
         self.stats.inserts += 1
         return slot
+
+    # ------------------------------------------------ packed batch insert
+    def _pack_prompts(self, batches: List[Dict[str, Any]],
+                      lens: List[int]) -> Dict[str, Any]:
+        """Concatenate an admission batch into one packed prompt row.
+
+        Total tokens bucket to the next power of two (same O(log) compile
+        discipline as ``generate``); the segment axis is padded to the
+        engine's slot count, a STATIC shape, so the executable key is the
+        token bucket alone. Padding tokens carry segment id S (matched by
+        no real token) and empty segments have length 0."""
+        import numpy as np
+        s_max = self.n_slots
+        t = max(1, _packed_bucket(sum(lens)))
+        tokens = np.zeros((1, t), np.int32)
+        seg_ids = np.full((t,), s_max, np.int32)
+        starts = np.zeros((s_max,), np.int32)
+        seg_lens = np.zeros((s_max,), np.int32)
+        off = 0
+        for i, (b, ln) in enumerate(zip(batches, lens)):
+            tokens[0, off:off + ln] = np.asarray(b["tokens"])[0]
+            seg_ids[off:off + ln] = i
+            starts[i] = off
+            seg_lens[i] = ln
+            off += ln
+        packed = {"tokens": jnp.asarray(tokens),
+                  "seg_ids": jnp.asarray(seg_ids),
+                  "seg_starts": jnp.asarray(starts),
+                  "seg_lens": jnp.asarray(seg_lens)}
+        if self.cfg.has_encoder:
+            enc = [jnp.asarray(b["enc_embeds"]) for b in batches]
+            pad = jnp.zeros_like(enc[0])
+            packed["enc_embeds"] = jnp.concatenate(
+                enc + [pad] * (s_max - len(enc)), axis=0)
+        return packed
+
+    def insert_many(self, batches: List[Dict[str, Any]],
+                    n_tokens: Optional[List[Optional[int]]] = None
+                    ) -> List[int]:
+        """Admit a whole admission batch in ONE prefill dispatch.
+
+        Semantically equivalent to calling ``insert`` once per request
+        (same slots claimed in free-list order, same pages, bit-identical
+        greedy decode afterwards) but the data plane does two dispatches
+        total instead of 2 × batch: one packed ragged prefill over the
+        concatenated prompts, and one token-indexed scatter that writes
+        each segment's K/V DIRECTLY into its slot's pages (per-segment
+        leaves — SSM state, conv tails, cross K/V, positions — take a
+        batched row write in the same executable). Page allocation is
+        all-or-nothing across the batch: on ``OutOfPages`` every page
+        already claimed is returned and no slot is touched."""
+        n = len(batches)
+        if n == 0:
+            return []
+        if n > len(self._slot_free):
+            raise RuntimeError(
+                f"insert_many of {n} requests, {len(self._slot_free)} "
+                f"free slots")
+        if n_tokens is None:
+            n_tokens = [None] * n
+        for b in batches:
+            assert b["tokens"].shape[0] == 1, \
+                "insert_many packs single-request batches"
+        lens = [int(b["tokens"].shape[1]) for b in batches]
+        budgets: List[Optional[int]] = []
+        for s, nt in zip(lens, n_tokens):
+            if self.paged:
+                if s >= self.slot_len:
+                    raise ValueError(
+                        f"prompt of {s} tokens leaves no decode room in a "
+                        f"{self.slot_len}-token paged slot (pages are never "
+                        f"evicted; use a longer cache_len)")
+                room = self.slot_len - s
+                budgets.append(room if nt is None else max(
+                    1, min(int(nt), room)))
+            else:
+                if s > self.slot_len:
+                    raise ValueError(
+                        f"prompt of {s} tokens exceeds the {self.slot_len}-"
+                        f"token slot (packed prefill cannot ring-wrap)")
+                budgets.append(None if nt is None else max(1, int(nt)))
+        slots = self._slot_free[:n]
+        if self.paged:
+            claimed: List[int] = []
+            try:
+                for slot, s, budget in zip(slots, lens, budgets):
+                    self._kv.alloc(slot, s + budget)
+                    claimed.append(slot)
+            except OutOfPages:
+                for slot in claimed:
+                    self._kv.free(slot)
+                raise
+        del self._slot_free[:n]
+
+        packed = self._pack_prompts(batches, lens)
+        logits, pcache = self.prefill_packed(
+            packed, row_len=min(self.slot_len, _pow2_at_least(max(lens))))
+        args = self._segment_dest(slots, lens)
+        self._slot_cache, self._last_tok = self._write_segments(
+            self._slot_cache, self._last_tok, pcache, logits, *args)
+        for slot, budget in zip(slots, budgets):
+            self._slot_active[slot] = True
+            self._slot_budget[slot] = budget
+            self._slot_generated[slot] = 0
+        self._active_mask = self._active_mask.at[
+            jnp.asarray(slots, jnp.int32)].set(True)
+        self.stats.inserts += n
+        return slots
+
+    def _segment_dest(self, slots: List[int], lens: List[int]):
+        """Host-side destination indices for the packed-segment scatter.
+
+        Per-token coordinates (dest0, dest1): (physical page, in-page
+        offset) when paged — computed from the pages just allocated, so
+        the prefill K/V lands straight in the page pool — or (slot row,
+        column) for ring slots. Padding tokens target the null page
+        (paged; duplicate writes there are dead by convention) or an
+        out-of-bounds column (ring; scatter drops them). Per-segment
+        coordinates are the slot ids, padded with ``n_slots`` (out of
+        bounds, dropped)."""
+        import numpy as np
+        t = max(1, _packed_bucket(sum(lens)))
+        s_max = self.n_slots
+        seg_slots = np.full((s_max,), s_max, np.int32)
+        seg_slots[:len(slots)] = slots
+        if self.paged:
+            dest0 = np.zeros((t,), np.int32)             # null page
+            dest1 = np.zeros((t,), np.int32)
+            tables = np.full((s_max, self.max_pages), NULL_PAGE, np.int32)
+            off = 0
+            for i, (slot, ln) in enumerate(zip(slots, lens)):
+                pages = np.asarray(self._kv.pages(slot), np.int32)
+                p = np.arange(ln)
+                dest0[off:off + ln] = pages[p // self.page_size]
+                dest1[off:off + ln] = p % self.page_size
+                tables[i, :len(pages)] = pages
+                off += ln
+            table_rows = jnp.asarray(tables)
+        else:
+            dest0 = np.zeros((t,), np.int32)
+            dest1 = np.full((t,), self.slot_len, np.int32)   # OOB: dropped
+            off = 0
+            for slot, ln in zip(slots, lens):
+                dest0[off:off + ln] = slot
+                dest1[off:off + ln] = np.arange(ln)
+                off += ln
+            table_rows = None
+        return (jnp.asarray(dest0), jnp.asarray(dest1),
+                jnp.asarray(seg_slots), table_rows)
 
     def free(self, slot: int) -> None:
         """Release a slot: its pages return to the pool, its block-table
@@ -511,11 +727,15 @@ class InferenceEngine:
                 return 1
         out = {
             "prefill": sum(n(f) for f in self._prefill_jit.values()),
+            "packed_prefill": sum(
+                n(f) for f in self._packed_prefill_jit.values()),
             "generate": sum(n(f) for f in self._gen_jit.values()),
             "decode": n(self._decode),
             "slot_step": sum(n(f) for f in self._slot_step_jit.values()),
             "write_slot": n(self._write_slot),
         }
+        if self._write_segments is not None:
+            out["write_segments"] = n(self._write_segments)
         if self._write_slot_paged is not None:
             out["write_slot_paged"] = n(self._write_slot_paged)
             out["clear_slot"] = n(self._clear_slot)
@@ -577,6 +797,41 @@ def _make_write_slot_paged(paged_keys, page_size: int):
                 out[key] = jax.lax.dynamic_update_slice_in_dim(
                     b_leaf, o_leaf, slot, axis=axis)
         return out
+
+    return write
+
+
+def _make_write_segments(paged_keys):
+    """Build the packed-insert scatter: per-TOKEN leaves (the family's
+    ``PAGED_KEYS`` — packed (layers, T, ...) order) scatter each token at
+    its (dest0, dest1) coordinate, which is (physical page, offset) on a
+    paged cache and (slot row, column) on a ring; every other leaf is
+    per-SEGMENT and takes a batched row write at the slot ids. Padding
+    tokens land on the null page (paged, dead by convention) or out of
+    bounds (ring, dropped by scatter semantics); padding segments carry
+    slot id n_slots (out of bounds, dropped). One static-shape executable
+    per packed-token bucket — the batch's segment count never retraces."""
+    paged_keys = frozenset(paged_keys)
+
+    def write(cache, last_tok, pcache, logits, dest0, dest1, seg_slots,
+              table_rows):
+        out = {}
+        for key, b_leaf in cache.items():
+            if key == "block_tables":
+                out[key] = b_leaf.at[seg_slots].set(table_rows)
+            elif key in paged_keys:
+                o = pcache[key].astype(b_leaf.dtype)      # (layers, T, ...)
+                out[key] = b_leaf.at[:, dest0, dest1].set(o)
+            else:
+                o = pcache[key].astype(b_leaf.dtype)      # (layers, S, ...)
+                axis = 0 if b_leaf.ndim == 1 else 1
+                if axis == 0:
+                    out[key] = b_leaf.at[seg_slots].set(o)
+                else:
+                    out[key] = b_leaf.at[:, seg_slots].set(o)
+        new_last = last_tok.at[seg_slots].set(
+            jnp.argmax(logits, -1).astype(jnp.int32))
+        return out, new_last
 
     return write
 

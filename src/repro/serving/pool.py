@@ -169,18 +169,37 @@ class EnginePool:
                 eng.reset_stats()
 
     def warmup(self) -> None:
-        """Compile every standby engine's insert-prefill + slot-step path
-        once, up front — after this, serving recompiles nothing. The warm
-        insert uses a 1-token budget: the executables are identical for
-        every budget (the table row is always the full padded shape), and
-        an unbudgeted insert would reserve the whole slot's pages —
-        crashing pools deliberately built with fewer pages than one slot
-        maximum (the oversubscription knob)."""
+        """Compile every standby engine's admission-prefill + slot-step
+        path once, up front — after this, serving recompiles nothing.
+        Admission goes through ``insert_many`` (one packed prefill per
+        admission batch), whose executables key on the packed-token
+        bucket: every batch size the engine can page is warmed, covering
+        each pow2 bucket a serve-time admission can produce. The warm
+        inserts use a 1-token budget: the executables are identical for
+        every budget, and 1 is the smallest page footprint — a pool
+        deliberately built with fewer pages than one slot maximum (the
+        oversubscription knob) warms exactly the batch sizes it can ever
+        admit."""
+        from repro.serving.engine import _packed_bucket
         for host in self.hosts.values():
             for eng in host.engines():
-                slot = eng.insert(host.prompt_batch(), n_tokens=1)
-                eng.step()
-                eng.free(slot)
+                min_pages = eng.pages_needed(host.prompt_len, 1)
+                warmed = set()
+                for k in range(1, eng.n_slots + 1):
+                    if eng.paged and k * min_pages > eng.total_pages:
+                        break
+                    # executables key on the packed-token bucket, not the
+                    # batch size: k values sharing a bucket compile
+                    # nothing new, so only O(log) of them run
+                    bucket = _packed_bucket(k * host.prompt_len)
+                    if bucket in warmed:
+                        continue
+                    warmed.add(bucket)
+                    slots = eng.insert_many(
+                        [host.prompt_batch()] * k, n_tokens=[1] * k)
+                    eng.step()
+                    for slot in slots:
+                        eng.free(slot)
         self.reset()
 
     def jit_cache_sizes(self) -> Dict[str, int]:
@@ -334,8 +353,11 @@ class EnginePool:
             batch=len(kept), engine=eng, slots={}, remaining={},
             latency=lat, step_cost=lat / gen_max, start=now,
             next_time=now + self.sim.dispatch_gap + lat / gen_max)
-        for req, budget in kept:
-            slot = eng.insert(host.prompt_batch(), n_tokens=budget)
+        # the whole admission batch prefills in ONE packed dispatch and
+        # its K/V is scattered straight into each slot's pages
+        slots = eng.insert_many([host.prompt_batch()] * len(kept),
+                                n_tokens=[b for _, b in kept])
+        for (req, budget), slot in zip(kept, slots):
             run.slots[slot] = req
             run.remaining[slot] = budget
         m = self._metrics[rr.model]
@@ -370,11 +392,12 @@ class EnginePool:
         before = max(run.remaining.values(), default=0)
         kept = self._pop_admissible(run.model, eng, refill, now,
                                     gen_len, drop_expired)
-        for req, budget in kept:
-            slot = eng.insert(host.prompt_batch(), n_tokens=budget)
-            run.slots[slot] = req
-            run.remaining[slot] = budget
         if kept:
+            slots = eng.insert_many([host.prompt_batch()] * len(kept),
+                                    n_tokens=[b for _, b in kept])
+            for (req, budget), slot in zip(kept, slots):
+                run.slots[slot] = req
+                run.remaining[slot] = budget
             m = self._metrics[run.model]
             extension = max(0, max(run.remaining.values()) - before)
             m.topups += len(kept)

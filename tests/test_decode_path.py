@@ -121,6 +121,28 @@ def test_generate_token_count_bucketed():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[:, :9])
 
 
+def test_generate_exact_count_non_pow2_regression():
+    """The pow2-bucketed scan computes t_bucket >= max_new_tokens steps
+    and must hand back EXACTLY the requested count — the surplus is
+    sliced off, never returned, and never eats into the requested tokens.
+    Locks the contract for greedy AND sampled paths at non-pow2 counts,
+    with the greedy slice bit-equal to the eager (unbucketed) engine."""
+    from repro.serving.engine import SamplingParams
+
+    eng = make_engine(get_config("olmo-1b").reduced(), cache_len=32)
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    for t in (1, 3, 5, 7, 11):
+        out = eng.generate(dict(batch), t)
+        assert out.shape == (2, t)
+        eager = eng.generate_eager(dict(batch), t)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(eager))
+    sp = SamplingParams(temperature=0.8, top_k=8)
+    out = eng.generate(dict(batch), 5, rng=jax.random.PRNGKey(1),
+                       sampling=sp)
+    assert out.shape == (2, 5)
+    assert (np.asarray(out) >= 0).all()
+
+
 # --------------------------------------------- slot continuous batching
 def _prompts(cfg, n, s=8):
     return [{"tokens": jax.random.randint(jax.random.PRNGKey(100 + i),

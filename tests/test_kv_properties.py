@@ -1,0 +1,99 @@
+"""Property tests for the page allocator / paged KV bookkeeping.
+
+``test_paged_kv.py`` covers hand-picked sequences; these drive RANDOM
+alloc/free/append (topup) interleavings and assert the safety invariants
+the serving engine's correctness rests on:
+
+  * no physical page is ever owned by two live rows (aliasing would let
+    one sequence overwrite another's KV),
+  * page conservation: free + owned == pool size, always,
+  * the reserved null page is never handed out,
+  * a failed (OutOfPages) operation leaves every row and the free count
+    exactly as they were (all-or-nothing).
+
+A seeded-random sibling that needs no hypothesis install lives in
+``test_paged_kv.py`` (``test_random_churn_invariants_seeded``); this file
+skips cleanly where hypothesis is absent (CI installs it).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import (NULL_PAGE, OutOfPages, PageAllocator,
+                                    PagedKVCache, pages_for)
+
+
+def _check_invariants(kv: PagedKVCache):
+    owned = []
+    for row in range(kv.batch):
+        pages = kv.pages(row)
+        # every live row's table is consistent with its length
+        if pages:
+            assert len(pages) == pages_for(kv.length(row), kv.page_size)
+        assert NULL_PAGE not in pages
+        owned.extend(pages)
+    # no page aliased by two live rows
+    assert len(owned) == len(set(owned))
+    # conservation: free + owned == pool
+    assert kv.free_pages + len(owned) == kv.allocator.num_pages
+    assert all(1 <= p <= kv.allocator.num_pages for p in owned)
+
+
+# op encoding: (kind, row, amount) — kind 0=alloc, 1=append, 2=free
+_ops = st.lists(st.tuples(st.integers(0, 2), st.integers(0, 5),
+                          st.integers(1, 40)), max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_ops, page_size=st.sampled_from([4, 8]),
+       num_pages=st.integers(4, 24))
+def test_paged_kv_random_churn_invariants(ops, page_size, num_pages):
+    kv = PagedKVCache(batch=6, page_size=page_size, max_pages=6,
+                      num_pages=num_pages)
+    for kind, row, amount in ops:
+        before = (kv.free_pages, kv.length(row), tuple(kv.pages(row)))
+        try:
+            if kind == 0 and not kv.pages(row):
+                kv.alloc(row, amount)
+            elif kind == 1 and kv.pages(row):
+                kv.append(row, amount)
+            elif kind == 2:
+                kv.free(row)
+        except OutOfPages:
+            # all-or-nothing: the failed op changed NOTHING
+            assert kv.free_pages == before[0]
+            assert kv.length(row) == before[1]
+            assert tuple(kv.pages(row)) == before[2]
+        _check_invariants(kv)
+    kv.reset()
+    assert kv.free_pages == kv.allocator.num_pages
+
+
+@settings(max_examples=60, deadline=None)
+@given(sizes=st.lists(st.integers(1, 6), min_size=1, max_size=20),
+       num_pages=st.integers(1, 16))
+def test_allocator_never_hands_out_null_or_duplicate(sizes, num_pages):
+    a = PageAllocator(num_pages)
+    live = []
+    for i, n in enumerate(sizes):
+        try:
+            got = a.alloc(n)
+        except OutOfPages:
+            assert n > a.free_pages
+            continue
+        assert NULL_PAGE not in got
+        assert not set(got) & set(p for ps in live for p in ps)
+        live.append(got)
+        if i % 3 == 2 and live:           # interleave frees
+            a.free(live.pop(0))
+    assert a.free_pages + sum(len(ps) for ps in live) == num_pages
+
+
+@settings(max_examples=40, deadline=None)
+@given(tokens=st.integers(0, 100), page_size=st.sampled_from([1, 4, 8, 16]))
+def test_pages_for_bounds(tokens, page_size):
+    n = pages_for(tokens, page_size)
+    assert n >= 1                          # live rows always own a page
+    assert n * page_size >= tokens         # enough room
+    assert (n - 1) * page_size < max(1, tokens) or n == 1   # no surplus page

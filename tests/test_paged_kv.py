@@ -106,6 +106,42 @@ def test_table_row_fixed_shape():
     assert all(p != NULL_PAGE for p in row[:2])
 
 
+def test_random_churn_invariants_seeded():
+    """Seeded-random alloc/append/free churn (the no-hypothesis sibling of
+    tests/test_kv_properties.py): no page aliased by two live rows, page
+    conservation, null page never allocated, failed ops all-or-nothing."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        num_pages = int(rng.integers(4, 24))
+        kv = PagedKVCache(batch=6, page_size=int(rng.choice([4, 8])),
+                          max_pages=6, num_pages=num_pages)
+        for _ in range(60):
+            kind = int(rng.integers(0, 3))
+            row = int(rng.integers(0, 6))
+            amount = int(rng.integers(1, 40))
+            before = (kv.free_pages, kv.length(row), tuple(kv.pages(row)))
+            try:
+                if kind == 0 and not kv.pages(row):
+                    kv.alloc(row, amount)
+                elif kind == 1 and kv.pages(row):
+                    kv.append(row, amount)
+                elif kind == 2:
+                    kv.free(row)
+            except OutOfPages:
+                assert (kv.free_pages, kv.length(row),
+                        tuple(kv.pages(row))) == before
+            owned = [p for r in range(6) for p in kv.pages(r)]
+            assert len(owned) == len(set(owned))          # no aliasing
+            assert NULL_PAGE not in owned
+            assert kv.free_pages + len(owned) == num_pages  # conservation
+            for r in range(6):
+                if kv.pages(r):
+                    assert len(kv.pages(r)) == pages_for(kv.length(r),
+                                                         kv.page_size)
+        kv.reset()
+        assert kv.free_pages == num_pages
+
+
 # --------------------------------------------------- paged kernel parity
 PAGED_CASES = [
     # (b, h, kv, d, page_size, max_pages, lengths)

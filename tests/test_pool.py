@@ -128,6 +128,49 @@ def test_drain_mode_backstop_terminates(pool):
     pool.reset()
 
 
+# ---------------------------------------------------- admission starvation
+def test_pop_admissible_bypass_is_bounded_by_slo_expiry():
+    """Regression for the ROADMAP anti-starvation follow-on: small
+    requests may bypass a page-blocked large one (packing over strict
+    FIFO), but the bypassed request cannot starve past its SLO — at its
+    deadline the next admission scan drops and counts it, so the bypass
+    window is exactly the request's remaining SLO budget."""
+    pool = build_pool(["olmo-1b"], base_slots=4, cache_len=32,
+                      pages={"olmo-1b": 5})
+    pool.reset()
+    name = sorted(pool.hosts)[0]
+    # A small (2 pages), B large (4 pages), C small (2 pages); pool = 5
+    pool.push(Request(arrival=0.0, rid=0, model=name, slo=10.0, n_tokens=8))
+    pool.push(Request(arrival=1e-5, rid=1, model=name, slo=0.4, n_tokens=24))
+    pool.push(Request(arrival=2e-5, rid=2, model=name, slo=10.0, n_tokens=8))
+    run = pool.admit(RunRequest(name, chips=4096, batch=3), 0.0, GEN_LEN)
+    # C bypassed the page-blocked B; B went back to the queue, counted once
+    assert run is not None and run.batch == 2
+    assert len(pool.queues[name]) == 1
+    assert pool._metrics[name].blocked_on_memory == 1
+    while not pool.step_run(run, 0.1):
+        pass
+    # a second pre-deadline admission with pages free admits B normally —
+    # bypass is opportunistic packing, not a priority demotion ...
+    run2 = pool.admit(RunRequest(name, chips=4096, batch=1), 0.2, GEN_LEN)
+    assert run2 is not None
+    assert [r.rid for r in run2.slots.values()] == [1]   # B, FIFO head
+    while not pool.step_run(run2, 0.3):
+        pass
+    # ... and a bypassed request that DOES reach its deadline is dropped
+    # and counted at the next scan, never silently starved forever
+    pool.push(Request(arrival=0.3, rid=4, model=name, slo=0.05, n_tokens=24))
+    pool.push(Request(arrival=0.31, rid=5, model=name, slo=10.0, n_tokens=8))
+    q = pool.queues[name]
+    run3 = pool.admit(RunRequest(name, chips=4096, batch=1), 1.0, GEN_LEN)
+    assert run3 is not None
+    assert [r.rid for r in run3.slots.values()] == [5]
+    assert q.dropped == 1 and q.violated == 1            # rid=4, at its SLO
+    while not pool.step_run(run3, 1.1):
+        pass
+    pool.reset()
+
+
 # --------------------------------------------------------- SchedView adapter
 def test_pool_implements_schedview(pool):
     assert isinstance(pool, SchedView)
