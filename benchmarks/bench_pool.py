@@ -79,6 +79,26 @@ def run_with_results(quick: bool = True):
                  "0" if jit_after == jit_before else
                  f"CHANGED: {jit_before} -> {jit_after}"))
     assert jit_after == jit_before, "serving recompiled an executable"
+
+    # lazy-KV pool: admission reserves prompt-only pages on a tight page
+    # budget, decode grows page-by-page, and OutOfPages mid-run preempts
+    # the newest resident and requeues its request — end to end through
+    # the Controller, still with 0 recompiles (growth executables are
+    # warmed up front like everything else)
+    t0 = time.time()
+    lazy = build_pool(["olmo-1b"], request_rate=rate, base_slots=4,
+                      cache_len=32, pages={"olmo-1b": 8}, lazy_kv=True)
+    jb = lazy.jit_cache_sizes()
+    res = run_policy(lazy, "dstack", rate=rate, duration=duration,
+                     gen_len=4, gen_tokens=(4, 20))
+    m = res.per_model["olmo-1b"]
+    rows.append(("pool/lazy_kv/preemptions", (time.time() - t0) * 1e6,
+                 f"preempt={m.preemptions} requeue={m.requeues} "
+                 f"served={m.completed} topups={m.topups} "
+                 f"(8-page pool, ragged budgets 4..20)"))
+    assert m.preemptions > 0 and m.requeues > 0, \
+        "lazy pool never exercised preempt-and-requeue"
+    assert lazy.jit_cache_sizes() == jb, "lazy serving recompiled"
     return rows, results
 
 

@@ -31,12 +31,17 @@ def main():
     ap.add_argument("--rate", type=float, default=2000.0,
                     help="arrivals/s per model (virtual time)")
     ap.add_argument("--gen-len", type=int, default=4)
+    ap.add_argument("--lazy-kv", action="store_true",
+                    help="lazy page reservation: admission claims prompt-"
+                         "only pages, decode grows them, and OutOfPages "
+                         "preempts-and-requeues the newest resident "
+                         "(preempt/requeue counters in the table)")
     args = ap.parse_args()
 
     print(f"building engine pool: {len(MODELS)} real reduced models, "
           "standby engines per allocation (compiled once, up front) ...")
     pool = build_pool(MODELS, request_rate=args.rate, base_slots=4,
-                      cache_len=32)
+                      cache_len=32, lazy_kv=args.lazy_kv)
     results = {}
     for pol in ("temporal", "dstack"):
         res = run_policy(pool, pol, rate=args.rate, duration=args.duration,

@@ -1,13 +1,15 @@
-"""Shared discrete-event loop skeleton for both serving control planes.
+"""Shared discrete-event loop skeleton for every serving control plane.
 
-``repro.core.simulator.Simulator`` (analytic runs, atomic completions) and
+``repro.core.simulator.Simulator`` (analytic runs, atomic completions),
 ``repro.serving.controller.Controller`` (real engines, per-token dispatch
-events) used to each own a ~30-line event loop with identical arrival-pop /
+events), and ``repro.serving.plan.TickServer`` (step-plan ticks: one
+StepPlan built and executed per due tick) used to each own — or would
+each have grown — a ~30-line event loop with identical arrival-pop /
 epsilon / cutoff / drain semantics and different machinery inside the
-events. Twice the semantics meant they could drift — a horizon or drain fix
-applied to one loop and not the other silently changes what the two planes
-measure. This module owns the semantics once; the planes plug in their
-machinery through ``EventLoopHooks``.
+events. Duplicated semantics meant they could drift — a horizon or drain
+fix applied to one loop and not the others silently changes what the
+planes measure. This module owns the semantics once; the planes plug in
+their machinery through ``EventLoopHooks``.
 
 Loop contract (identical for both planes):
 

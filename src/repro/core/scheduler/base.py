@@ -32,6 +32,49 @@ class SchedView(Protocol):
     def free_frac(self, now: float) -> float: ...
 
 
+@runtime_checkable
+class PageView(Protocol):
+    """What the tick-granular ``repro.serving.plan.StepPlanner`` may
+    observe of a data plane's KV-memory state when building a
+    ``StepPlan`` — the page-pool leg of the scheduler/data-plane
+    boundary, as ``SchedView`` is the chip-capacity leg. Implemented by
+    ``repro.serving.engine.InferenceEngine``; an unpaged plane (ring
+    slots, pure-SSM state) reports ``paged == False`` with zero pages
+    and fully-backed slots, so planners never branch on architecture:
+
+      paged                 whether KV memory is the admission gate
+      page_size             tokens per page (meaningful when paged)
+      free_pages/total_pages   pool headroom (0 when unpaged)
+      free_slots/slot_len      batch-lane headroom and per-lane horizon
+      slot_pos(slot)           tokens written to a resident lane
+      reserved_tokens(slot)    horizon its pages currently cover (grows
+                               lazily under PlannerConfig.lazy)
+      slot_page_count(slot)    pages the lane owns (0 when unpaged)
+      kv_pages_needed(tokens)  page arithmetic for an admission horizon
+    """
+
+    paged: bool
+    page_size: int
+    slot_len: int
+
+    @property
+    def free_pages(self) -> int: ...
+
+    @property
+    def total_pages(self) -> int: ...
+
+    @property
+    def free_slots(self) -> int: ...
+
+    def slot_pos(self, slot: int) -> int: ...
+
+    def reserved_tokens(self, slot: int) -> int: ...
+
+    def slot_page_count(self, slot: int) -> int: ...
+
+    def kv_pages_needed(self, tokens: int) -> int: ...
+
+
 class Policy(Protocol):
     name: str
 

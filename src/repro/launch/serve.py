@@ -43,14 +43,16 @@ def run_sim(model_names, duration: float, policy_name: str, rate: float):
 
 
 def run_real(model_names, duration: float, policy_name: str, rate: float,
-             gen_len: int = 4):
+             gen_len: int = 4, lazy_kv: bool = False):
     """Thin wrapper over the engine pool: the named policy drives real
-    jitted slot engines end to end (standby allocations compiled once)."""
+    jitted slot engines end to end (standby allocations compiled once).
+    ``lazy_kv`` switches admission to prompt-only page reservation with
+    preempt-and-requeue on OutOfPages (see docs/serving_api.md)."""
     from repro.serving.controller import run_policy
     from repro.serving.pool import build_pool
 
     pool = build_pool(model_names, request_rate=rate, base_slots=4,
-                      cache_len=32)
+                      cache_len=32, lazy_kv=lazy_kv)
     for n, host in sorted(pool.hosts.items()):
         allocs = ", ".join(f"{a.chips}ch/{a.n_slots}sl"
                            for a in host.allocations.values())
@@ -72,6 +74,9 @@ def main() -> None:
                     help="virtual seconds (default: 5.0 sim, 0.05 real)")
     ap.add_argument("--rate", type=float, default=2000.0)
     ap.add_argument("--gen-len", type=int, default=4)
+    ap.add_argument("--lazy-kv", action="store_true",
+                    help="(real mode) lazy page reservation with "
+                         "preempt-and-requeue on OutOfPages")
     args = ap.parse_args()
     names = args.models.split(",")
     if args.mode == "sim":
@@ -80,7 +85,8 @@ def main() -> None:
     else:
         # real mode defaults to a CPU-sized virtual duration
         dur = args.duration if args.duration is not None else 0.05
-        run_real(names, dur, args.policy, args.rate, gen_len=args.gen_len)
+        run_real(names, dur, args.policy, args.rate, gen_len=args.gen_len,
+                 lazy_kv=args.lazy_kv)
 
 
 if __name__ == "__main__":

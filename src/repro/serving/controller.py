@@ -8,6 +8,16 @@ dispatch over all of that engine's slots), and asks the policy to ``plan``
 against the pool's SchedView — translating each ``RunRequest`` into an
 admission on a pre-built standby engine via ``EnginePool.admit``.
 
+Every data-plane action under this loop routes through the declarative
+plan API (``repro.serving.plan``): admissions and topups are StepPlans
+built by the model's ``StepPlanner`` (one shared admission gate — page
+horizon, SLO expiry, head reservation) and decode steps execute as
+``StepPlan(decodes=...)``, so the pool plane and the tick plane
+(``TickServer``) cannot diverge in engine semantics. Pools built with
+``lazy_kv=True`` additionally reserve pages lazily and preempt-and-
+requeue on ``OutOfPages`` mid-run (``preemptions``/``requeues`` in
+``PoolMetrics``) — see ``docs/serving_api.md``.
+
 Virtual time advances by the profile roofline latency of each run at its
 *granted* allocation, so SLO accounting, session boundaries, and policy
 comparisons are deterministic and paper-comparable on a one-core host —

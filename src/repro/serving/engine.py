@@ -58,6 +58,19 @@ make that true on the host side:
    repads, recompiles, moves another sequence's cache, or perturbs other
    slots — and KV memory in use tracks tokens actually resident instead
    of n_slots × max_len (the admission bottleneck paging removes).
+
+5. **Declarative step plans.** ``execute(plan)`` is the single entry
+   point the serving control planes drive: one ``StepPlan``
+   (``repro.serving.plan``) per tick runs frees → preemptions → lazy
+   page grows → first prefill chunks (ONE packed prefill) → chunk
+   continuations (ONE packed prefix-recompute prefill over every
+   mid-prefill slot, riding the same executables and segment scatter as
+   admissions) → decodes (ONE masked slot step) — at most three model
+   dispatches per tick, all against pre-compiled executables. Prefix
+   recompute plus the PR-4 packed-parity guarantee is what makes
+   chunked prefill bit-exact with one-shot prefill; lazy reservation +
+   ``grow_slot`` is what makes vLLM-style preempt-and-requeue a plan
+   variant instead of a new code path.
 """
 from __future__ import annotations
 
@@ -101,6 +114,12 @@ class SamplingParams:
 class EngineStats:
     prefills: int = 0          # prefill DISPATCHES (a packed one counts 1)
     packed_prefills: int = 0   # of which packed multi-segment dispatches
+    # chunk-continuation DISPATCHES: one packed prefix-recompute prefill
+    # advances every mid-prefill slot's chunk (StepPlan admissions with
+    # start > 0). Each is also counted in prefills/packed_prefills (it
+    # IS a packed prefill), and prefill_tokens charges the full prefix
+    # rows it computed — recompute waste stays visible
+    chunk_prefills: int = 0
     # prompt tokens prefilled: what the dispatch actually computed — the
     # packed path charges sum(real lens), `prefill` charges B×S as given
     # (includes padding only if the CALLER padded the batch)
@@ -108,6 +127,9 @@ class EngineStats:
     decode_steps: int = 0
     tokens_out: int = 0
     inserts: int = 0
+    # lazy page growth: block-table extension dispatches (page
+    # boundaries crossed under PlannerConfig.lazy)
+    grows: int = 0
 
 
 class InferenceEngine:
@@ -151,6 +173,9 @@ class InferenceEngine:
         # row_len) pair — O(log max_len) total; built lazily
         self._packed_prefill_jit: Dict[Any, Any] = {}
         self._write_segments = None        # built by init_slots
+        # chunk continuation (prefix recompute) reuses _packed_prefill_jit
+        # and _write_segments — chunked serving compiles nothing new
+        self._set_table_row = None         # built by init_slots(paged=True)
 
         # slot state (populated by init_slots)
         self.paged = False
@@ -160,9 +185,11 @@ class InferenceEngine:
         self._slot_active: List[bool] = []
         self._slot_budget: List[Optional[int]] = []
         self._slot_generated: List[int] = []
+        self._slot_pos: List[int] = []      # host mirror of cache["pos"]
         self._slot_sampling: Optional[SamplingParams] = None
         self._slot_rng = None
         self._last_tok = None
+        self._step_skip = frozenset()
 
     # ------------------------------------------------------------------
     def bucket_len(self, need: int) -> int:
@@ -192,20 +219,26 @@ class InferenceEngine:
 
         ``packed`` is the pytree ``_pack_prompts`` builds: ``tokens``
         (1, T) with T already bucketed to a power of two, ``seg_ids``
-        (T,), ``seg_starts``/``seg_lens`` (S,), plus ``enc_embeds`` for
-        encoder models. Returns (per-segment last logits (S, V), packed
-        cache). One executable per (T, row_len) pair.
+        (T,), ``seg_starts``/``seg_lens`` (S,) with S the pow2 bucket of
+        the real segment count, plus ``enc_embeds`` for encoder models.
+        Returns (per-segment last logits (S, V), packed cache). One
+        executable per (T, row_len, S) triple — O(log³), and in practice
+        near-additive because the three grow together.
 
         ``row_len`` defaults to the pow2 bucket of the batch's longest
         prompt (capped at slot_len), NOT slot_len itself: the fallback's
         per-segment row work (attention, conv, SSD) is quadratic/linear
         in row_len, and an engine with a long cache serving short
-        prompts must not pay cache-sized rows per admission."""
+        prompts must not pay cache-sized rows per admission. The segment
+        axis is bucketed for the same reason — a chunk continuation
+        carrying one or two segments must not pay the full slot count's
+        attention rows."""
         if row_len is None:
             row_len = min(self.slot_len, _pow2_at_least(
                 int(jnp.max(packed["seg_lens"]))))
         row_len = max(1, row_len)
-        key = (packed["tokens"].shape[1], row_len)
+        key = (packed["tokens"].shape[1], row_len,
+               packed["seg_starts"].shape[0])
         fn = self._packed_prefill_jit.get(key)
         if fn is None:
             api = self.api
@@ -376,15 +409,23 @@ class InferenceEngine:
                 _make_write_slot_paged(self.api.paged_keys, page_size),
                 donate_argnums=(0,))
             self._clear_slot = jax.jit(_clear_slot, donate_argnums=(0,))
+            self._set_table_row = jax.jit(_set_table_row, donate_argnums=(0,))
         else:
             self._kv = None
             self._slot_cache = self.api.init_cache(n_slots, self.slot_len)
+        # decode/chunk dispatches merge per-row cache leaves through a step
+        # mask; page-indexed leaves (and the table, which decode never
+        # writes) pass through — their dead writes land on the null page
+        # or at a not-yet-valid position that is overwritten before read
+        self._step_skip = (frozenset(self.api.paged_keys) | {"block_tables"}
+                          if self.paged else frozenset())
         self._write_segments = jax.jit(
             _make_write_segments(self.api.paged_keys), donate_argnums=(0, 1))
         self._slot_free = list(range(n_slots))
         self._slot_active = [False] * n_slots
         self._slot_budget = [None] * n_slots
         self._slot_generated = [0] * n_slots
+        self._slot_pos = [0] * n_slots
         self._active_mask = jnp.zeros((n_slots,), bool)
         self._last_tok = jnp.zeros((n_slots,), jnp.int32)
         return self
@@ -422,7 +463,8 @@ class InferenceEngine:
             self.pages_needed(prompt_len, n_tokens))
 
     def insert(self, batch: Dict[str, Any],
-               n_tokens: Optional[int] = None) -> int:
+               n_tokens: Optional[int] = None,
+               reserve_tokens: Optional[int] = None) -> int:
         """Admit one request (batch size 1) into a free slot mid-stream.
 
         Prefills the prompt and writes the resulting cache into the slot —
@@ -430,8 +472,11 @@ class InferenceEngine:
         table row; ring: write the slot's rows. ``n_tokens`` is the
         request's decode budget: ``step`` reports the slot done after that
         many tokens, and (paged) only ``prompt + n_tokens`` worth of pages
-        are claimed instead of the ring's full ``cache_len``. Raises
-        ``OutOfPages`` (slot untouched) when the pool can't cover it."""
+        are claimed instead of the ring's full ``cache_len``.
+        ``reserve_tokens`` overrides the page horizon claimed NOW (>= the
+        prompt; the lazy planner reserves just the written tokens and
+        ``grow_slot``s later). Raises ``OutOfPages`` (slot untouched) when
+        the pool can't cover it."""
         if not self._slot_free:
             raise RuntimeError("no free slots")
         assert batch["tokens"].shape[0] == 1, "insert admits one request"
@@ -449,7 +494,9 @@ class InferenceEngine:
             room = self.slot_len - s
             budget = room if n_tokens is None else max(
                 1, min(int(n_tokens), room))
-            self._kv.alloc(slot, s + budget)
+            horizon = s + budget if reserve_tokens is None else max(
+                s, min(int(reserve_tokens), self.slot_len))
+            self._kv.alloc(slot, horizon)
             table_row = jnp.asarray(self._kv.table_row(slot), jnp.int32)
         else:
             budget = None if n_tokens is None else max(1, int(n_tokens))
@@ -466,6 +513,7 @@ class InferenceEngine:
         self._slot_active[slot] = True
         self._slot_budget[slot] = budget
         self._slot_generated[slot] = 0
+        self._slot_pos[slot] = s
         self._active_mask = self._active_mask.at[slot].set(True)
         self.stats.inserts += 1
         return slot
@@ -476,12 +524,14 @@ class InferenceEngine:
         """Concatenate an admission batch into one packed prompt row.
 
         Total tokens bucket to the next power of two (same O(log) compile
-        discipline as ``generate``); the segment axis is padded to the
-        engine's slot count, a STATIC shape, so the executable key is the
-        token bucket alone. Padding tokens carry segment id S (matched by
-        no real token) and empty segments have length 0."""
+        discipline as ``generate``) and the segment axis buckets to the
+        next power of two of the REAL segment count (the fallback's
+        attention/conv/SSD row work is linear in the padded segment
+        count — a one-segment chunk continuation must not pay the whole
+        slot count's rows). Padding tokens carry segment id S (matched
+        by no real token) and empty segments have length 0."""
         import numpy as np
-        s_max = self.n_slots
+        s_max = max(1, _pow2_at_least(len(batches)))
         t = max(1, _packed_bucket(sum(lens)))
         tokens = np.zeros((1, t), np.int32)
         seg_ids = np.full((t,), s_max, np.int32)
@@ -506,7 +556,8 @@ class InferenceEngine:
         return packed
 
     def insert_many(self, batches: List[Dict[str, Any]],
-                    n_tokens: Optional[List[Optional[int]]] = None
+                    n_tokens: Optional[List[Optional[int]]] = None,
+                    reserve_tokens: Optional[List[Optional[int]]] = None
                     ) -> List[int]:
         """Admit a whole admission batch in ONE prefill dispatch.
 
@@ -519,7 +570,9 @@ class InferenceEngine:
         leaves — SSM state, conv tails, cross K/V, positions — take a
         batched row write in the same executable). Page allocation is
         all-or-nothing across the batch: on ``OutOfPages`` every page
-        already claimed is returned and no slot is touched."""
+        already claimed is returned and no slot is touched.
+        ``reserve_tokens[i]`` (>= prompt i's length) overrides request
+        i's page horizon — the StepPlanner's lazy-reservation knob."""
         n = len(batches)
         if n == 0:
             return []
@@ -529,6 +582,8 @@ class InferenceEngine:
                 f"free slots")
         if n_tokens is None:
             n_tokens = [None] * n
+        if reserve_tokens is None:
+            reserve_tokens = [None] * n
         for b in batches:
             assert b["tokens"].shape[0] == 1, \
                 "insert_many packs single-request batches"
@@ -554,8 +609,11 @@ class InferenceEngine:
         if self.paged:
             claimed: List[int] = []
             try:
-                for slot, s, budget in zip(slots, lens, budgets):
-                    self._kv.alloc(slot, s + budget)
+                for slot, s, budget, rsv in zip(slots, lens, budgets,
+                                                reserve_tokens):
+                    horizon = s + budget if rsv is None else max(
+                        s, min(int(rsv), self.slot_len))
+                    self._kv.alloc(slot, horizon)
                     claimed.append(slot)
             except OutOfPages:
                 for slot in claimed:
@@ -569,10 +627,11 @@ class InferenceEngine:
         args = self._segment_dest(slots, lens)
         self._slot_cache, self._last_tok = self._write_segments(
             self._slot_cache, self._last_tok, pcache, logits, *args)
-        for slot, budget in zip(slots, budgets):
+        for slot, s, budget in zip(slots, lens, budgets):
             self._slot_active[slot] = True
             self._slot_budget[slot] = budget
             self._slot_generated[slot] = 0
+            self._slot_pos[slot] = s
         self._active_mask = self._active_mask.at[
             jnp.asarray(slots, jnp.int32)].set(True)
         self.stats.inserts += n
@@ -591,8 +650,10 @@ class InferenceEngine:
         bounds, dropped)."""
         import numpy as np
         t = max(1, _packed_bucket(sum(lens)))
-        s_max = self.n_slots
-        seg_slots = np.full((s_max,), s_max, np.int32)
+        # segment axis bucketed like _pack_prompts; padding entries carry
+        # slot id n_slots — out of bounds on the SLOT axis, dropped
+        s_max = max(1, _pow2_at_least(len(slots)))
+        seg_slots = np.full((s_max,), self.n_slots, np.int32)
         seg_slots[:len(slots)] = slots
         if self.paged:
             dest0 = np.zeros((t,), np.int32)             # null page
@@ -628,6 +689,7 @@ class InferenceEngine:
             return
         self._slot_active[slot] = False
         self._slot_free.append(slot)
+        self._slot_pos[slot] = 0
         self._active_mask = self._active_mask.at[slot].set(False)
         if self.paged:
             self._kv.free(slot)
@@ -636,52 +698,205 @@ class InferenceEngine:
         else:
             self._slot_cache["pos"] = self._slot_cache["pos"].at[slot].set(0)
 
+    # -------------------------------------------- lazy page reservation
+    def slot_pos(self, slot: int) -> int:
+        """Tokens written to the slot so far (host mirror of pos)."""
+        return self._slot_pos[slot]
+
+    def reserved_tokens(self, slot: int) -> int:
+        """Token horizon the slot's pages currently cover (slot_len for
+        ring/dense slots — they are fully backed by construction)."""
+        if not self.paged:
+            return self.slot_len
+        return self._kv.length(slot)
+
+    def slot_page_count(self, slot: int) -> int:
+        return len(self._kv.pages(slot)) if self.paged else 0
+
+    def kv_pages_needed(self, tokens: int) -> int:
+        """Pages required to hold ``tokens`` KV entries (0 when unpaged)
+        — the planner-facing page arithmetic of the PageView protocol."""
+        return self._kv.pages_needed(max(1, int(tokens))) if self.paged \
+            else 0
+
+    def grow_slot(self, slot: int, upto_tokens: int) -> int:
+        """Extend a resident slot's page horizon to cover ``upto_tokens``
+        (lazy reservation: admission claimed only the written prefix).
+        Newly crossed page boundaries allocate pages and push the updated
+        block-table row to the device — one small pre-compiled dispatch,
+        only when pages were actually added. Raises ``OutOfPages`` with
+        the slot untouched (the planner's preemption signal). Returns the
+        number of pages added."""
+        if not self.paged:
+            return 0
+        have = self._kv.length(slot)
+        delta = min(int(upto_tokens), self.slot_len) - have
+        if delta <= 0:
+            return 0
+        fresh = self._kv.append(slot, delta)
+        if fresh:
+            row = jnp.asarray(self._kv.table_row(slot), jnp.int32)
+            self._slot_cache = self._set_table_row(
+                self._slot_cache, jnp.int32(slot), row)
+            self.stats.grows += 1
+        return len(fresh)
+
+    def ensure_decode_room(self, slots) -> None:
+        """Grow every slot to cover its next decode write (lazy pools call
+        this before stepping; raises ``OutOfPages`` naming nothing —
+        callers preempt a victim and retry)."""
+        for slot in slots:
+            self.grow_slot(slot, self._slot_pos[slot] + 1)
+
+    # ------------------------------------------------- chunked prefill
+    def chunk_append(self, chunks: List[Tuple[int, Dict[str, Any], bool]]
+                     ) -> None:
+        """Advance every mid-prefill slot by one chunk in ONE packed
+        prefill dispatch (prefix recompute).
+
+        ``chunks`` is [(slot, prefix pytree (1, done+chunk), final)] —
+        each entry carries the request's FULL prompt prefix up to the end
+        of this tick's chunk. The prefixes pack into one segmented row
+        and run through the SAME ``prefill_packed`` executables
+        admissions use (same pow2 token buckets — chunk continuation
+        compiles nothing of its own), and ``_write_segments`` scatters
+        every segment straight onto its slot: already-written prefix
+        positions are REWRITTEN with bit-identical values (a token's K/V
+        never depends on later tokens, and the packed fallback's exact-
+        zero padding makes row-bucket size invisible — the PR-4 parity
+        guarantee), the new chunk's tokens land on their pages for the
+        first time, and the per-segment leaves (position, SSM state,
+        conv tail, cross K/V) carry the partial segment forward as the
+        recomputed post-prefix state. ``final`` segments leave
+        ``last_tok`` = argmax of the full prompt's last logits — exactly
+        what a one-shot insert seeds — so chunked prefill is bit-exact
+        with whole-prompt admission by construction. The recompute costs
+        O(prefix) extra FLOPs per chunk (the classic chunked-prefill
+        trade: bounded per-tick work, decode never stalls on a burst)."""
+        if not chunks:
+            return
+        lens = []
+        for slot, b, _ in chunks:
+            ln = int(b["tokens"].shape[1])
+            assert self._slot_active[slot], f"chunk into vacant slot {slot}"
+            assert ln <= self.reserved_tokens(slot), \
+                f"slot {slot}: chunk outruns its reserved pages"
+            assert ln > self._slot_pos[slot], \
+                f"slot {slot}: chunk makes no progress"
+            lens.append(ln)
+        slots = [slot for slot, _, _ in chunks]
+        packed = self._pack_prompts([b for _, b, _ in chunks], lens)
+        logits, pcache = self.prefill_packed(
+            packed, row_len=min(self.slot_len, _pow2_at_least(max(lens))))
+        args = self._segment_dest(slots, lens)
+        self._slot_cache, self._last_tok = self._write_segments(
+            self._slot_cache, self._last_tok, pcache, logits, *args)
+        for slot, ln in zip(slots, lens):
+            self._slot_pos[slot] = ln
+        self.stats.chunk_prefills += 1
+
+    # ------------------------------------------------- plan execution
+    def execute(self, plan) -> "Any":
+        """Run one ``StepPlan`` — the single data-plane entry point of
+        the declarative serving API (``repro.serving.plan``). Fixed
+        order: frees → preemptions → grows → first chunks (ONE packed
+        prefill) → continuation chunks (ONE packed recompute prefill) →
+        decodes (ONE slot step): at most three model dispatches per
+        tick, all against pre-compiled executables. Returns a
+        ``StepResult``."""
+        import numpy as np
+
+        from repro.serving.plan import StepResult
+        res = StepResult()
+        for slot in plan.frees:
+            self.free(slot)
+        for slot in plan.preemptions:
+            self.free(slot)
+        for slot, upto in plan.grows:
+            self.grow_slot(slot, upto)
+        first = [c for c in plan.admissions if c.slot is None]
+        cont = [c for c in plan.admissions if c.slot is not None]
+        if first:
+            slots = self.insert_many(
+                [c.batch for c in first],
+                n_tokens=[c.n_tokens for c in first],
+                reserve_tokens=[c.reserve_tokens for c in first])
+            res.admitted = {c.rid: s for c, s in zip(first, slots)}
+            res.dispatches += 1
+        if cont:
+            self.chunk_append([(c.slot, c.batch, c.final) for c in cont])
+            res.dispatches += 1
+        if plan.decodes:
+            toks, done = self.step(plan.decodes)
+            t = np.asarray(toks)
+            res.tokens = {int(s): int(t[s]) for s in plan.decodes}
+            res.done = list(done)
+            res.dispatches += 1
+        return res
+
     def _get_slot_step(self, sampling: Optional[SamplingParams]):
         fn = self._slot_step_jit.get(sampling)
         if fn is None:
             api = self.api
+            skip = self._step_skip
             if sampling is None:
                 fn = jax.jit(
                     lambda p, tok, cache, active: _slot_decode_step(
-                        api, p, tok, cache, active),
+                        api, skip, p, tok, cache, active),
                     donate_argnums=self._donate_cache_argnums)
             else:
                 fn = jax.jit(
                     lambda p, tok, cache, active, rng, _s=sampling:
-                    _slot_decode_step(api, p, tok, cache, active, rng, _s),
+                    _slot_decode_step(api, skip, p, tok, cache, active,
+                                      rng, _s),
                     donate_argnums=self._donate_cache_argnums)
             self._slot_step_jit[sampling] = fn
         return fn
 
-    def step(self) -> Tuple[jax.Array, List[int]]:
-        """One decode step for ALL slots in a single dispatch.
+    def step(self, slots: Optional[List[int]] = None
+             ) -> Tuple[jax.Array, List[int]]:
+        """One decode step in a single dispatch — for all active slots
+        (default) or only the plan's ``decodes`` subset.
 
         Returns ``(tokens, done)``: tokens (n_slots,) with sampling (or
-        greedy arg-max) already applied — entries for inactive slots are
-        garbage and must be ignored (``slot_active``) — and ``done``, the
-        active slots whose per-request token budget is now exhausted
-        (reported every step until the caller frees them). The done flags
-        are host-side counters, so reading them never syncs the device."""
+        greedy arg-max) already applied — entries for unstepped slots keep
+        their previous value and must be ignored (``slot_active``) — and
+        ``done``, the active slots whose per-request token budget is now
+        exhausted (reported every step until the caller frees them). The
+        done flags are host-side counters, so reading them never syncs
+        the device. The step mask is an INPUT to one shared executable:
+        stepping a subset (the plan API excludes mid-prefill slots)
+        retraces nothing."""
+        import numpy as np
+        if slots is None:
+            mask = self._active_mask
+            stepped = [s for s, a in enumerate(self._slot_active) if a]
+        else:
+            m = np.zeros((self.n_slots,), bool)
+            for s in slots:
+                m[s] = self._slot_active[s]
+            mask = jnp.asarray(m)
+            stepped = [s for s in slots if self._slot_active[s]]
         fn = self._get_slot_step(self._slot_sampling)
         if self._slot_sampling is None:
             tok, self._slot_cache = fn(
-                self.params, self._last_tok, self._slot_cache,
-                self._active_mask)
+                self.params, self._last_tok, self._slot_cache, mask)
         else:
             self._slot_rng, sub = jax.random.split(self._slot_rng)
             tok, self._slot_cache = fn(
-                self.params, self._last_tok, self._slot_cache,
-                self._active_mask, sub)
+                self.params, self._last_tok, self._slot_cache, mask, sub)
         self._last_tok = tok
+        for slot in stepped:
+            self._slot_generated[slot] += 1
+            self._slot_pos[slot] += 1
         done: List[int] = []
         for slot, active in enumerate(self._slot_active):
             if active:
-                self._slot_generated[slot] += 1
                 budget = self._slot_budget[slot]
                 if budget is not None and self._slot_generated[slot] >= budget:
                     done.append(slot)
         self.stats.decode_steps += 1
-        self.stats.tokens_out += sum(self._slot_active)
+        self.stats.tokens_out += len(stepped)
         return tok, done
 
     def slot_active(self, slot: int) -> bool:
@@ -739,23 +954,50 @@ class InferenceEngine:
         if self._write_slot_paged is not None:
             out["write_slot_paged"] = n(self._write_slot_paged)
             out["clear_slot"] = n(self._clear_slot)
+            out["set_table_row"] = n(self._set_table_row)
         return out
 
 
-def _slot_decode_step(api, params, tok, cache, active, rng=None,
+def _merge_rows(new, old, mask, skip):
+    """Keep ``new`` cache leaves only for rows in ``mask``; rows outside
+    it retain ``old`` bit-for-bit. Per-row leaves carry batch at axis 0
+    (1-D ``pos``) or axis 1 (stacked ``(layers, B, ...)``) — the same
+    layout rule ``_write_slot`` relies on. Leaves in ``skip`` (paged K/V
+    pools, the block table) are page-indexed, not row-indexed, and pass
+    through: masked-off rows' dead writes there land at a not-yet-valid
+    position (always overwritten before any read attends to it) or on
+    the null page."""
+    out = {}
+    for key, nl in new.items():
+        if key in skip:
+            out[key] = nl
+            continue
+        axis = 0 if nl.ndim == 1 else 1
+        shape = [1] * nl.ndim
+        shape[axis] = mask.shape[0]
+        out[key] = jnp.where(mask.reshape(shape), nl,
+                             old[key].astype(nl.dtype))
+    return out
+
+
+def _slot_decode_step(api, skip, params, tok, cache, mask, rng=None,
                       sampling: Optional[SamplingParams] = None):
-    logits, cache = api.decode_step(params, tok, cache)
-    # vacant rows' positions stay pinned at 0: decode_step increments pos
-    # for every row, and an un-pinned vacant row would creep back to
+    logits, new = api.decode_step(params, tok, cache)
+    # rows outside the step mask — vacant slots AND mid-prefill slots the
+    # plan excluded — keep every per-row leaf (pos, SSM state, ring K/V)
+    # bit-identical: an un-merged vacant row would creep back to
     # full-cache attention cost (ring) or walk off its null-page table
-    # row (paged) within cache_len steps
-    cache["pos"] = jnp.where(active, cache["pos"], 0)
+    # row (paged) within cache_len steps, and an advanced mid-prefill
+    # row would corrupt its carried state
+    cache = _merge_rows(new, cache, mask, skip)
     if sampling is None:
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
     else:
         nxt = L.sample_logits(rng, logits, temperature=sampling.temperature,
                               top_k=sampling.top_k, top_p=sampling.top_p)
-    return nxt, cache
+    # unstepped rows keep their last token (a mid-prefill slot's pending
+    # teacher-forced token must survive an interleaved decode dispatch)
+    return jnp.where(mask, nxt, tok), cache
 
 
 def _write_slot(big, one, slot):
@@ -834,6 +1076,16 @@ def _make_write_segments(paged_keys):
         return out, new_last
 
     return write
+
+
+def _set_table_row(cache, slot, table_row):
+    """Push a grown slot's block-table row to the device (lazy page
+    reservation: pages appear as decode/chunk writes cross page
+    boundaries). One static shape — the row is always the full padded
+    (max_pages,) vector — so growth never retraces."""
+    cache = dict(cache)
+    cache["block_tables"] = cache["block_tables"].at[slot].set(table_row)
+    return cache
 
 
 def _clear_slot(cache, slot):

@@ -62,6 +62,15 @@ class ModelPoolMetrics:
     # re-admission)
     blocked_on_memory: int = 0
     topups: int = 0
+    # lazy page reservation (StepPlanner): residents evicted because the
+    # page pool ran dry mid-decode/mid-prefill (their pages freed), and
+    # their requests pushed straight back to the queue for a
+    # from-scratch re-prefill on re-admission (vLLM-style recompute
+    # preemption). Every preemption requeues immediately, so the two
+    # counters track together; a requeued request that then expires is
+    # additionally counted dropped/violated like any other
+    preemptions: int = 0
+    requeues: int = 0
     runtime: float = 0.0       # virtual busy seconds (Σ run latencies)
     chip_seconds: float = 0.0  # allocation-weighted: Σ chips·latency
     tokens: int = 0
@@ -138,5 +147,7 @@ class PoolResult:
                 + (f" mem_blocked={m.blocked_on_memory}"
                    if m.blocked_on_memory else "")
                 + (f" topups={m.topups}" if m.topups else "")
+                + (f" preempt={m.preemptions}/{m.requeues}"
+                   if m.preemptions else "")
                 + (f" abandoned={m.abandoned}" if m.abandoned else ""))
         return rows

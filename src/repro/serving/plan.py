@@ -1,0 +1,734 @@
+"""Declarative step-plan serving: ONE ``StepPlan`` per tick.
+
+D-STACK's core claim is that a spatio-temporal scheduler deciding *what
+runs each tick* is what buys throughput under SLOs. The imperative API
+this module replaces hid that decision inside calls scattered across
+``EnginePool.admit``/``topup``, ``InferenceEngine.insert``/``free``/
+``step`` and the controller loop — so tick-granular features (chunked
+prefill, preempt-and-requeue) could not be expressed without the
+scheduler reaching into engine internals. Here the boundary is a plan:
+
+  * ``StepPlanner`` observes the queue and the engine's page/slot state
+    and emits a ``StepPlan`` — admissions (as ``PrefillChunk``s), decode
+    slots, preemptions, frees, and lazy page grows — once per tick;
+  * ``InferenceEngine.execute(plan)`` runs it with a BOUNDED number of
+    dispatches: at most one packed-prefill dispatch (all first chunks),
+    one chunk-continuation dispatch (all in-flight prefills advance
+    together through one packed prefix-recompute prefill), and one
+    decode dispatch (all decoding slots) — every executable
+    pre-compiled, zero recompiles while serving;
+  * ``StepResult`` reports what actually happened (tokens per slot, done
+    slots, rid→slot bindings) and ``StepPlanner.observe`` folds it back
+    into queue/metrics state.
+
+The two ROADMAP follow-ons this API exists for are plan *variants*, not
+new code paths:
+
+**Chunked prefill** (Sarathi-style): ``PlannerConfig.chunk_tokens`` caps
+the prefill tokens computed per tick, so a long prompt is split into a
+first chunk (packed prefill of positions 0..c) plus continuation chunks
+that re-run the packed prefill over the growing prefix (prefix
+recompute) and scatter each tick's new K/V onto the slot's pages —
+already-written positions are rewritten with bit-identical values (a
+causal token's K/V never depends on later tokens, and the packed
+fallback's exact-zero padding makes the row bucket invisible — the PR-4
+parity guarantee), and the per-segment leaves carry the partial segment
+forward as recomputed post-prefix state. That makes chunked prefill
+BIT-EXACT with one-shot prefill (asserted per family in
+``tests/test_plan.py``) while admission work interleaves with in-flight
+decodes instead of stalling them (time-between-tokens p99 — see
+``bench_decode --chunked-prefill``). The recompute trades O(prefix)
+extra prefill FLOPs per chunk for a per-tick work bound of
+~``chunk_tokens`` — the classic chunked-prefill trade, and the chunks
+reuse the admission path's packed executables (same pow2 token buckets:
+chunked serving compiles NOTHING new).
+
+**Page preemption** (vLLM-style recompute preemption):
+``PlannerConfig.lazy`` reserves pages for the tokens a request has
+actually written instead of its whole prompt+budget horizon, growing
+page-by-page as decode proceeds. When the pool runs dry the planner
+preempts the lowest-priority resident (latest arrival — the newest
+request has the least sunk work and, under FIFO re-admission, cannot
+thrash older residents), frees its pages, and requeues the request; on
+re-admission its prompt re-prefills from scratch, so the final token
+stream is unchanged (greedy decode is deterministic). ``preemptions`` /
+``requeues`` are counted in ``ModelPoolMetrics``.
+
+``EnginePool.admit`` and ``EnginePool.topup`` route their shared
+admission logic through ``StepPlanner.select_admissible`` (one gate, one
+head-reservation/aging scheme, one ``blocked_on_memory`` accounting) and
+execute the resulting plan — the legacy imperative entry points survive
+as thin shims over plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.metrics import ModelPoolMetrics
+from repro.serving.request import Request, RequestQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillChunk:
+    """One tick's worth of prefill for one request.
+
+    ``start == 0`` chunks carry no slot: the engine claims one and runs
+    them through the packed ragged prefill (one dispatch for all first
+    chunks in the plan). ``start > 0`` chunks name the slot that is
+    mid-prefill; ``batch`` then holds the FULL prefix up to the chunk's
+    end, and they advance through one shared packed prefix-recompute
+    prefill (one dispatch for all continuations in the plan). ``final``
+    marks the chunk that completes the prompt — its last-token logits
+    seed the first generated token, exactly as a one-shot prefill's last
+    logits would."""
+    rid: int
+    batch: Any                         # token pytree for THIS chunk (B=1)
+    start: int                         # absolute prompt offset
+    length: int                        # tokens in this chunk
+    final: bool
+    slot: Optional[int] = None         # None -> engine claims a slot
+    n_tokens: Optional[int] = None     # decode budget (first chunk only)
+    # KV horizon (tokens) to reserve pages for NOW (first chunk only).
+    # None = the legacy up-front reservation (prompt + budget); the lazy
+    # planner passes just the chunk's own tokens and grows later.
+    reserve_tokens: Optional[int] = None
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Everything one engine does this tick, decided up front.
+
+    Execution order inside ``InferenceEngine.execute`` is fixed —
+    frees → preemptions → grows → admissions (first chunks, one packed
+    prefill) → continuations (one packed recompute prefill) → decodes
+    (one step) — so a planner can project page availability exactly:
+    pages released by frees/preemptions are usable by this same plan's
+    grows/admissions."""
+    admissions: List[PrefillChunk] = dataclasses.field(default_factory=list)
+    decodes: List[int] = dataclasses.field(default_factory=list)
+    preemptions: List[int] = dataclasses.field(default_factory=list)
+    frees: List[int] = dataclasses.field(default_factory=list)
+    # lazy page growth: extend slot's page horizon to cover >= tokens
+    grows: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        return not (self.admissions or self.decodes or self.preemptions
+                    or self.frees or self.grows)
+
+
+@dataclasses.dataclass
+class StepResult:
+    """What ``execute`` actually did: sampled tokens per DECODED slot,
+    slots whose budgets are now exhausted, rid→slot bindings for this
+    plan's first-chunk admissions, and the dispatch count (the bounded-
+    dispatch invariant: <= 3 model dispatches per tick)."""
+    tokens: Dict[int, int] = dataclasses.field(default_factory=dict)
+    done: List[int] = dataclasses.field(default_factory=list)
+    admitted: Dict[int, int] = dataclasses.field(default_factory=dict)
+    dispatches: int = 0
+
+
+@dataclasses.dataclass
+class PlannerConfig:
+    # prompt tokens prefilled per tick across ALL requests; 0 = unchunked
+    # (every admission prefills its whole prompt in its first chunk)
+    chunk_tokens: int = 0
+    # lazy page reservation + preempt-and-requeue on OutOfPages; False =
+    # the legacy deadlock-free up-front prompt+budget reservation
+    lazy: bool = False
+    gen_len: int = 4                   # default decode budget (n_tokens=0)
+    drop_expired: bool = True
+    # page reservation with aging for the page-blocked FIFO head (the
+    # ROADMAP anti-starvation follow-on): the head's reservation ratchets
+    # up to its need as pages free, and bypassing smaller requests cannot
+    # spend reserved pages
+    head_reservation: bool = True
+
+
+@dataclasses.dataclass
+class _Resident:
+    """Planner-side state for one occupied slot."""
+    req: Request
+    batch: Any                         # full prompt pytree (B=1)
+    prompt_len: int
+    done: int                          # prompt tokens prefilled so far
+    budget: int                        # decode-token budget
+    prefilling: bool                   # True until the final chunk ran
+
+
+def _prompt_tokens(batch) -> int:
+    return int(batch["tokens"].shape[1])
+
+
+def _chunk_batch(batch, stop: int):
+    """Truncate a prompt pytree to its first ``stop`` tokens. Every
+    chunk — first or continuation — carries the FULL prefix up to its
+    end plus the non-token inputs (``enc_embeds``): the engine's chunk
+    executor recomputes the prefix (packed prefill) and rewrites its
+    already-written positions with bit-identical values."""
+    if stop >= batch["tokens"].shape[1]:
+        return batch
+    out = dict(batch)
+    out["tokens"] = batch["tokens"][:, :stop]
+    return out
+
+
+class StepPlanner:
+    """Builds one ``StepPlan`` per tick from (policy knobs + queue +
+    engine page/slot view), and folds ``StepResult``s back into
+    queue/metrics state.
+
+    Two usage modes share the same admission gate:
+
+    * **tick plane** (bound engine + queue): ``submit`` requests with
+      real prompt arrays, then ``build`` → ``engine.execute`` →
+      ``observe`` once per tick. This is what ``bench_decode
+      --chunked-prefill`` and the plan-equivalence tests drive.
+    * **pool plane** (``EnginePool``): one planner per hosted model;
+      ``admit``/``topup`` call ``select_admissible`` (the single
+      admission gate — KV pages, SLO expiry, head reservation) against
+      whichever standby engine the policy granted, and execute the
+      resulting whole-prompt plan.
+    """
+
+    def __init__(self, engine=None, queue: Optional[RequestQueue] = None,
+                 config: Optional[PlannerConfig] = None,
+                 metrics: Optional[ModelPoolMetrics] = None):
+        self.engine = engine
+        self.queue = queue
+        self.config = config or PlannerConfig()
+        self.metrics = metrics if metrics is not None else ModelPoolMetrics()
+        self._resident: Dict[int, _Resident] = {}
+        self._staged: List[_Resident] = []    # admissions awaiting a slot
+        self._to_free: List[int] = []
+        self._prompts: Dict[int, Any] = {}    # rid -> prompt pytree
+        self._blocked_rids: set = set()
+        # head reservation: (rid of the page-blocked FIFO head, pages
+        # ratcheted for it so far)
+        self._resv_rid: Optional[int] = None
+        self._resv_pages: int = 0
+        # per-request emitted tokens (tick plane); preemption clears a
+        # stream — the restarted request re-emits from scratch
+        self.streams: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------- tick plane
+    def submit(self, req: Request, batch) -> None:
+        """Enqueue a request with its real prompt (token pytree, B=1)."""
+        self.queue.push(req)
+        self.streams.setdefault(req.rid, [])
+        self._prompts[req.rid] = batch
+
+    def busy(self) -> bool:
+        return bool(self._resident or self._staged or self._to_free
+                    or (self.queue is not None and len(self.queue)))
+
+    def _budget_of(self, req: Request, prompt_len: int) -> int:
+        eng = self.engine
+        want = req.n_tokens if req.n_tokens > 0 else self.config.gen_len
+        room = max(1, eng.slot_len - prompt_len)
+        return max(1, min(int(want), room))
+
+    def _pages_for(self, tokens: int) -> int:
+        return self.engine.kv_pages_needed(tokens)
+
+    def _grow_cost(self, slot: int, upto: int) -> int:
+        """New pages needed to extend ``slot``'s horizon to ``upto``."""
+        eng = self.engine
+        if not eng.paged:
+            return 0
+        have = eng.reserved_tokens(slot)
+        if upto <= have:
+            return 0
+        return self._pages_for(upto) - self._pages_for(max(1, have))
+
+    def _pick_victim(self, excluded: set) -> Optional[int]:
+        """Lowest-priority resident = latest arrival (newest request has
+        the least sunk work; FIFO re-admission then cannot leapfrog the
+        older residents it was preempted for). Ties break on slot id so
+        the choice is deterministic."""
+        cands = [(r.req.arrival, slot) for slot, r in self._resident.items()
+                 if slot not in excluded]
+        if not cands:
+            return None
+        return max(cands)[1]
+
+    def build(self, now: float) -> StepPlan:
+        """Emit this tick's plan. Mutates planner bookkeeping under the
+        assumption the plan WILL be executed (the tick loop always does:
+        build → execute → observe)."""
+        eng, q, cfg = self.engine, self.queue, self.config
+        plan = StepPlan()
+        plan.frees = list(self._to_free)
+        self._to_free = []
+        freed = set(plan.frees)
+        # page/slot projection: execution frees/preempts before it
+        # grows/admits, so released pages count as available
+        pages_avail = eng.free_pages + sum(
+            eng.slot_page_count(s) for s in plan.frees)
+        slots_avail = eng.free_slots + len(plan.frees)
+        # decode set snapshot BEFORE this tick's final chunks flip flags
+        decodes = [s for s, r in sorted(self._resident.items())
+                   if not r.prefilling and s not in freed]
+
+        # -- phase A: decode page growth (lazy), preempting on shortage
+        victims: set = set()
+        for slot in list(decodes):
+            if slot in victims:
+                continue
+            # next decode writes at pos = written tokens; cover it
+            upto = min(eng.slot_pos(slot) + 1, eng.slot_len)
+            need = self._grow_cost(slot, upto)
+            while need > pages_avail:
+                v = self._pick_victim(excluded=victims | freed)
+                if v is None:
+                    break
+                victims.add(v)
+                pages_avail += eng.slot_page_count(v)
+                pages_avail += self._preempt(v, plan, now)
+                if v == slot:
+                    need = 0
+                    break
+            if slot in victims:
+                continue
+            if upto > eng.reserved_tokens(slot):
+                # always recorded, even at zero page cost: the horizon
+                # bookkeeping must advance with the physical coverage
+                plan.grows.append((slot, upto))
+                pages_avail -= need
+        decodes = [s for s in decodes if s not in victims]
+        slots_avail += len(victims)
+
+        # -- phase B: continuation chunks for in-flight prefills, oldest
+        # request first (finish what is resident before admitting more).
+        # Each selected continuation advances by a full ``chunk_tokens``
+        # quantum of NEW tokens, and the budget is charged the whole
+        # RECOMPUTED row (prefix + chunk) — the work the dispatch
+        # actually does — so per-tick prefill cost stays bounded by
+        # ~max(chunk_tokens, longest prefix + quantum); the oldest
+        # continuation always proceeds even when its row alone exceeds
+        # the budget (liveness — without it a long prompt could never
+        # finish).
+        budget_left = cfg.chunk_tokens if cfg.chunk_tokens > 0 else math.inf
+        quantum = cfg.chunk_tokens if cfg.chunk_tokens > 0 else math.inf
+        inflight = sorted(
+            ((r.req.arrival, r.req.rid, slot) for slot, r in
+             self._resident.items()
+             if r.prefilling and slot not in victims and slot not in freed))
+        first_cont = True
+        for _, _, slot in inflight:
+            if budget_left <= 0:
+                break
+            r = self._resident[slot]
+            c = int(min(r.prompt_len - r.done, quantum))
+            if not first_cont and r.done + c > budget_left:
+                continue                   # next tick
+            if eng.paged:
+                # shrink the chunk to what the page pool can back — the
+                # cap counts the slot's PHYSICAL coverage (whole pages,
+                # including slack past the reserved horizon in its last
+                # page), so a zero-page-cost continuation is never
+                # skipped; a zero-token chunk just waits for pages
+                while c > 0:
+                    need = self._grow_cost(slot, r.done + c)
+                    if need <= pages_avail:
+                        break
+                    cap = (eng.slot_page_count(slot) + pages_avail) * \
+                        eng.page_size - r.done
+                    c = int(min(c - 1, max(0, cap)))
+                if c <= 0:
+                    continue
+                if r.done + c > eng.reserved_tokens(slot):
+                    plan.grows.append((slot, r.done + c))
+                    pages_avail -= self._grow_cost(slot, r.done + c)
+            final = (r.done + c) == r.prompt_len
+            plan.admissions.append(PrefillChunk(
+                rid=r.req.rid, batch=_chunk_batch(r.batch, r.done + c),
+                start=r.done, length=c, final=final, slot=slot))
+            budget_left -= r.done + c
+            r.done += c
+            if final:
+                r.prefilling = False       # decodable from the NEXT tick
+            first_cont = False
+
+        # -- phase C: admissions (first chunks) from the queue
+        if q is not None:
+            kept = self._scan_queue(
+                eng, q, now, max_batch=slots_avail,
+                pages_avail=pages_avail, budget_left=budget_left)
+            for req, batch, budget, c, reserve in kept:
+                final = c == _prompt_tokens(batch)
+                plan.admissions.append(PrefillChunk(
+                    rid=req.rid, batch=_chunk_batch(batch, c),
+                    start=0, length=c, final=final,
+                    n_tokens=budget, reserve_tokens=reserve))
+                self._staged.append(_Resident(
+                    req=req, batch=batch, prompt_len=_prompt_tokens(batch),
+                    done=c, budget=budget, prefilling=not final))
+
+        plan.decodes = decodes
+        # stall-breaker: every resident is page-starved mid-prefill and
+        # nothing can free pages (no decodes, no admissions) — preempt the
+        # newest resident so the oldest can make progress next tick
+        if plan.empty and self._resident:
+            v = self._pick_victim(excluded=set())
+            if v is not None:
+                self._preempt(v, plan, now)
+        return plan
+
+    def _preempt(self, slot: int, plan: StepPlan, now: float) -> int:
+        """Evict ``slot``: pages free, request requeues, prompt restarts
+        on re-admission (vLLM recompute preemption — greedy decode makes
+        the restarted stream identical to an uninterrupted one). Any
+        action this plan already holds for the slot — a decode, a grow, a
+        continuation chunk — is scrubbed: execution frees the slot before
+        it would run them. Returns the pages the scrubbed grows had been
+        charged, so the caller's availability projection can re-credit
+        them (they will never be allocated)."""
+        r = self._resident.pop(slot)
+        plan.preemptions.append(slot)
+        if slot in plan.decodes:
+            plan.decodes.remove(slot)
+        credit = sum(self._grow_cost(s, u) for s, u in plan.grows
+                     if s == slot)
+        plan.grows = [(s, u) for s, u in plan.grows if s != slot]
+        plan.admissions = [c for c in plan.admissions if c.slot != slot]
+        self.queue.push(r.req)
+        self.streams[r.req.rid] = []
+        self.metrics.preemptions += 1
+        self.metrics.requeues += 1
+        return credit
+
+    def _scan_queue(self, eng, q, now, *, max_batch, pages_avail,
+                    budget_left) -> List[Tuple]:
+        """Tick-plane admission scan: pops requests the projected pages /
+        slots / chunk budget can back. Returns
+        [(req, batch, budget, first_chunk_len, reserve_tokens)]."""
+        cfg = self.config
+        kept: List[Tuple] = []
+        blocked: List[Request] = []
+        is_head = True
+        while len(kept) < max_batch and budget_left > 0 and len(q):
+            got = q.pop_batch(1, now, cfg.drop_expired)
+            if not got:
+                break
+            req = got[0]
+            batch = self._prompts[req.rid]
+            p = _prompt_tokens(batch)
+            # cannot ever fit — drop loudly rather than spin forever
+            # (paged slots need decode room past the prompt; ring slots
+            # hold at most slot_len prompt tokens for a packed insert)
+            prompt_cap = eng.slot_len - 1 if eng.paged else eng.slot_len
+            if p > prompt_cap:
+                q.violated += 1
+                q.dropped += 1
+                self._prompts.pop(req.rid, None)
+                is_head = False
+                continue
+            budget = self._budget_of(req, p)
+            if eng.paged and self._pages_for(
+                    min(p + budget, eng.slot_len)) > eng.total_pages:
+                # full residency exceeds the whole pool: not completable
+                # even with every other sequence preempted — drop loudly
+                q.violated += 1
+                q.dropped += 1
+                self._prompts.pop(req.rid, None)
+                is_head = False
+                continue
+            c = int(min(p, budget_left, max(1, eng.slot_len - 1)))
+            reserve: Optional[int] = None
+            if eng.paged:
+                horizon = c if cfg.lazy else min(p + budget, eng.slot_len)
+                reserve = horizon
+                left = self._page_gate(req, is_head,
+                                       self._pages_for(horizon),
+                                       pages_avail)
+                if left is None:
+                    blocked.append(req)
+                    is_head = False
+                    continue
+                pages_avail = left
+            kept.append((req, batch, budget, c, reserve))
+            budget_left -= c
+            is_head = False
+        for req in blocked:
+            q.push(req)
+        return kept
+
+    # -------------------------------------------- head reservation/aging
+    def _page_gate(self, req: Request, is_head: bool, need: int,
+                   pages_left: int) -> Optional[int]:
+        """The one page-admission gate both scan loops share: checks
+        ``need`` against the reservable pages (head reservation/aging
+        applied), counts a first-time block in ``blocked_on_memory``,
+        and clears a reservation its holder just spent. Returns the new
+        pages_left, or None when the request is blocked — keeping this
+        in one place is what stops the pool gate and the tick gate from
+        drifting."""
+        avail = self._reservable(req, is_head, need, pages_left)
+        if need > avail:
+            if req.rid not in self._blocked_rids:
+                self._blocked_rids.add(req.rid)
+                self.metrics.blocked_on_memory += 1
+            return None
+        if req.rid == self._resv_rid:
+            self._resv_rid, self._resv_pages = None, 0
+        return pages_left - need
+
+    def _reservable(self, req: Request, is_head: bool, need: int,
+                    pages_avail: int) -> int:
+        """Pages ``req`` may draw on. The FIFO head, when page-blocked,
+        accumulates a page reservation that AGES — one page per planning
+        scan it stays blocked — and bypassing requests see ``pages_avail``
+        minus that reservation. Early on, smaller requests still bypass
+        the blocked head (the packing-over-strict-FIFO throughput choice
+        is preserved); as the head waits, freed pages increasingly pool
+        up for it instead of being re-snatched by an endless stream of
+        small requests. The bound from
+        ``test_pop_admissible_bypass_is_bounded_by_slo_expiry`` still
+        holds — the SLO-expiry backstop is unchanged — but with
+        reservation the head typically admits long before it."""
+        if not self.config.head_reservation:
+            return pages_avail
+        if is_head:
+            if self._resv_rid is not None and self._resv_rid != req.rid:
+                # the reserved request is no longer the head — admitted,
+                # expired, or dropped. The reservation is head-scoped:
+                # clear it, or its pages would be withheld from every
+                # later admission forever
+                self._resv_rid, self._resv_pages = None, 0
+            if need <= pages_avail:
+                # head fits: clear any reservation it accrued
+                if self._resv_rid == req.rid:
+                    self._resv_rid, self._resv_pages = None, 0
+                return pages_avail
+            if self._resv_rid != req.rid:
+                self._resv_rid, self._resv_pages = req.rid, 0
+            self._resv_pages = min(need, self._resv_pages + 1)
+            return pages_avail
+        if self._resv_rid is None:
+            return pages_avail
+        return max(0, pages_avail - self._resv_pages)
+
+    # --------------------------------------------------------- feedback
+    def observe(self, res: StepResult, now: float) -> List[Request]:
+        """Fold one tick's ``StepResult`` back: bind admitted slots,
+        record emitted tokens, complete exhausted requests (their slots
+        free at the NEXT tick's plan). Returns the completed requests."""
+        for r in self._staged:
+            slot = res.admitted.get(r.req.rid)
+            if slot is not None:
+                self._resident[slot] = r
+        self._staged = []
+        for slot, tok in res.tokens.items():
+            r = self._resident.get(slot)
+            if r is not None:
+                self.streams[r.req.rid].append(tok)
+        completed: List[Request] = []
+        for slot in res.done:
+            r = self._resident.pop(slot, None)
+            if r is None:
+                continue
+            self._to_free.append(slot)
+            completed.append(r.req)
+            # completed rids never re-admit: reclaim the prompt arrays
+            # (streams stay — they are the tick plane's output surface)
+            self._prompts.pop(r.req.rid, None)
+        if completed and self.queue is not None:
+            self.queue.complete(completed, now)
+        self._reclaim_prompts()
+        return completed
+
+    def _reclaim_prompts(self) -> None:
+        """Drop prompt arrays for rids no longer live anywhere (queued,
+        resident, or staged) — requests SLO-expired inside ``pop_batch``
+        would otherwise pin their token arrays forever. Amortized: only
+        runs when the map has clearly outgrown the live set."""
+        prompts = self._prompts
+        if not prompts:
+            return
+        live_n = (len(self._resident) + len(self._staged)
+                  + (len(self.queue) if self.queue is not None else 0))
+        if len(prompts) <= max(64, 2 * live_n):
+            return
+        live = {r.req.rid for r in self._resident.values()}
+        live.update(r.req.rid for r in self._staged)
+        if self.queue is not None:
+            live.update(self.queue.rids())
+        for rid in [k for k in prompts if k not in live]:
+            del prompts[rid]
+
+    # ---------------------------------------------------- pool admission
+    def select_admissible(self, eng, q, prompt_len: int, max_batch: int,
+                          now: float, gen_len: int,
+                          drop_expired: bool = True
+                          ) -> List[Tuple[Request, int]]:
+        """The single admission gate ``EnginePool.admit`` AND ``topup``
+        share: pop up to ``max_batch`` requests the engine can back — a
+        free slot and pages for each request's reserved horizon (whole
+        prompt + n_tokens budget, or just the prompt under
+        ``PlannerConfig.lazy``). Requests the pool cannot back go
+        straight back to the queue, counted in ``blocked_on_memory``
+        once over their lifetime; a page-blocked FIFO head accrues an
+        aging page reservation that bypassing smaller requests cannot
+        spend (anti-starvation). Returns [(request, token budget)] in
+        queue order."""
+        lazy = self.config.lazy
+        gen_len = max(1, gen_len)
+        room = max(1, eng.slot_len - prompt_len)
+        cap = min(max_batch, eng.free_slots)
+        pages_left = eng.free_pages
+        kept: List[Tuple[Request, int]] = []
+        blocked: List[Request] = []
+        is_head = True
+        # scan deeper than the cap: page-blocked requests must not consume
+        # batch quota, or admissible requests behind them under-fill the
+        # run in exactly the page-constrained regime paging targets.
+        # Blocked requests are re-pushed only AFTER the scan, so the pop
+        # can never retrieve the same request twice.
+        while len(kept) < cap and len(q):
+            got = q.pop_batch(1, now, drop_expired)
+            if not got:
+                break                       # remainder all expired
+            req = got[0]
+            budget = max(1, req.n_tokens if req.n_tokens > 0 else gen_len)
+            if eng.paged:
+                budget = min(budget, room)
+                full = eng.kv_pages_needed(
+                    min(prompt_len + budget, eng.slot_len))
+                if full > eng.total_pages:
+                    # full residency exceeds the whole pool: never
+                    # completable — under lazy reservation it would
+                    # admit and then preempt-requeue-thrash forever.
+                    # Drop loudly instead (same guard as the tick plane)
+                    q.violated += 1
+                    q.dropped += 1
+                    is_head = False
+                    continue
+                horizon = prompt_len + 1 if lazy else prompt_len + budget
+                need = eng.kv_pages_needed(min(horizon, eng.slot_len))
+                left = self._page_gate(req, is_head, need, pages_left)
+                if left is None:
+                    blocked.append(req)
+                    is_head = False
+                    continue
+                pages_left = left
+            kept.append((req, budget))
+            is_head = False
+        for req in blocked:
+            q.push(req)
+        return kept
+
+    def admission_plan(self, batches: Sequence[Any],
+                       kept: Sequence[Tuple[Request, int]]) -> StepPlan:
+        """Wrap a ``select_admissible`` result as a whole-prompt plan
+        (the unchunked admission the pool plane runs)."""
+        plan = StepPlan()
+        for batch, (req, budget) in zip(batches, kept):
+            p = _prompt_tokens(batch)
+            plan.admissions.append(PrefillChunk(
+                rid=req.rid, batch=batch, start=0, length=p, final=True,
+                n_tokens=budget,
+                reserve_tokens=(p + 1) if self.config.lazy else None))
+        return plan
+
+
+# --------------------------------------------------------------------------
+# tick serving loop (EventLoopHooks over the shared core event loop)
+# --------------------------------------------------------------------------
+class TickServer:
+    """Drives one (engine, planner) pair through the shared discrete-event
+    loop (``repro.core.eventloop``): arrivals land in the planner's queue,
+    and each due tick builds one plan, executes it, and observes the
+    result. Virtual time advances ``tick_dt`` per tick; wall time per tick
+    is recorded with the decode tokens it emitted, which is exactly the
+    time-between-tokens series ``bench_decode --chunked-prefill``
+    reports p99 over."""
+
+    def __init__(self, planner: StepPlanner, prompt_fn,
+                 tick_dt: float = 1e-3):
+        self.planner = planner
+        self.prompt_fn = prompt_fn
+        self.tick_dt = tick_dt
+        self.ticks = 0
+        self.dispatches = 0
+        self.peak_resident = 0
+        # (wall seconds, decode tokens emitted) per executed tick
+        self.tick_walls: List[Tuple[float, int]] = []
+        # prefill tokens COMPUTED per executed tick (the deterministic
+        # counterpart of tick_walls: what chunking actually bounds)
+        self.tick_prefill: List[int] = []
+        self._next_tick = 0.0
+
+    # ----------------------------------------------------- EventLoopHooks
+    def deliver(self, req: Request) -> None:
+        self.planner.submit(req, self.prompt_fn(req))
+
+    def next_completion(self) -> float:
+        return self._next_tick if self.planner.busy() else math.inf
+
+    def next_wakeup(self, now: float) -> float:
+        return math.inf
+
+    def advance(self, t: float) -> None:
+        pass
+
+    def fire(self, now: float, epsilon: float = 1e-12) -> int:
+        import time as _time
+        if not self.planner.busy():
+            return 0
+        plan = self.planner.build(now)
+        eng = self.planner.engine
+        pf0 = eng.stats.prefill_tokens
+        t0 = _time.perf_counter()
+        res = eng.execute(plan)
+        wall = _time.perf_counter() - t0
+        self.planner.observe(res, now)
+        self.ticks += 1
+        self.dispatches += res.dispatches
+        self.peak_resident = max(self.peak_resident,
+                                 eng.n_slots - eng.free_slots)
+        self.tick_walls.append((wall, len(res.tokens)))
+        self.tick_prefill.append(eng.stats.prefill_tokens - pf0)
+        self._next_tick = now + self.tick_dt
+        return 1
+
+    def plan(self, now: float) -> None:
+        if self._next_tick <= now and self.planner.busy():
+            self._next_tick = now + self.tick_dt
+
+    def drained(self) -> bool:
+        return not self.planner.busy()
+
+
+def serve_ticks(planner: StepPlanner, requests: Sequence[Request],
+                prompt_fn, *, max_ticks: int = 100_000) -> TickServer:
+    """Convenience driver: serve ``requests`` (arrivals honored in
+    virtual tick time) to completion through the plan API. Returns the
+    ``TickServer`` whose ``planner.streams`` holds every request's
+    emitted tokens and whose ``tick_walls`` holds the TBT series."""
+    from repro.core.eventloop import LoopConfig, run_event_loop
+
+    server = TickServer(planner, prompt_fn)
+
+    class _Listed:
+        """Adapter: materialize_arrivals expects generator-likes."""
+        rate = 0.0
+
+        def __init__(self, reqs):
+            self._reqs = list(reqs)
+
+        def until(self, t_end):
+            out = [r for r in self._reqs if r.arrival < t_end]
+            self._reqs = [r for r in self._reqs if r.arrival >= t_end]
+            return out
+
+    horizon = max((r.arrival for r in requests), default=0.0) + 1e-6
+    out = run_event_loop(
+        LoopConfig(duration=horizon, drain=True, arrival_horizon=horizon,
+                   max_time=math.inf, max_events=max_ticks),
+        [_Listed(requests)], server)
+    server.truncated = out.truncated
+    return server

@@ -50,7 +50,9 @@ import jax.numpy as jnp
 from repro.core.profiles import ModelProfile, build_profile
 from repro.core.simulator import RunRequest
 from repro.serving.engine import InferenceEngine
+from repro.serving.kv_cache import OutOfPages
 from repro.serving.metrics import ModelPoolMetrics, PoolResult
+from repro.serving.plan import PlannerConfig, StepPlanner
 from repro.serving.request import Request, RequestQueue
 
 
@@ -125,15 +127,22 @@ class EnginePool:
     """A pool of slot engines that any ``Policy`` can drive (SchedView)."""
 
     def __init__(self, hosts: Dict[str, ModelHost],
-                 caps: Optional[PoolCaps] = None):
+                 caps: Optional[PoolCaps] = None, lazy_kv: bool = False):
         self.hosts = hosts
         self.profiles: Dict[str, ModelProfile] = {
             n: h.profile for n, h in hosts.items()}
         total = max(p.hw.chips_per_pod for p in self.profiles.values())
         self.sim = caps or PoolCaps(total_chips=total)
+        # lazy KV reservation: admission claims pages for the prompt only
+        # (not the whole prompt+budget horizon) and decode grows
+        # page-by-page; when the pool runs dry mid-run the newest resident
+        # is preempted and requeued (counters in ModelPoolMetrics). The
+        # default keeps the deadlock-free up-front reservation.
+        self.lazy_kv = lazy_kv
         self.queues: Dict[str, RequestQueue] = {}
         self._runs: Dict[int, PoolRun] = {}
         self._metrics: Dict[str, ModelPoolMetrics] = {}
+        self._planners: Dict[str, StepPlanner] = {}
         self._seq = 0
         self._alloc_frac = 0.0
         self._occ_area = 0.0
@@ -156,7 +165,13 @@ class EnginePool:
         self.queues = {n: RequestQueue(n, p.slo)
                        for n, p in self.profiles.items()}
         self._metrics = {n: ModelPoolMetrics() for n in self.profiles}
-        self._blocked_rids = {n: set() for n in self.profiles}
+        # one StepPlanner per hosted model: the single admission gate
+        # (page horizon, SLO expiry, blocked-on-memory accounting, head
+        # reservation/aging) admit AND topup route through
+        self._planners = {
+            n: StepPlanner(config=PlannerConfig(lazy=self.lazy_kv),
+                           metrics=self._metrics[n])
+            for n in self.profiles}
         self._runs.clear()
         self._seq = 0
         self._alloc_frac = 0.0
@@ -180,7 +195,7 @@ class EnginePool:
         deliberately built with fewer pages than one slot maximum (the
         oversubscription knob) warms exactly the batch sizes it can ever
         admit."""
-        from repro.serving.engine import _packed_bucket
+        from repro.serving.engine import _packed_bucket, _pow2_at_least
         for host in self.hosts.values():
             for eng in host.engines():
                 min_pages = eng.pages_needed(host.prompt_len, 1)
@@ -188,10 +203,11 @@ class EnginePool:
                 for k in range(1, eng.n_slots + 1):
                     if eng.paged and k * min_pages > eng.total_pages:
                         break
-                    # executables key on the packed-token bucket, not the
-                    # batch size: k values sharing a bucket compile
-                    # nothing new, so only O(log) of them run
-                    bucket = _packed_bucket(k * host.prompt_len)
+                    # executables key on the (packed-token bucket, segment
+                    # bucket) pair, not the batch size: k values sharing
+                    # both compile nothing new, so only O(log) of them run
+                    bucket = (_packed_bucket(k * host.prompt_len),
+                              _pow2_at_least(k))
                     if bucket in warmed:
                         continue
                     warmed.add(bucket)
@@ -199,6 +215,18 @@ class EnginePool:
                         [host.prompt_batch()] * k, n_tokens=[1] * k)
                     eng.step()
                     for slot in slots:
+                        eng.free(slot)
+                if eng.paged and self.lazy_kv:
+                    # lazy pools also dispatch page growth (block-table
+                    # row updates) while serving — cross a page boundary
+                    # once here so that executable is compiled up front
+                    need = eng.pages_needed(host.prompt_len,
+                                            eng.page_size + 1)
+                    if need <= eng.total_pages:
+                        slot = eng.insert(host.prompt_batch(), n_tokens=1,
+                                          reserve_tokens=host.prompt_len + 1)
+                        eng.grow_slot(
+                            slot, host.prompt_len + eng.page_size + 1)
                         eng.free(slot)
         self.reset()
 
@@ -240,57 +268,21 @@ class EnginePool:
     def _pop_admissible(self, model: str, eng: InferenceEngine,
                         max_batch: int, now: float, gen_len: int,
                         drop_expired: bool) -> List:
-        """Pop up to ``max_batch`` requests the engine can actually back:
-        a free slot AND pages for each request's whole prompt + n_tokens
-        horizon (``Request.n_tokens``; 0 = the controller default,
-        budgets above the slot's page capacity are capped to it, matching
-        the engine). The single admission gate shared by ``admit`` and
-        ``topup`` — KV memory, not slot count, is what it enforces under
-        paging. Requests the pool cannot back go straight back to the
-        queue; each is counted in ``blocked_on_memory`` ONCE over its
-        lifetime (not once per planning cycle it sits blocked).
-        Returns [(request, token budget)], in queue order.
-
-        Smaller requests may bypass a page-blocked larger one — a
-        deliberate packing choice (throughput over strict FIFO). The
-        bypassed request cannot starve unboundedly: it expires at its SLO
-        deadline and is dropped+counted like any other violation. A
-        reservation/aging scheme that holds pages for the FIFO head is
-        the anti-starvation follow-on noted in the ROADMAP."""
-        q = self.queues[model]
-        host = self.hosts[model]
-        m = self._metrics[model]
-        gen_len = max(1, gen_len)
-        room = max(1, eng.slot_len - host.prompt_len)
-        cap = min(max_batch, eng.free_slots)
-        pages_left = eng.free_pages
-        kept: List = []
-        blocked: List[Request] = []
-        # scan deeper than the cap: page-blocked requests must not consume
-        # batch quota, or admissible requests behind them under-fill the
-        # run in exactly the page-constrained regime paging targets.
-        # Blocked requests are re-pushed only AFTER the scan, so the pop
-        # can never retrieve the same request twice.
-        while len(kept) < cap and len(q):
-            got = q.pop_batch(1, now, drop_expired)
-            if not got:
-                break                       # remainder all expired
-            req = got[0]
-            budget = max(1, req.n_tokens if req.n_tokens > 0 else gen_len)
-            if eng.paged:
-                budget = min(budget, room)
-                need = eng.pages_needed(host.prompt_len, budget)
-                if need > pages_left:
-                    blocked.append(req)
-                    if req.rid not in self._blocked_rids[model]:
-                        self._blocked_rids[model].add(req.rid)
-                        m.blocked_on_memory += 1
-                    continue
-                pages_left -= need
-            kept.append((req, budget))
-        for req in blocked:
-            q.push(req)
-        return kept
+        """Pop up to ``max_batch`` requests the engine can actually back —
+        a thin shim over the model's ``StepPlanner.select_admissible``,
+        the single admission gate ``admit`` AND ``topup`` share: a free
+        slot plus pages for each request's reserved horizon (whole prompt
+        + n_tokens budget, or prompt-only under ``lazy_kv``), requests
+        the pool cannot back re-queued and counted in
+        ``blocked_on_memory`` once over their lifetime, and a
+        page-blocked FIFO head accruing an aging page reservation that
+        bypassing smaller requests cannot spend (the ROADMAP
+        anti-starvation follow-on; the SLO-expiry bound on a bypassed
+        request is unchanged and still regression-tested). Returns
+        [(request, token budget)], in queue order."""
+        return self._planners[model].select_admissible(
+            eng, self.queues[model], self.hosts[model].prompt_len,
+            max_batch, now, gen_len, drop_expired)
 
     def admit(self, rr: RunRequest, now: float, gen_len: int,
               drop_expired: bool = True) -> Optional[PoolRun]:
@@ -353,11 +345,14 @@ class EnginePool:
             batch=len(kept), engine=eng, slots={}, remaining={},
             latency=lat, step_cost=lat / gen_max, start=now,
             next_time=now + self.sim.dispatch_gap + lat / gen_max)
-        # the whole admission batch prefills in ONE packed dispatch and
-        # its K/V is scattered straight into each slot's pages
-        slots = eng.insert_many([host.prompt_batch()] * len(kept),
-                                n_tokens=[b for _, b in kept])
-        for (req, budget), slot in zip(kept, slots):
+        # the admission is a StepPlan of whole-prompt first chunks: the
+        # engine executes it as ONE packed prefill dispatch with each
+        # segment's K/V scattered straight into its slot's pages
+        plan = self._planners[rr.model].admission_plan(
+            [host.prompt_batch()] * len(kept), kept)
+        sres = eng.execute(plan)
+        for req, budget in kept:
+            slot = sres.admitted[req.rid]
             run.slots[slot] = req
             run.remaining[slot] = budget
         m = self._metrics[rr.model]
@@ -393,9 +388,11 @@ class EnginePool:
         kept = self._pop_admissible(run.model, eng, refill, now,
                                     gen_len, drop_expired)
         if kept:
-            slots = eng.insert_many([host.prompt_batch()] * len(kept),
-                                    n_tokens=[b for _, b in kept])
-            for (req, budget), slot in zip(kept, slots):
+            plan = self._planners[run.model].admission_plan(
+                [host.prompt_batch()] * len(kept), kept)
+            sres = eng.execute(plan)
+            for req, budget in kept:
+                slot = sres.admitted[req.rid]
                 run.slots[slot] = req
                 run.remaining[slot] = budget
             m = self._metrics[run.model]
@@ -406,13 +403,50 @@ class EnginePool:
             run.latency += extension * run.step_cost
         return len(kept)
 
+    def _preempt_newest(self, run: PoolRun) -> None:
+        """Evict this run's newest resident: its pages free, its request
+        requeues (prompt re-prefills from scratch on re-admission — the
+        vLLM recompute-preemption discipline; greedy decode keeps the
+        restarted stream identical). Newest-first keeps preemption from
+        thrashing older residents under FIFO re-admission."""
+        victim = max(run.slots.items(), key=lambda kv: (kv[1].arrival,
+                                                        kv[0]))[0]
+        req = run.slots.pop(victim)
+        run.remaining.pop(victim, None)
+        run.engine.free(victim)
+        run.freed_early = True           # topup may refill the freed slot
+        self.queues[run.model].push(req)
+        m = self._metrics[run.model]
+        m.preemptions += 1
+        m.requeues += 1
+
     def step_run(self, run: PoolRun, now: float) -> bool:
-        """One REAL decode dispatch for all of this run's slots. The
-        engine's done flags (per-request token budgets) say which slots
-        finished: their requests complete NOW — mid-run, at ragged times —
-        and their pages return to the pool immediately. True when the run
-        finished and its allocation was released."""
-        _, done = run.engine.step()
+        """One REAL decode dispatch for all of this run's slots (executed
+        as a StepPlan, like every other data-plane entry). The engine's
+        done flags (per-request token budgets) say which slots finished:
+        their requests complete NOW — mid-run, at ragged times — and
+        their pages return to the pool immediately. Under ``lazy_kv``
+        the decode first grows each slot's page horizon to cover its
+        next write; an ``OutOfPages`` there preempts the run's newest
+        resident (pages freed, request requeued) and retries. True when
+        the run finished and its allocation was released."""
+        from repro.serving.plan import StepPlan
+        eng = run.engine
+        if self.lazy_kv and eng.paged:
+            while run.remaining:
+                try:
+                    eng.ensure_decode_room(sorted(run.remaining))
+                    break
+                except OutOfPages:
+                    self._preempt_newest(run)
+            if not run.remaining:
+                del self._runs[run.seq]
+                self._alloc_frac -= run.frac
+                if not self._runs:
+                    self._alloc_frac = 0.0
+                return True
+        res = eng.execute(StepPlan(decodes=sorted(run.remaining)))
+        done = res.done
         completed: List[Request] = []
         for slot in done:
             req = run.slots.pop(slot, None)
@@ -537,12 +571,15 @@ def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
                caps: Optional[PoolCaps] = None, warm: bool = True,
                reduced: bool = True, paged: bool = True, page_size: int = 8,
                slots: Optional[Dict[str, int]] = None,
-               pages: Optional[Dict[str, int]] = None) -> EnginePool:
+               pages: Optional[Dict[str, int]] = None,
+               lazy_kv: bool = False) -> EnginePool:
     """Build an EnginePool over reduced real models and (by default) warm
     every standby executable so the measured run compiles nothing.
     ``slots`` / ``pages`` override slot count / usable page count per
     model name (the ROADMAP "per-model tuning" knobs — e.g. give a
-    p50-lagging model more slots without re-sizing every host)."""
+    p50-lagging model more slots without re-sizing every host);
+    ``lazy_kv`` switches admission to prompt-only page reservation with
+    decode-time growth and preempt-and-requeue on ``OutOfPages``."""
     hosts: Dict[str, ModelHost] = {}
     for i, name in enumerate(names):
         host = build_host(
@@ -552,7 +589,7 @@ def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
             request_rate=request_rate, reduced=reduced, paged=paged,
             page_size=page_size, total_pages=(pages or {}).get(name))
         hosts[host.profile.name] = host
-    pool = EnginePool(hosts, caps=caps)
+    pool = EnginePool(hosts, caps=caps, lazy_kv=lazy_kv)
     if warm:
         pool.warmup()
     return pool

@@ -23,6 +23,11 @@ class Request:
     # slot's per-request token budget — mixed values make runs ragged,
     # free slots early, and shrink the pages the request pins.
     n_tokens: int = dataclasses.field(compare=False, default=0)
+    # prompt tokens this request carries. 0 means "caller default" (the
+    # pool plane's uniform host prompt_len); a positive value lets the
+    # tick plane (repro.serving.plan) synthesize per-request prompt
+    # lengths — long prompts are what chunked prefill splits across ticks.
+    prompt_len: int = dataclasses.field(compare=False, default=0)
 
     @property
     def deadline(self) -> float:
@@ -54,6 +59,12 @@ class RequestQueue:
 
     def oldest_deadline(self, default: float = float("inf")) -> float:
         return self._q[0].deadline if self._q else default
+
+    def rids(self) -> set:
+        """Rids currently queued — lets callers holding per-rid side
+        state (the StepPlanner's prompt arrays) reclaim entries whose
+        requests were dropped inside ``pop_batch``."""
+        return {r.rid for r in self._q}
 
     def pop_batch(self, max_batch: int, now: float,
                   drop_expired: bool = True) -> List[Request]:
@@ -116,26 +127,32 @@ class RequestGenerator:
     int for a uniform workload, a ``(lo, hi)`` pair for a mixed-length
     stream (budget drawn uniformly, inclusive, from the same seeded rng as
     the arrival jitter — fully reproducible), or None to leave requests on
-    the scheduler default."""
+    the scheduler default. ``prompt_tokens`` stamps ``prompt_len`` the
+    same way — per-request prompt lengths are what make chunked prefill
+    (``repro.serving.plan``) and packed ragged prefill earn their keep."""
 
     def __init__(self, model: str, rate_per_s: float, slo: float,
-                 seed: int = 0, gen_tokens=None):
+                 seed: int = 0, gen_tokens=None, prompt_tokens=None):
         import numpy as np
         self.model = model
         self.rate = rate_per_s
         self.slo = slo
         self.gen_tokens = gen_tokens
+        self.prompt_tokens = prompt_tokens
         self._rng = np.random.default_rng(seed)
         self._next_id = 0
         self._t = 0.0
 
-    def _draw_tokens(self) -> int:
-        if self.gen_tokens is None:
+    def _draw(self, spec) -> int:
+        if spec is None:
             return 0
-        if isinstance(self.gen_tokens, int):
-            return max(1, self.gen_tokens)
-        lo, hi = self.gen_tokens
+        if isinstance(spec, int):
+            return max(1, spec)
+        lo, hi = spec
         return int(self._rng.integers(max(1, lo), max(1, hi) + 1))
+
+    def _draw_tokens(self) -> int:
+        return self._draw(self.gen_tokens)
 
     def until(self, t_end: float) -> List[Request]:
         """All requests arriving in [current position, t_end)."""
@@ -153,7 +170,8 @@ class RequestGenerator:
             self._t += gap
             out.append(Request(arrival=self._t, rid=self._next_id,
                                model=self.model, slo=self.slo,
-                               n_tokens=self._draw_tokens()))
+                               n_tokens=self._draw_tokens(),
+                               prompt_len=self._draw(self.prompt_tokens)))
             self._next_id += 1
         return out
 

@@ -310,23 +310,26 @@ def test_packed_prefill_compile_count_gate():
     eng = make_engine(cfg, cache_len=32).init_slots(8, paged=True,
                                                     page_size=8)
     rng = np.random.default_rng(0)
-    max_total = max_len = 0
+    max_total = max_len = max_batch = 0
     for _ in range(12):
         n = int(rng.integers(1, 9))
         lens = rng.integers(2, 16, size=n).tolist()
         max_total = max(max_total, sum(lens))
         max_len = max(max_len, max(lens))
+        max_batch = max(max_batch, n)
         slots = eng.insert_many([_prompt(cfg, i, ln)
                                  for i, ln in enumerate(lens)],
                                 n_tokens=[1] * n)
         eng.step()
         for slot in slots:
             eng.free(slot)
-    # executables key on (total-token bucket, row bucket): two token
-    # buckets per octave plus one row bucket per octave of the longest
-    # prompt -> log + log, never one per batch shape
+    # executables key on (total-token bucket, row bucket, segment
+    # bucket): two token buckets per octave, one row bucket per octave
+    # of the longest prompt, one segment bucket per octave of the batch
+    # size -> log + log + log, never one per batch shape
     bound = (2 * int(np.ceil(np.log2(max(2, max_total))))
-             + int(np.ceil(np.log2(max(2, max_len)))) + 2)
+             + int(np.ceil(np.log2(max(2, max_len))))
+             + int(np.ceil(np.log2(max(2, max_batch)))) + 3)
     n_exec = len(eng._packed_prefill_jit)
     assert n_exec <= bound, (n_exec, bound)
     assert eng.jit_cache_sizes()["packed_prefill"] == n_exec

@@ -1,0 +1,393 @@
+"""Declarative step-plan serving API (repro.serving.plan).
+
+The load-bearing claim is PLAN EQUIVALENCE: any interleaving of chunk
+sizes and preemption points yields per-request token streams bit-exact
+with the unchunked, no-preemption path — chunked prefill rides the same
+``decode_step`` the generation loop uses (teacher-forced), and recompute
+preemption restarts a request from scratch, so greedy decode is
+deterministic either way. Asserted per model family (dense / SSM /
+hybrid / encoder-decoder; MoE's expert-capacity dropping is batch-shape
+dependent and excluded, same caveat as packed prefill), plus a
+hypothesis sweep over random chunk budgets and forced preemption points
+with a seeded no-hypothesis sibling, a compile-count gate for the chunk
+executables (O(log max_len), like packed prefill), and the bounded-
+dispatch invariant (<= 3 model dispatches per tick).
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import make_engine
+from repro.serving.plan import (PlannerConfig, PrefillChunk, StepPlan,
+                                StepPlanner, serve_ticks)
+from repro.serving.request import Request, RequestQueue
+
+FAMILIES = {
+    "dense": "olmo-1b",
+    "ssm": "mamba2-1.3b",
+    "hybrid": "zamba2-7b",
+    "encdec": "whisper-small",
+}
+CACHE_LEN = 32
+N_SLOTS = 4
+PAGE = 8
+
+
+def _make_prompt(cfg, rid: int, length: int):
+    rng = np.random.default_rng(1000 + rid)
+    b = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, size=(1, length)).astype(np.int32))}
+    if cfg.has_encoder:
+        from repro.serving import frontend
+        b["enc_embeds"] = frontend.audio_frames(cfg, 1)
+    return b
+
+
+@pytest.fixture(scope="module")
+def engines():
+    """One engine per (family, page budget) for the whole module — jit
+    caches persist across tests, exactly like the pool's standby
+    engines, so the suite compiles each executable once."""
+    built = {}
+
+    def get(family: str, pages=None):
+        key = (family, pages)
+        if key not in built:
+            cfg = get_config(FAMILIES[family]).reduced()
+            eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+                N_SLOTS, paged=True, page_size=PAGE, total_pages=pages)
+            built[key] = (cfg, eng)
+        return built[key]
+
+    return get
+
+
+def _reset(eng):
+    eng.release_all_slots()
+    eng.reset_stats()
+
+
+def _workload(cfg, seed: int, n: int, prompt_range=(3, 20),
+              budget_range=(2, 8)):
+    rng = np.random.default_rng(seed)
+    reqs, prompts = [], {}
+    for i in range(n):
+        p = int(rng.integers(*prompt_range))
+        nt = int(rng.integers(*budget_range))
+        reqs.append(Request(arrival=0.0, rid=i, model=cfg.name, slo=1e9,
+                            n_tokens=nt, prompt_len=p))
+        prompts[i] = _make_prompt(cfg, i, p)
+    return reqs, prompts
+
+
+def _serve(cfg, eng, reqs, prompts, *, chunk_tokens=0, lazy=False,
+           planner_cls=StepPlanner, **planner_kw):
+    _reset(eng)
+    q = RequestQueue(cfg.name, slo=1e9)
+    planner = planner_cls(eng, q, PlannerConfig(
+        chunk_tokens=chunk_tokens, lazy=lazy, gen_len=4), **planner_kw)
+    srv = serve_ticks(planner, reqs, lambda r: prompts[r.rid])
+    assert not srv.truncated
+    return {r: tuple(t) for r, t in planner.streams.items()}, planner, srv
+
+
+# ---------------------------------------------------------------------------
+# plan equivalence: chunked / lazy / preempted == unchunked, per family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_chunked_prefill_streams_bit_exact(engines, family):
+    """Every chunk-size interleaving of the same workload produces the
+    identical per-request token streams as whole-prompt admission."""
+    cfg, eng = engines(family)
+    reqs, prompts = _workload(cfg, seed=7, n=6)
+    base, _, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=0)
+    assert base and all(len(t) for t in base.values())
+    for ct in (3, 8):
+        got, _, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=ct)
+        assert got == base, f"{family} chunk_tokens={ct} diverged"
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_lazy_preemption_streams_bit_exact(engines, family):
+    """Lazy page reservation under real pressure (tight pool → preempt +
+    requeue + re-prefill) still yields the unchunked streams."""
+    cfg, eng_base = engines(family)
+    reqs, prompts = _workload(cfg, seed=3, n=8, budget_range=(10, 20),
+                              prompt_range=(4, 12))
+    base, _, _ = _serve(cfg, eng_base, reqs, prompts, chunk_tokens=0)
+    cfg2, eng_tight = engines(family, pages=6)
+    got, planner, _ = _serve(cfg2, eng_tight, reqs, prompts,
+                             chunk_tokens=4, lazy=True)
+    assert got == base, f"{family} lazy+chunked diverged"
+    if eng_tight.paged:     # pure SSM has no pages to run out of
+        assert planner.metrics.preemptions > 0
+        assert planner.metrics.requeues == planner.metrics.preemptions
+
+
+class _ForcedPreempt(StepPlanner):
+    """Test harness: additionally preempt the newest resident at the
+    given tick indices — arbitrary preemption points, not just
+    page-pressure ones."""
+
+    def __init__(self, *args, preempt_ticks=(), **kw):
+        super().__init__(*args, **kw)
+        self._tick = 0
+        self._preempt_ticks = set(preempt_ticks)
+
+    def build(self, now):
+        plan = super().build(now)
+        if self._tick in self._preempt_ticks and self._resident:
+            v = self._pick_victim(excluded=set(plan.preemptions))
+            if v is not None:
+                self._preempt(v, plan, now)
+        self._tick += 1
+        return plan
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_forced_preemption_points_bit_exact(engines, family):
+    """Preemption at arbitrary ticks — mid-decode AND mid-prefill — is
+    invisible in the final streams (seeded sibling of the hypothesis
+    sweep below, covering every family)."""
+    cfg, eng = engines(family)
+    reqs, prompts = _workload(cfg, seed=11, n=5)
+    base, _, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=0)
+    for ticks in ((2,), (1, 4, 9), (0, 3)):
+        got, planner, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=3,
+                                 planner_cls=_ForcedPreempt,
+                                 preempt_ticks=ticks)
+        assert got == base, f"{family} preempt@{ticks} diverged"
+        assert planner.metrics.preemptions >= 1
+
+
+def test_plan_interleavings_property():
+    """Hypothesis sweep (one cheap family): random workloads × random
+    chunk budgets × random preemption points all reproduce the
+    unchunked, no-preemption streams bit-exactly."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    cfg = get_config(FAMILIES["dense"]).reduced()
+    eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=True, page_size=PAGE)
+    baselines = {}
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 3), chunk=st.integers(1, 12),
+           preempts=st.lists(st.integers(0, 12), max_size=3))
+    def check(seed, chunk, preempts):
+        reqs, prompts = _workload(cfg, seed=seed, n=5)
+        if seed not in baselines:
+            baselines[seed] = _serve(cfg, eng, reqs, prompts,
+                                     chunk_tokens=0)[0]
+        got, _, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=chunk,
+                           planner_cls=_ForcedPreempt,
+                           preempt_ticks=preempts)
+        assert got == baselines[seed]
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# compile discipline + bounded dispatches
+# ---------------------------------------------------------------------------
+def test_chunk_compile_count_gate():
+    """CI gate: chunked serving compiles NOTHING of its own — chunk
+    continuations reuse the packed-prefill executables, whose (token
+    bucket, row bucket) keys stay on the O(log max_len) lattice however
+    many distinct chunk shapes a stream produces (the same discipline as
+    ``test_packed_prefill_compile_count_gate``)."""
+    from repro.serving.engine import _packed_bucket, _pow2_at_least
+
+    cfg = get_config(FAMILIES["dense"]).reduced()
+    eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=True, page_size=PAGE)
+    rng = np.random.default_rng(0)
+    n_chunks = 0
+    for trial in range(10):
+        ct = int(rng.integers(1, 14))
+        reqs, prompts = _workload(cfg, seed=trial, n=3,
+                                  prompt_range=(2, 24), budget_range=(1, 3))
+        _serve(cfg, eng, reqs, prompts, chunk_tokens=ct)
+        n_chunks += eng.stats.chunk_prefills
+    assert n_chunks > 10                    # plenty of distinct shapes ran
+    keys = set(eng._packed_prefill_jit)
+    buckets = {t for t, _, _ in keys}
+    rows = {r for _, r, _ in keys}
+    segs = {s for _, _, s in keys}
+    # every executable key sits on the half-pow2 / pow2 lattice ...
+    assert all(b == _packed_bucket(b) for b in buckets), buckets
+    assert all(r == _pow2_at_least(r) for r in rows), rows
+    assert all(s == _pow2_at_least(s) for s in segs), segs
+    # ... whose density is O(log) along each axis: <= 2 token buckets
+    # and 1 row/segment bucket per octave, never one per chunk shape
+    assert len(buckets) <= 2 * math.ceil(math.log2(max(buckets))) + 2
+    assert len(rows) <= math.ceil(math.log2(max(rows))) + 2
+    assert len(segs) <= math.ceil(math.log2(max(max(segs), 2))) + 2
+    assert eng.jit_cache_sizes()["packed_prefill"] >= len(keys)
+
+
+def test_execute_bounded_dispatches(engines):
+    """One tick = at most one packed prefill + one chunk scan + one
+    decode step, whatever the plan holds (the §6 tick-granularity
+    invariant the plan API encodes)."""
+    cfg, eng = engines("dense")
+    _reset(eng)
+    # resident decoder
+    d0 = eng.insert(_make_prompt(cfg, 90, 4), n_tokens=8)
+    # mid-prefill slot (first chunk of a long prompt)
+    long_b = _make_prompt(cfg, 91, 16)
+    plan0 = StepPlan(admissions=[PrefillChunk(
+        rid=91, batch={"tokens": long_b["tokens"][:, :6]}, start=0,
+        length=6, final=False, n_tokens=4,
+        reserve_tokens=min(16 + 4, eng.slot_len))])
+    r0 = eng.execute(plan0)
+    s1 = r0.admitted[91]
+    before = eng.stats
+    n_pref, n_chunk, n_dec = (before.prefills, before.chunk_prefills,
+                              before.decode_steps)
+    plan = StepPlan(
+        admissions=[
+            PrefillChunk(rid=92, batch=_make_prompt(cfg, 92, 5), start=0,
+                         length=5, final=True, n_tokens=4),
+            # continuation carries the FULL prefix (prefix recompute)
+            PrefillChunk(rid=91,
+                         batch={"tokens": long_b["tokens"][:, :12]},
+                         start=6, length=6, final=False, slot=s1),
+        ],
+        decodes=[d0])
+    res = eng.execute(plan)
+    assert res.dispatches == 3
+    # one packed admission prefill + one packed chunk continuation
+    assert eng.stats.prefills == n_pref + 2
+    assert eng.stats.chunk_prefills == n_chunk + 1
+    assert eng.stats.decode_steps == n_dec + 1       # ONE slot step
+    assert d0 in res.tokens and len(res.tokens) == 1
+    _reset(eng)
+
+
+def test_masked_step_leaves_unstepped_slots_bit_identical(engines):
+    """step(decodes=[a]) must not perturb slot b: b's subsequent stream
+    equals the stream it produces with no interleaved a-steps at all."""
+    cfg, eng = engines("dense")
+    _reset(eng)
+    pa, pb = _make_prompt(cfg, 80, 6), _make_prompt(cfg, 81, 9)
+    sb = eng.insert(pb, n_tokens=5)
+    ref = []
+    for _ in range(5):
+        tok, _ = eng.step([sb])
+        ref.append(int(tok[sb]))
+    _reset(eng)
+    sa = eng.insert(pa, n_tokens=64)
+    sb = eng.insert(pb, n_tokens=5)
+    got = []
+    for i in range(5):
+        tok, _ = eng.step([sa])        # interleaved a-only steps
+        tok, _ = eng.step([sa, sb])
+        got.append(int(tok[sb]))
+    assert got == ref
+    _reset(eng)
+
+
+# ---------------------------------------------------------------------------
+# lazy reservation: strictly more residents at equal page budget
+# ---------------------------------------------------------------------------
+def test_lazy_reservation_admits_more_residents(engines):
+    """At an identical page budget, lazy (prompt-only) reservation keeps
+    strictly more sequences resident than up-front prompt+budget
+    reservation, and completes the same work bit-exactly — preemption
+    absorbs the overcommit."""
+    cfg, _ = engines("dense")
+    pages = 8
+    reqs, prompts = _workload(cfg, seed=5, n=10, prompt_range=(4, 8),
+                              budget_range=(12, 24))
+    results = {}
+    for mode in ("eager", "lazy"):
+        eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+            N_SLOTS, paged=True, page_size=PAGE, total_pages=pages)
+        streams, planner, srv = _serve(cfg, eng, reqs, prompts,
+                                       lazy=(mode == "lazy"))
+        results[mode] = (streams, planner, srv)
+    (s_e, p_e, srv_e), (s_l, p_l, srv_l) = (results["eager"],
+                                            results["lazy"])
+    assert s_l == s_e                       # same tokens out
+    assert srv_l.peak_resident > srv_e.peak_resident
+    assert p_l.metrics.preemptions > 0 and p_l.metrics.requeues > 0
+    assert p_e.metrics.preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# planner admission gate details
+# ---------------------------------------------------------------------------
+def test_impossible_requests_are_dropped_loudly(engines):
+    """A request that can never fit (prompt >= slot_len, or full
+    residency above the whole pool) is dropped and counted, not spun on
+    forever."""
+    cfg, eng = engines("dense")
+    _reset(eng)
+    q = RequestQueue(cfg.name, slo=1e9)
+    planner = StepPlanner(eng, q, PlannerConfig(gen_len=4))
+    big = Request(arrival=0.0, rid=0, model=cfg.name, slo=1e9, n_tokens=4,
+                  prompt_len=CACHE_LEN)
+    ok = Request(arrival=0.0, rid=1, model=cfg.name, slo=1e9, n_tokens=2,
+                 prompt_len=4)
+    srv = serve_ticks(planner, [big, ok], lambda r: _make_prompt(
+        cfg, r.rid, r.prompt_len))
+    assert not srv.truncated
+    assert q.dropped == 1 and q.violated == 1
+    assert len(planner.streams[1]) == 2
+    _reset(eng)
+
+
+def test_head_reservation_clears_when_reserved_head_expires(engines):
+    """Regression: a head reservation is head-scoped. When the reserved
+    request expires (or otherwise stops being the head), its pages must
+    be released to later admissions — a stale reservation would withhold
+    them from every non-head request forever."""
+    cfg, _ = engines("dense")
+    eng = make_engine(cfg, cache_len=32).init_slots(
+        4, paged=True, page_size=PAGE, total_pages=6)
+    planner = StepPlanner(config=PlannerConfig(gen_len=8))
+    q = RequestQueue(cfg.name, slo=1e9)
+    prompt = {"tokens": jnp.ones((1, 8), jnp.int32)}
+    # occupy 4 of 6 pages
+    a1 = eng.insert(prompt, n_tokens=8)
+    a2 = eng.insert(prompt, n_tokens=8)
+    # large head B (4 pages) blocks and ages a reservation over 3 scans
+    big = Request(arrival=0.0, rid=0, model=cfg.name, slo=0.5, n_tokens=24)
+    q.push(big)
+    for now in (0.0, 0.1, 0.2):
+        # blocked head goes straight back to the queue each scan
+        assert planner.select_admissible(eng, q, 8, 4, now, 8) == []
+    assert planner._resv_rid == big.rid and planner._resv_pages >= 3
+    # B expires; a1 frees (4 pages free); two smalls (2 pages each) must
+    # BOTH admit — the dead head's reservation may not shadow them
+    eng.free(a1)
+    q.push(Request(arrival=1.0, rid=1, model=cfg.name, slo=10.0,
+                   n_tokens=8))
+    q.push(Request(arrival=1.1, rid=2, model=cfg.name, slo=10.0,
+                   n_tokens=8))
+    kept = planner.select_admissible(eng, q, 8, 4, now=2.0, gen_len=8)
+    assert [r.rid for r, _ in kept] == [1, 2]
+    assert q.dropped == 1                  # B, at its SLO
+    assert planner._resv_rid is None
+    eng.free(a2)
+
+
+def test_tick_server_honors_arrival_times(engines):
+    """Requests arriving mid-serve are admitted when they arrive — the
+    tick plane rides the shared core event loop's arrival semantics."""
+    cfg, eng = engines("dense")
+    reqs, prompts = _workload(cfg, seed=13, n=4)
+    base, _, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=0)
+    staggered = [Request(arrival=i * 2.5e-3, rid=r.rid, model=r.model,
+                         slo=r.slo, n_tokens=r.n_tokens,
+                         prompt_len=r.prompt_len)
+                 for i, r in enumerate(reqs)]
+    got, _, srv = _serve(cfg, eng, staggered, prompts, chunk_tokens=4)
+    assert not srv.truncated
+    assert got == base

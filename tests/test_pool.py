@@ -171,6 +171,64 @@ def test_pop_admissible_bypass_is_bounded_by_slo_expiry():
     pool.reset()
 
 
+def test_head_reservation_ages_for_page_blocked_fifo_head():
+    """Anti-starvation follow-on to the SLO-expiry bound above: a
+    page-blocked large request at the FIFO head accrues a page
+    reservation that AGES (one page per planning scan), so a steady
+    stream of small requests stops re-snatching every freed page and the
+    large request admits long before its SLO backstop. Compared head-on:
+    the same tight-pool workload served with and without reservation —
+    with it, the large request finishes before the small-request stream
+    is exhausted; without it, every small bypasses first."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.serving.engine import make_engine
+    from repro.serving.plan import PlannerConfig, StepPlanner, serve_ticks
+    from repro.serving.request import RequestQueue
+
+    cfg = get_config("olmo-1b").reduced()
+    name = cfg.name
+
+    def serve(head_reservation: bool):
+        eng = make_engine(cfg, cache_len=32).init_slots(
+            4, paged=True, page_size=8, total_pages=5)
+        q = RequestQueue(name, slo=1e9)
+        completion_order = []
+
+        class Rec(StepPlanner):
+            def observe(self, res, now):
+                for req in super().observe(res, now):
+                    completion_order.append(req.rid)
+                return []
+
+        planner = Rec(eng, q, PlannerConfig(
+            gen_len=4, head_reservation=head_reservation))
+        # rid 0: small head-of-line filler (2 pages); rid 1: LARGE (4
+        # pages — blocked while anything else is resident); rid 2..7:
+        # a steady small stream (2 pages each)
+        reqs = [Request(arrival=0.0, rid=0, model=name, slo=1e9,
+                        n_tokens=8, prompt_len=2),
+                Request(arrival=1e-5, rid=1, model=name, slo=1e9,
+                        n_tokens=30, prompt_len=2)]
+        reqs += [Request(arrival=2e-5 + i * 1e-5, rid=2 + i, model=name,
+                         slo=1e9, n_tokens=8, prompt_len=2)
+                 for i in range(6)]
+        prompts = {r.rid: {"tokens": jnp.ones((1, 2), jnp.int32)}
+                   for r in reqs}
+        srv = serve_ticks(planner, reqs, lambda r: prompts[r.rid])
+        assert not srv.truncated
+        assert sorted(completion_order) == [r.rid for r in reqs]
+        return completion_order.index(1)
+
+    with_resv = serve(True)
+    without = serve(False)
+    # without reservation the large request is bypassed by every small
+    # one; with aging reservation it completes well before the tail
+    assert without == len(range(8)) - 1          # dead last
+    assert with_resv < without
+
+
 # --------------------------------------------------------- SchedView adapter
 def test_pool_implements_schedview(pool):
     assert isinstance(pool, SchedView)
