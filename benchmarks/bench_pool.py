@@ -15,8 +15,14 @@ nothing. Virtual time comes from the profile rooflines at each run's
 granted allocation (deterministic, SLO-meaningful); every decode step is
 still a real dispatch, and wall_s is the host time that took.
 
-CLI: ``PYTHONPATH=src python benchmarks/bench_pool.py [--quick|--full]``;
-also wired into ``benchmarks/run.py`` as ``bench_pool``.
+CLI: ``PYTHONPATH=src python benchmarks/bench_pool.py [--quick|--full]
+[--faults]``; also wired into ``benchmarks/run.py`` as ``bench_pool``.
+``--faults`` appends the chaos pass: a seeded ``FaultInjector`` (attached
+AFTER warmup) drives transient dispatch faults, injected allocator
+failures, and engine resets through a lazy pool serve, asserting the
+ISSUE 6 acceptance bar end to end — the pool drains, pages conserve
+(``check_page_invariants``), per-cause counters surface in the result,
+and recovery compiles NOTHING.
 """
 from __future__ import annotations
 
@@ -32,6 +38,61 @@ POLICIES_FULL = ["temporal", "fixed_batch_mps", "gslice", "triton",
 def run(quick: bool = True):
     """``benchmarks/run.py`` entry point — CSV rows only."""
     rows, _ = run_with_results(quick)
+    return rows
+
+
+def run_faults(quick: bool = True):
+    """The chaos pass (``--faults``): serve a lazy tight-page pool under
+    a seeded fault schedule and assert the fault-tolerance acceptance
+    invariants. Returns CSV rows like every other bench."""
+    from repro.serving.controller import run_policy
+    from repro.serving.faults import FaultInjector
+    from repro.serving.pool import build_pool
+
+    rate = 2000.0
+    duration = 0.05 if quick else 0.25
+    t0 = time.time()
+    pool = build_pool(["olmo-1b"], request_rate=rate, base_slots=4,
+                      cache_len=32, pages={"olmo-1b": 8}, lazy_kv=True)
+    jit_before = pool.jit_cache_sizes()
+    # attached AFTER warmup: the fault schedule must not depend on (or
+    # perturb) compilation order, and recovery must reuse warm executables
+    inj = FaultInjector(seed=17, dispatch_rate=0.05, alloc_rate=0.05,
+                        max_faults=24)
+    engines = [a.engine for h in pool.hosts.values()
+               for a in h.allocations.values()]
+    for eng in engines:
+        eng.attach_faults(inj, max_retries=1)
+    try:
+        # drain mode: the acceptance bar is that a seeded chaos run
+        # DRAINS — every request reaches a terminal state and every page
+        # returns (a duration-cutoff run would leave legitimate
+        # residents holding pages)
+        res = run_policy(pool, "dstack", rate=rate, duration=duration,
+                         gen_len=4, gen_tokens=(4, 20), drain=True)
+    finally:
+        for eng in engines:
+            eng.attach_faults(None, max_retries=2)
+    assert not res.truncated, "chaos run hit a controller backstop"
+    m = res.per_model["olmo-1b"]
+    rows = [("pool/faults/injected", (time.time() - t0) * 1e6,
+             f"dispatch={inj.injected['dispatch']} "
+             f"alloc={inj.injected['alloc']} "
+             f"retries={m.engine_retries} resets={m.engine_resets}"),
+            ("pool/faults/served", 0.0,
+             f"served={m.completed} preempt={m.preemptions} "
+             f"requeue={m.requeues} viol={m.violated}")]
+    # the acceptance bar: chaos actually ran, the pool still served, no
+    # page leaked, and recovery compiled nothing
+    assert inj.total > 0, "fault schedule never fired"
+    assert m.engine_retries > 0, "no transient fault was retried"
+    assert m.completed > 0, "faulted pool served nothing"
+    for eng in engines:
+        assert eng.free_pages == eng.total_pages, "faulted pool leaked pages"
+        eng.check_page_invariants()
+    assert pool.jit_cache_sizes() == jit_before, "fault recovery recompiled"
+    rows.append(("pool/faults/recompilations", 0.0, "0"))
+    rows.append(("pool/faults/page_leaks", 0.0, "0"))
     return rows
 
 
@@ -108,8 +169,14 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized pass: 3 models, 4 policy families")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--faults", action="store_true",
+                    help="append the seeded chaos pass (fault injection "
+                         "through a lazy pool; asserts the ISSUE 6 "
+                         "acceptance invariants)")
     args = ap.parse_args()
     rows, results = run_with_results(quick=not args.full)
+    if args.faults:
+        rows += run_faults(quick=not args.full)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

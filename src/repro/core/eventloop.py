@@ -26,6 +26,10 @@ Loop contract (identical for both planes):
 * backstops: ``max_time`` (virtual) and ``max_events`` (real dispatches)
   stop the loop BEFORE the offending event and flag the outcome
   ``truncated`` so a partial run can never masquerade as a complete one.
+  The ``max_time`` boundary is INCLUSIVE — an event exactly AT max_time
+  fires; only events strictly past it truncate — and truncation advances
+  accumulators to the backstop (like the duration cutoff), so
+  ``out.now`` always equals the window the integrals cover.
 """
 from __future__ import annotations
 
@@ -106,6 +110,15 @@ def run_event_loop(cfg: LoopConfig, generators: Sequence,
         if math.isinf(t):
             break
         if t > cfg.max_time:
+            # backstop boundary is INCLUSIVE: an event exactly AT max_time
+            # fires (this branch only trips for t strictly past it), and
+            # truncation advances accumulators to the backstop — like the
+            # duration cutoff below — so partial integrals cover exactly
+            # the window reported in out.now (regression-tested in
+            # tests/test_paged_kv.py::test_event_loop_max_time_boundary)
+            if cfg.max_time > now:
+                hooks.advance(cfg.max_time)
+                now = cfg.max_time
             out.truncated = True
             break
         if not cfg.drain and t > cfg.duration:

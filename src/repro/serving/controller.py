@@ -61,11 +61,15 @@ class ControllerConfig:
 class Controller:
     def __init__(self, pool: EnginePool, policy,
                  generators: Sequence[RequestGenerator],
-                 cfg: Optional[ControllerConfig] = None):
+                 cfg: Optional[ControllerConfig] = None, on_plan=None):
         self.pool = pool
         self.policy = policy
         self.generators = list(generators)
         self.cfg = cfg or ControllerConfig()
+        # scripting hook f(now, pool), called at every planning point
+        # BEFORE topup/policy — the chaos harness drives pool-plane
+        # cancellations and fault scheduling through it
+        self.on_plan = on_plan
         # conformance hooks (tests/bench): peak allocation, invariant flag,
         # and the cumulative served count at every completion event
         self.max_alloc = 0.0
@@ -129,6 +133,8 @@ class Controller:
         return steps
 
     def plan(self, now: float) -> None:
+        if self.on_plan is not None:
+            self.on_plan(now, self.pool)
         if self.cfg.topup:
             # continuous batching across run boundaries: refill slots that
             # ragged budgets freed early before asking the policy (the run

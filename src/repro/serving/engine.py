@@ -82,6 +82,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.registry import ModelAPI
+from repro.serving.faults import EngineFault, TransientFault
 from repro.serving.kv_cache import NULL_PAGE, OutOfPages, PagedKVCache
 
 
@@ -130,6 +131,11 @@ class EngineStats:
     # lazy page growth: block-table extension dispatches (page
     # boundaries crossed under PlannerConfig.lazy)
     grows: int = 0
+    # fault tolerance (ISSUE 6): transient dispatch faults absorbed by
+    # execute's bounded retry, and full engine resets (retries exhausted
+    # or a stuck tick) that dropped all slot state for recompute-requeue
+    engine_retries: int = 0
+    engine_resets: int = 0
 
 
 class InferenceEngine:
@@ -148,6 +154,13 @@ class InferenceEngine:
         # allocation = switching to a pre-built engine, never recompiling)
         self.alloc_chips = alloc_chips
         self.stats = EngineStats()
+        # fault tolerance (repro.serving.faults): injector armed at the
+        # dispatch site of execute() and inside the page allocator;
+        # transient dispatch faults retry up to retry_limit times with
+        # exponential backoff before escalating to EngineFault
+        self.fault_injector = None
+        self.retry_limit = 2
+        self.retry_backoff_s = 0.0
 
         if mesh is not None:
             from jax.sharding import NamedSharding
@@ -402,6 +415,7 @@ class InferenceEngine:
             usable = total_pages or n_slots * self.max_pages
             self._kv = PagedKVCache(n_slots, page_size, self.max_pages,
                                     num_pages=usable)
+            self._kv.allocator.fault_injector = self.fault_injector
             # +1 physical page: id 0 is the reserved null page
             self._slot_cache = self.api.init_paged_cache(
                 n_slots, usable + 1, page_size, self.max_pages)
@@ -795,41 +809,136 @@ class InferenceEngine:
             self._slot_pos[slot] = ln
         self.stats.chunk_prefills += 1
 
+    # ---------------------------------------------------- fault tolerance
+    def attach_faults(self, injector, max_retries: Optional[int] = None,
+                      backoff_s: Optional[float] = None) -> None:
+        """Arm a ``FaultInjector`` at this engine's two fault sites: the
+        dispatch site of ``execute`` and the page allocator (injected
+        ``OutOfPages`` rides the existing all-or-nothing rollback paths).
+        Attach AFTER warmup so the fault schedule is independent of
+        compilation order. Pass ``injector=None`` to disarm."""
+        self.fault_injector = injector
+        if max_retries is not None:
+            self.retry_limit = int(max_retries)
+        if backoff_s is not None:
+            self.retry_backoff_s = float(backoff_s)
+        if self._kv is not None:
+            self._kv.allocator.fault_injector = injector
+
+    def recover(self) -> int:
+        """Engine reset after an unrecoverable fault (retries exhausted,
+        or a stuck tick whose dispatch was killed mid-flight): slot state
+        on the device must be treated as lost, so every slot is freed —
+        pages return to the pool, positions pin to 0 — and the page-
+        conservation audit runs before serving resumes. Callers
+        (planner/pool) recompute-requeue the evicted residents; recompute
+        means surviving greedy streams replay bit-exactly. Returns how
+        many slots were dropped."""
+        dropped = sum(1 for a in self._slot_active if a)
+        self.release_all_slots()
+        if self.paged:
+            assert self._kv.free_pages == self._kv.allocator.num_pages, \
+                "engine recovery leaked pages"
+        self.check_page_invariants()
+        self.stats.engine_resets += 1
+        return dropped
+
+    def check_page_invariants(self) -> bool:
+        """Host-side page audit for the chaos suite: allocator
+        conservation plus slot-level ownership (vacant slots own no
+        pages, live rows match the allocator). No-op for ring engines."""
+        if not self.paged:
+            return True
+        self._kv.check_invariants()
+        for slot in self._slot_free:
+            assert not self._kv.pages(slot), \
+                f"vacant slot {slot} still owns pages"
+        return True
+
     # ------------------------------------------------- plan execution
     def execute(self, plan) -> "Any":
         """Run one ``StepPlan`` — the single data-plane entry point of
         the declarative serving API (``repro.serving.plan``). Fixed
-        order: frees → preemptions → grows → first chunks (ONE packed
-        prefill) → continuation chunks (ONE packed recompute prefill) →
-        decodes (ONE slot step): at most three model dispatches per
-        tick, all against pre-compiled executables. Returns a
-        ``StepResult``."""
+        order: frees → cancels → preemptions → grows → first chunks (ONE
+        packed prefill) → continuation chunks (ONE packed recompute
+        prefill) → decodes (ONE slot step): at most three model
+        dispatches per tick, all against pre-compiled executables.
+        Returns a ``StepResult``.
+
+        Fault tolerance: with a ``FaultInjector`` attached
+        (``attach_faults``), injected ``TransientFault``s at the dispatch
+        site retry up to ``retry_limit`` times with exponential backoff
+        (``stats.engine_retries``); exhausted retries raise
+        ``EngineFault`` — the control planes' engine-reset signal. The
+        fault fires BEFORE the plan mutates anything, so a retried
+        execute is indistinguishable from a clean one. Injected allocator
+        failures surface in the result instead of raising: a failed
+        admission batch (``admission_failed`` — insert_many rolled back
+        all-or-nothing) or failed grows (``failed_grows`` — those slots
+        are neither chunked nor decoded this tick); the planner requeues
+        the affected requests under the recompute discipline, so their
+        streams are unchanged when they are re-admitted."""
+        attempts = 0
+        while self.fault_injector is not None:
+            try:
+                self.fault_injector.maybe_fault("dispatch")
+                break
+            except TransientFault as e:
+                self.stats.engine_retries += 1
+                attempts += 1
+                if attempts > self.retry_limit:
+                    raise EngineFault(
+                        f"dispatch fault persisted past {self.retry_limit} "
+                        f"retries") from e
+                if self.retry_backoff_s > 0:
+                    import time
+                    time.sleep(self.retry_backoff_s * (2 ** (attempts - 1)))
+        return self._execute_plan(plan)
+
+    def _execute_plan(self, plan) -> "Any":
         import numpy as np
 
         from repro.serving.plan import StepResult
         res = StepResult()
         for slot in plan.frees:
             self.free(slot)
+        for slot in plan.cancels:
+            self.free(slot)
         for slot in plan.preemptions:
             self.free(slot)
+        failed: set = set()
         for slot, upto in plan.grows:
-            self.grow_slot(slot, upto)
+            try:
+                self.grow_slot(slot, upto)
+            except OutOfPages:
+                # injected (or genuinely racy) allocator failure: the slot
+                # is untouched but its next write is unbacked — skip its
+                # chunk/decode this tick and report it for requeue
+                failed.add(slot)
+                res.failed_grows.append(slot)
         first = [c for c in plan.admissions if c.slot is None]
-        cont = [c for c in plan.admissions if c.slot is not None]
+        cont = [c for c in plan.admissions if c.slot is not None
+                and c.slot not in failed]
         if first:
-            slots = self.insert_many(
-                [c.batch for c in first],
-                n_tokens=[c.n_tokens for c in first],
-                reserve_tokens=[c.reserve_tokens for c in first])
-            res.admitted = {c.rid: s for c, s in zip(first, slots)}
-            res.dispatches += 1
+            try:
+                slots = self.insert_many(
+                    [c.batch for c in first],
+                    n_tokens=[c.n_tokens for c in first],
+                    reserve_tokens=[c.reserve_tokens for c in first])
+                res.admitted = {c.rid: s for c, s in zip(first, slots)}
+                res.dispatches += 1
+            except OutOfPages:
+                # all-or-nothing rollback already ran: no slot was touched;
+                # the planner requeues the whole staged batch
+                res.admission_failed = True
         if cont:
             self.chunk_append([(c.slot, c.batch, c.final) for c in cont])
             res.dispatches += 1
-        if plan.decodes:
-            toks, done = self.step(plan.decodes)
+        decodes = [s for s in plan.decodes if s not in failed]
+        if decodes:
+            toks, done = self.step(decodes)
             t = np.asarray(toks)
-            res.tokens = {int(s): int(t[s]) for s in plan.decodes}
+            res.tokens = {int(s): int(t[s]) for s in decodes}
             res.done = list(done)
             res.dispatches += 1
         return res
@@ -912,10 +1021,20 @@ class InferenceEngine:
 
     # --------------------------------------------- pool accounting hooks
     def release_all_slots(self) -> None:
-        """Force-free every slot (pool reset between policy runs)."""
+        """Force-free every slot (pool reset between policy runs), and
+        restore the canonical free-list order for slots AND pages: a
+        freed slot/page re-enters its list in free order, so without the
+        re-sort a reset engine would hand out history-dependent ids —
+        harmless for correctness (streams are slot-id agnostic) but
+        fatal for exact replay (the chaos harness's determinism check
+        replays a seeded fault schedule whose interleaving depends on
+        deterministic tie-breaks over slot ids)."""
         for slot, active in enumerate(self._slot_active):
             if active:
                 self.free(slot)
+        self._slot_free.sort()
+        if self.paged:
+            self._kv.allocator.sort_free()
 
     def reset_stats(self) -> None:
         """Zero the counters WITHOUT touching the jit caches — the pool

@@ -76,6 +76,9 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages, 0, -1))  # pop() -> 1 first
         self._allocated: set = set()
+        # duck-typed hook (repro.serving.faults.FaultInjector): when set,
+        # alloc may raise an injected OutOfPages before touching the pool
+        self.fault_injector = None
 
     @property
     def free_pages(self) -> int:
@@ -92,6 +95,8 @@ class PageAllocator:
         """Pop ``n`` pages, all-or-nothing. Raises OutOfPages when the pool
         cannot cover the request (no partial grants — a half-allocated
         sequence would deadlock against other half-allocated sequences)."""
+        if self.fault_injector is not None:
+            self.fault_injector.maybe_fault("alloc")
         if n > len(self._free):
             raise OutOfPages(
                 f"requested {n} pages, {len(self._free)} free "
@@ -110,6 +115,33 @@ class PageAllocator:
                 raise ValueError(f"page {p} is not allocated")
             self._allocated.remove(p)
             self._free.append(p)
+
+    def sort_free(self) -> None:
+        """Restore the canonical free-list order (descending ids, so
+        ``pop()`` hands out 1 first — the just-built state). Called on
+        engine reset between runs: frees are LIFO, so the free list's
+        order is otherwise a fossil of the previous run's free sequence
+        and a replayed workload would receive different page ids."""
+        self._free.sort(reverse=True)
+
+    def check_invariants(self) -> bool:
+        """Cheap host-side audit of the free list: page conservation, no
+        duplicates, null page never live, every id in range. Raises
+        AssertionError on violation — the chaos suite and hypothesis churn
+        tests call this after every operation and every fault recovery."""
+        free = self._free
+        assert len(free) == len(set(free)), "duplicate page in free list"
+        assert NULL_PAGE not in free, "null page in free list"
+        assert NULL_PAGE not in self._allocated, "null page marked allocated"
+        assert not set(free) & self._allocated, \
+            "page simultaneously free and allocated"
+        assert len(free) + len(self._allocated) == self.num_pages, (
+            f"page conservation violated: {len(free)} free + "
+            f"{len(self._allocated)} allocated != {self.num_pages}")
+        assert all(1 <= p <= self.num_pages
+                   for p in list(free) + list(self._allocated)), \
+            "page id out of range"
+        return True
 
 
 @dataclasses.dataclass
@@ -215,3 +247,23 @@ class PagedKVCache:
     def reset(self) -> None:
         for row in list(self._rows):
             self.free(row)
+
+    def check_invariants(self) -> bool:
+        """Audit row-level ownership on top of the allocator's free-list
+        audit: every live row's page count matches its length, no page is
+        aliased by two rows, and the rows' pages are exactly the
+        allocator's allocated set (no leaks in either direction)."""
+        self.allocator.check_invariants()
+        owned: List[int] = []
+        for row, sp in self._rows.items():
+            assert sp.pages, f"live row {row} owns no pages"
+            assert NULL_PAGE not in sp.pages, f"row {row} owns the null page"
+            assert len(sp.pages) == pages_for(sp.length, self.page_size), (
+                f"row {row}: {len(sp.pages)} pages for {sp.length} tokens")
+            owned.extend(sp.pages)
+        assert len(owned) == len(set(owned)), "page aliased by two rows"
+        assert set(owned) == self.allocator._allocated, (
+            "leak: allocator and row ownership disagree "
+            f"({len(owned)} owned vs {len(self.allocator._allocated)} "
+            "allocated)")
+        return True

@@ -71,6 +71,21 @@ class ModelPoolMetrics:
     # additionally counted dropped/violated like any other
     preemptions: int = 0
     requeues: int = 0
+    # per-cause terminal counters (ISSUE 6). With completed/dropped these
+    # partition every request the plane ever accepted or refused:
+    #   cancelled        — client cancel, queued or resident (no violation)
+    #   deadline_aborted — evicted while resident, past SLO deadline
+    #   shed             — refused at admission (load-shed watermarks)
+    # Mirrored from RequestQueue (the accounting source of truth) at
+    # snapshot/observe time, never incremented here directly.
+    cancelled: int = 0
+    deadline_aborted: int = 0
+    shed: int = 0
+    # fault-tolerance accounting, mirrored from EngineStats: transient
+    # dispatch faults absorbed by retry, and full engine resets (retries
+    # exhausted or stuck tick) that recompute-requeued the residents
+    engine_retries: int = 0
+    engine_resets: int = 0
     runtime: float = 0.0       # virtual busy seconds (Σ run latencies)
     chip_seconds: float = 0.0  # allocation-weighted: Σ chips·latency
     tokens: int = 0
@@ -149,5 +164,12 @@ class PoolResult:
                 + (f" topups={m.topups}" if m.topups else "")
                 + (f" preempt={m.preemptions}/{m.requeues}"
                    if m.preemptions else "")
-                + (f" abandoned={m.abandoned}" if m.abandoned else ""))
+                + (f" abandoned={m.abandoned}" if m.abandoned else "")
+                + (f" cancelled={m.cancelled}" if m.cancelled else "")
+                + (f" aborted={m.deadline_aborted}"
+                   if m.deadline_aborted else "")
+                + (f" shed={m.shed}" if m.shed else "")
+                + (f" retries={m.engine_retries}"
+                   if m.engine_retries else "")
+                + (f" resets={m.engine_resets}" if m.engine_resets else ""))
         return rows

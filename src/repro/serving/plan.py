@@ -47,12 +47,24 @@ chunked serving compiles NOTHING new).
 ``PlannerConfig.lazy`` reserves pages for the tokens a request has
 actually written instead of its whole prompt+budget horizon, growing
 page-by-page as decode proceeds. When the pool runs dry the planner
-preempts the lowest-priority resident (latest arrival — the newest
-request has the least sunk work and, under FIFO re-admission, cannot
-thrash older residents), frees its pages, and requeues the request; on
-re-admission its prompt re-prefills from scratch, so the final token
-stream is unchanged (greedy decode is deterministic). ``preemptions`` /
-``requeues`` are counted in ``ModelPoolMetrics``.
+preempts the lowest-priority resident — by default the one with the
+most SLO slack per unit of sunk recompute work (``preemption_key``;
+``PlannerConfig.victim="newest"`` restores the legacy latest-arrival
+rule) — frees its pages, and requeues the request; on re-admission its
+prompt re-prefills from scratch, so the final token stream is unchanged
+(greedy decode is deterministic). ``preemptions`` / ``requeues`` are
+counted in ``ModelPoolMetrics``.
+
+**The failure half** (ISSUE 6) is plan machinery too: client cancels
+and deadline aborts are ``StepPlan.cancels`` events (pages free like
+any other free, terminal cause accounted per request); overload sheds
+at ``submit`` against ``PlannerConfig`` watermarks instead of queueing
+toward a timeout; and injected/transient runtime faults
+(``repro.serving.faults``) are absorbed by execute-level retry, result-
+level requeue (``failed_grows``/``admission_failed``), or a full
+engine reset (``StepPlanner.recover``) that recompute-requeues every
+resident — the same discipline as preemption, so surviving greedy
+streams stay bit-exact (asserted by ``tests/test_chaos.py``).
 
 ``EnginePool.admit`` and ``EnginePool.topup`` route their shared
 admission logic through ``StepPlanner.select_admissible`` (one gate, one
@@ -66,6 +78,7 @@ import dataclasses
 import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.serving.faults import EngineFault
 from repro.serving.metrics import ModelPoolMetrics
 from repro.serving.request import Request, RequestQueue
 
@@ -101,22 +114,27 @@ class StepPlan:
     """Everything one engine does this tick, decided up front.
 
     Execution order inside ``InferenceEngine.execute`` is fixed —
-    frees → preemptions → grows → admissions (first chunks, one packed
-    prefill) → continuations (one packed recompute prefill) → decodes
-    (one step) — so a planner can project page availability exactly:
-    pages released by frees/preemptions are usable by this same plan's
-    grows/admissions."""
+    frees → cancels → preemptions → grows → admissions (first chunks,
+    one packed prefill) → continuations (one packed recompute prefill)
+    → decodes (one step) — so a planner can project page availability
+    exactly: pages released by frees/cancels/preemptions are usable by
+    this same plan's grows/admissions."""
     admissions: List[PrefillChunk] = dataclasses.field(default_factory=list)
     decodes: List[int] = dataclasses.field(default_factory=list)
     preemptions: List[int] = dataclasses.field(default_factory=list)
     frees: List[int] = dataclasses.field(default_factory=list)
+    # lifecycle Cancel events: slots whose requests terminated this tick
+    # (client cancel or deadline abort) — executed exactly like frees
+    # (pages back to the pool, table row to the null page) but kept
+    # separate so accounting and tests can tell completion from abort
+    cancels: List[int] = dataclasses.field(default_factory=list)
     # lazy page growth: extend slot's page horizon to cover >= tokens
     grows: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
 
     @property
     def empty(self) -> bool:
         return not (self.admissions or self.decodes or self.preemptions
-                    or self.frees or self.grows)
+                    or self.frees or self.cancels or self.grows)
 
 
 @dataclasses.dataclass
@@ -124,11 +142,20 @@ class StepResult:
     """What ``execute`` actually did: sampled tokens per DECODED slot,
     slots whose budgets are now exhausted, rid→slot bindings for this
     plan's first-chunk admissions, and the dispatch count (the bounded-
-    dispatch invariant: <= 3 model dispatches per tick)."""
+    dispatch invariant: <= 3 model dispatches per tick).
+
+    Failure feedback (injected or genuine allocator trouble):
+    ``failed_grows`` lists slots whose lazy page growth failed — they
+    were neither chunked nor decoded this tick and the planner must
+    recompute-requeue them; ``admission_failed`` means the whole
+    first-chunk batch rolled back all-or-nothing (no slot touched) and
+    the staged requests must requeue."""
     tokens: Dict[int, int] = dataclasses.field(default_factory=dict)
     done: List[int] = dataclasses.field(default_factory=list)
     admitted: Dict[int, int] = dataclasses.field(default_factory=dict)
     dispatches: int = 0
+    failed_grows: List[int] = dataclasses.field(default_factory=list)
+    admission_failed: bool = False
 
 
 @dataclasses.dataclass
@@ -146,6 +173,20 @@ class PlannerConfig:
     # up to its need as pages free, and bypassing smaller requests cannot
     # spend reserved pages
     head_reservation: bool = True
+    # deadline aborts: evict residents whose SLO deadline has passed (the
+    # same page-freeing Cancel event a client cancel emits). Off by
+    # default — the legacy planes only police deadlines at the queue
+    # (drop_expired) and at completion (late)
+    deadline_aborts: bool = False
+    # load-shed watermarks (graceful degradation): refuse NEW submissions
+    # when the queue is already this deep / the page pool this full —
+    # fail fast at admission instead of timing out resident. None = never
+    shed_queue_depth: Optional[int] = None
+    shed_page_frac: Optional[float] = None     # in-use fraction, 0..1
+    # OutOfPages victim policy: "slack" scores residents by SLO slack per
+    # unit of sunk recompute work (see preemption_key); "newest" is the
+    # legacy latest-arrival rule
+    victim: str = "slack"
 
 
 @dataclasses.dataclass
@@ -157,6 +198,29 @@ class _Resident:
     done: int                          # prompt tokens prefilled so far
     budget: int                        # decode-token budget
     prefilling: bool                   # True until the final chunk ran
+
+
+def preemption_key(req: Request, sunk_tokens: int, now: float,
+                   mode: str = "slack") -> Tuple:
+    """Victim-ordering key for OutOfPages preemption — HIGHEST wins.
+
+    ``slack`` prefers the resident with the most SLO slack per unit of
+    sunk work: score = (deadline − now) / (1 + tokens already written).
+    A resident with slack to spare and little invested work is the
+    cheapest to recompute and the likeliest to still meet its deadline
+    after re-admission (DARIS-style slack-aware eviction); a nearly-due
+    or deeply-prefilled resident is protected. Infinite/absent SLOs map
+    to a huge finite slack so the ratio still discriminates on sunk
+    work, which also makes ``slack`` degrade to least-sunk-first (≈ the
+    newest resident) on SLO-free workloads. ``newest`` is the legacy
+    latest-arrival rule. Callers append the slot id for a deterministic
+    tie-break."""
+    if mode == "newest":
+        return (0.0, req.arrival)
+    slack = req.deadline - now
+    if not math.isfinite(slack):
+        slack = 1e18
+    return (slack / (1.0 + max(0, int(sunk_tokens))), req.arrival)
 
 
 def _prompt_tokens(batch) -> int:
@@ -213,13 +277,69 @@ class StepPlanner:
         # per-request emitted tokens (tick plane); preemption clears a
         # stream — the restarted request re-emits from scratch
         self.streams: Dict[int, List[int]] = {}
+        # rids cancelled while in flight (resident or staged): the next
+        # build() emits their Cancel event; a cancelled rid caught at a
+        # requeue point (preemption, failed admission, engine reset)
+        # terminates there instead of re-entering the queue
+        self._cancelled: set = set()
+        self._now = 0.0                    # last build() time (victim keys)
 
     # ------------------------------------------------------- tick plane
-    def submit(self, req: Request, batch) -> None:
-        """Enqueue a request with its real prompt (token pytree, B=1)."""
-        self.queue.push(req)
+    def submit(self, req: Request, batch) -> bool:
+        """Enqueue a request with its real prompt (token pytree, B=1).
+        Returns False when the request was load-shed at admission (the
+        ``PlannerConfig`` watermarks — queue depth / page occupancy —
+        are crossed): it terminates immediately with state ``shed``
+        rather than queueing toward a certain timeout."""
         self.streams.setdefault(req.rid, [])
+        if self.should_shed():
+            self.queue.shed_request(req)
+            self.metrics.shed = self.queue.shed
+            return False
+        self.queue.push(req)
         self._prompts[req.rid] = batch
+        return True
+
+    def should_shed(self, queue_len: Optional[int] = None,
+                    page_frac: Optional[float] = None) -> bool:
+        """Backpressure gate: True when either load-shed watermark is
+        crossed. Callers without a bound queue/engine (the pool plane)
+        pass explicit measurements."""
+        cfg = self.config
+        if cfg.shed_queue_depth is not None:
+            if queue_len is None:
+                queue_len = len(self.queue) if self.queue is not None else 0
+            if queue_len >= cfg.shed_queue_depth:
+                return True
+        if cfg.shed_page_frac is not None:
+            if page_frac is None:
+                eng = self.engine
+                if (eng is None or not getattr(eng, "paged", False)
+                        or eng.total_pages <= 0):
+                    page_frac = 0.0
+                else:
+                    page_frac = 1.0 - eng.free_pages / eng.total_pages
+            if page_frac >= cfg.shed_page_frac:
+                return True
+        return False
+
+    def cancel(self, rid: int) -> bool:
+        """Client cancellation (disconnect). A still-queued request is
+        removed immediately; a resident or staged one is marked and the
+        next ``build`` emits its Cancel event — the slot's pages free
+        before that plan grows or admits, and mid-chunked-prefill
+        residents are no special case (their partial pages free the same
+        way). Returns False for unknown or already-terminal rids."""
+        if self.queue is not None and self.queue.cancel(rid) is not None:
+            self._prompts.pop(rid, None)
+            self.metrics.cancelled = self.queue.cancelled
+            return True
+        live = {r.req.rid for r in self._resident.values()}
+        live.update(r.req.rid for r in self._staged)
+        if rid in live:
+            self._cancelled.add(rid)
+            return True
+        return False
 
     def busy(self) -> bool:
         return bool(self._resident or self._staged or self._to_free
@@ -245,30 +365,54 @@ class StepPlanner:
         return self._pages_for(upto) - self._pages_for(max(1, have))
 
     def _pick_victim(self, excluded: set) -> Optional[int]:
-        """Lowest-priority resident = latest arrival (newest request has
-        the least sunk work; FIFO re-admission then cannot leapfrog the
-        older residents it was preempted for). Ties break on slot id so
-        the choice is deterministic."""
-        cands = [(r.req.arrival, slot) for slot, r in self._resident.items()
-                 if slot not in excluded]
+        """Victim for OutOfPages preemption / stall-breaking, by
+        ``PlannerConfig.victim``: ``slack`` (default) scores residents
+        by SLO slack per unit of sunk recompute work — see
+        ``preemption_key`` — so a nearly-due or deeply-prefilled
+        resident is protected; ``newest`` preserves the legacy
+        latest-arrival rule. Ties break on (arrival, slot id) so the
+        choice is deterministic."""
+        eng = self.engine
+        cands = []
+        for slot, r in self._resident.items():
+            if slot in excluded:
+                continue
+            sunk = eng.slot_pos(slot) if eng is not None else r.done
+            cands.append(preemption_key(r.req, sunk, self._now,
+                                        self.config.victim) + (slot,))
         if not cands:
             return None
-        return max(cands)[1]
+        return max(cands)[-1]
 
     def build(self, now: float) -> StepPlan:
         """Emit this tick's plan. Mutates planner bookkeeping under the
         assumption the plan WILL be executed (the tick loop always does:
         build → execute → observe)."""
         eng, q, cfg = self.engine, self.queue, self.config
+        self._now = now
         plan = StepPlan()
         plan.frees = list(self._to_free)
         self._to_free = []
-        freed = set(plan.frees)
-        # page/slot projection: execution frees/preempts before it
-        # grows/admits, so released pages count as available
+
+        # -- phase 0: lifecycle events. Client cancels and (when enabled)
+        # deadline aborts terminate residents via plan.cancels — the same
+        # page-freeing event, whatever phase the victim was in: a
+        # mid-chunked-prefill resident's partial pages free exactly like
+        # a decoder's. Accounting is terminal here (the queue's per-cause
+        # counters); nothing requeues.
+        for slot, r in sorted(self._resident.items()):
+            if r.req.rid in self._cancelled:
+                self._terminate(slot, r, plan, cancelled=True)
+            elif cfg.deadline_aborts and now > r.req.deadline:
+                self._terminate(slot, r, plan, cancelled=False)
+
+        freed = set(plan.frees) | set(plan.cancels)
+        # page/slot projection: execution frees/cancels/preempts before
+        # it grows/admits, so released pages count as available
         pages_avail = eng.free_pages + sum(
-            eng.slot_page_count(s) for s in plan.frees)
-        slots_avail = eng.free_slots + len(plan.frees)
+            eng.slot_page_count(s) for s in plan.frees) + sum(
+            eng.slot_page_count(s) for s in plan.cancels)
+        slots_avail = eng.free_slots + len(plan.frees) + len(plan.cancels)
         # decode set snapshot BEFORE this tick's final chunks flip flags
         decodes = [s for s, r in sorted(self._resident.items())
                    if not r.prefilling and s not in freed]
@@ -395,11 +539,67 @@ class StepPlanner:
                      if s == slot)
         plan.grows = [(s, u) for s, u in plan.grows if s != slot]
         plan.admissions = [c for c in plan.admissions if c.slot != slot]
-        self.queue.push(r.req)
-        self.streams[r.req.rid] = []
         self.metrics.preemptions += 1
-        self.metrics.requeues += 1
+        self._requeue(r.req)
         return credit
+
+    def _terminate(self, slot: int, r: _Resident, plan: StepPlan, *,
+                   cancelled: bool) -> None:
+        """Emit a Cancel event for a resident and account its terminal
+        cause (client ``cancelled`` or ``deadline_aborted``)."""
+        plan.cancels.append(slot)
+        self._resident.pop(slot)
+        rid = r.req.rid
+        self._cancelled.discard(rid)
+        self._prompts.pop(rid, None)
+        if self.queue is not None:
+            if cancelled:
+                self.queue.mark_cancelled(r.req)
+            else:
+                self.queue.abort_deadline(r.req)
+
+    def _requeue(self, req: Request) -> None:
+        """Recompute-requeue: the stream restarts from scratch on
+        re-admission (greedy decode makes the replay bit-exact). A rid
+        cancelled while it was in flight terminates here instead of
+        re-entering the queue — cancellation wins over recovery."""
+        rid = req.rid
+        self.streams[rid] = []
+        if rid in self._cancelled:
+            self._cancelled.discard(rid)
+            self._prompts.pop(rid, None)
+            if self.queue is not None:
+                self.queue.mark_cancelled(req)
+            return
+        if self.queue is not None:
+            self.queue.push(req)
+        self.metrics.requeues += 1
+
+    def recover(self, now: float) -> int:
+        """Planner half of the engine-reset path (retries exhausted or a
+        stuck tick): device slot state is unknown, so drop ALL of it and
+        rebuild by recompute. Every resident and staged request requeues
+        for a from-scratch re-prefill — the preemption discipline, so
+        surviving greedy streams are unchanged — while cancelled rids
+        terminate instead; the engine frees every slot and the page-
+        conservation audit runs before serving resumes. Returns how many
+        requests were requeued or terminated."""
+        del now
+        n = 0
+        for slot, r in sorted(self._resident.items()):
+            self._requeue(r.req)
+            n += 1
+        self._resident.clear()
+        for r in self._staged:
+            self._requeue(r.req)
+            n += 1
+        self._staged = []
+        # pending frees are for slots already popped from _resident; the
+        # engine-wide release below covers them
+        self._to_free = []
+        if self.engine is not None:
+            self.engine.recover()
+        return n
 
     def _scan_queue(self, eng, q, now, *, max_batch, pages_avail,
                     budget_left) -> List[Tuple]:
@@ -516,11 +716,27 @@ class StepPlanner:
     def observe(self, res: StepResult, now: float) -> List[Request]:
         """Fold one tick's ``StepResult`` back: bind admitted slots,
         record emitted tokens, complete exhausted requests (their slots
-        free at the NEXT tick's plan). Returns the completed requests."""
+        free at the NEXT tick's plan). Returns the completed requests.
+
+        Failure feedback: slots whose lazy grow failed
+        (``failed_grows``) recompute-requeue — their slot frees at the
+        next tick's plan; a failed admission batch
+        (``admission_failed``, all-or-nothing rollback) requeues every
+        staged request. Neither loses a request — previously a staged
+        rid missing from ``admitted`` silently vanished."""
+        for slot in res.failed_grows:
+            r = self._resident.pop(slot, None)
+            if r is None:
+                continue
+            self._to_free.append(slot)
+            self.metrics.preemptions += 1
+            self._requeue(r.req)
         for r in self._staged:
             slot = res.admitted.get(r.req.rid)
             if slot is not None:
                 self._resident[slot] = r
+            else:
+                self._requeue(r.req)
         self._staged = []
         for slot, tok in res.tokens.items():
             r = self._resident.get(slot)
@@ -538,6 +754,13 @@ class StepPlanner:
             self._prompts.pop(r.req.rid, None)
         if completed and self.queue is not None:
             self.queue.complete(completed, now)
+        if self.queue is not None:
+            # the queue's per-cause counters are the accounting source of
+            # truth; the metrics mirror them for PoolResult surfacing
+            m = self.metrics
+            m.cancelled = self.queue.cancelled
+            m.deadline_aborted = self.queue.deadline_aborted
+            m.shed = self.queue.shed
         self._reclaim_prompts()
         return completed
 
@@ -645,16 +868,38 @@ class TickServer:
     result. Virtual time advances ``tick_dt`` per tick; wall time per tick
     is recorded with the decode tokens it emitted, which is exactly the
     time-between-tokens series ``bench_decode --chunked-prefill``
-    reports p99 over."""
+    reports p99 over.
+
+    Fault handling: an attached ``FaultInjector`` (``faults``) can mark a
+    tick stuck — the dispatch "hung" and the watchdog killed it — and
+    ``execute`` can escalate persistent transient faults to
+    ``EngineFault``; both run the same recovery: engine reset +
+    recompute-requeue of every resident (``recoveries``/``stuck_ticks``
+    count them). ``on_tick`` is a scripting hook ``f(server, now)``
+    called before each tick's plan — the chaos suite drives cancellations
+    through it. ``stall_limit`` arms a no-progress watchdog: that many
+    consecutive ticks with an empty result force a recovery rather than
+    spinning forever."""
 
     def __init__(self, planner: StepPlanner, prompt_fn,
-                 tick_dt: float = 1e-3):
+                 tick_dt: float = 1e-3, faults=None, on_tick=None,
+                 stall_limit: Optional[int] = None):
         self.planner = planner
         self.prompt_fn = prompt_fn
         self.tick_dt = tick_dt
+        self.faults = faults
+        self.on_tick = on_tick
+        self.stall_limit = stall_limit
         self.ticks = 0
         self.dispatches = 0
         self.peak_resident = 0
+        self.stuck_ticks = 0
+        self.recoveries = 0            # engine resets (stuck + EngineFault)
+        self._no_progress = 0
+        # engines persist across servers (warm executables); report fault
+        # stats as deltas from this serve's start
+        self._retries0 = planner.engine.stats.engine_retries
+        self._resets0 = planner.engine.stats.engine_resets
         # (wall seconds, decode tokens emitted) per executed tick
         self.tick_walls: List[Tuple[float, int]] = []
         # prefill tokens COMPUTED per executed tick (the deterministic
@@ -675,15 +920,44 @@ class TickServer:
     def advance(self, t: float) -> None:
         pass
 
+    def _mirror_fault_stats(self) -> None:
+        stats = self.planner.engine.stats
+        m = self.planner.metrics
+        m.engine_retries = stats.engine_retries - self._retries0
+        m.engine_resets = stats.engine_resets - self._resets0
+
+    def _recover(self, now: float) -> None:
+        self.recoveries += 1
+        self.planner.recover(now)
+        self._mirror_fault_stats()
+
     def fire(self, now: float, epsilon: float = 1e-12) -> int:
         import time as _time
         if not self.planner.busy():
             return 0
+        # the tick always reschedules, whatever happens below — a faulted
+        # tick that forgot to advance _next_tick would spin the loop at
+        # one instant until the max_events backstop
+        self._next_tick = now + self.tick_dt
+        if self.on_tick is not None:
+            self.on_tick(self, now)
         plan = self.planner.build(now)
         eng = self.planner.engine
+        if self.faults is not None and self.faults.stuck():
+            # watchdog-killed tick: the plan's bookkeeping was already
+            # mutated, but recovery drops ALL in-flight state (residents
+            # requeue, engine releases every slot), so the half-built
+            # tick leaves no trace
+            self.stuck_ticks += 1
+            self._recover(now)
+            return 1
         pf0 = eng.stats.prefill_tokens
         t0 = _time.perf_counter()
-        res = eng.execute(plan)
+        try:
+            res = eng.execute(plan)
+        except EngineFault:
+            self._recover(now)
+            return 1
         wall = _time.perf_counter() - t0
         self.planner.observe(res, now)
         self.ticks += 1
@@ -692,7 +966,20 @@ class TickServer:
                                  eng.n_slots - eng.free_slots)
         self.tick_walls.append((wall, len(res.tokens)))
         self.tick_prefill.append(eng.stats.prefill_tokens - pf0)
-        self._next_tick = now + self.tick_dt
+        self._mirror_fault_stats()
+        progress = bool(res.tokens or res.done or res.admitted
+                        or res.failed_grows or plan.admissions
+                        or plan.frees or plan.cancels or plan.preemptions)
+        if progress:
+            self._no_progress = 0
+        elif self.stall_limit is not None:
+            self._no_progress += 1
+            if self._no_progress >= self.stall_limit:
+                # the loop is live but the plane is wedged (should be
+                # impossible — the planner's stall-breaker preempts
+                # first); reset rather than spin forever
+                self._recover(now)
+                self._no_progress = 0
         return 1
 
     def plan(self, now: float) -> None:
@@ -704,14 +991,19 @@ class TickServer:
 
 
 def serve_ticks(planner: StepPlanner, requests: Sequence[Request],
-                prompt_fn, *, max_ticks: int = 100_000) -> TickServer:
+                prompt_fn, *, max_ticks: int = 100_000, faults=None,
+                on_tick=None, stall_limit: Optional[int] = None
+                ) -> TickServer:
     """Convenience driver: serve ``requests`` (arrivals honored in
     virtual tick time) to completion through the plan API. Returns the
     ``TickServer`` whose ``planner.streams`` holds every request's
-    emitted tokens and whose ``tick_walls`` holds the TBT series."""
+    emitted tokens and whose ``tick_walls`` holds the TBT series.
+    ``faults``/``on_tick``/``stall_limit`` pass through to the server —
+    the chaos harness's entry point."""
     from repro.core.eventloop import LoopConfig, run_event_loop
 
-    server = TickServer(planner, prompt_fn)
+    server = TickServer(planner, prompt_fn, faults=faults, on_tick=on_tick,
+                        stall_limit=stall_limit)
 
     class _Listed:
         """Adapter: materialize_arrivals expects generator-likes."""

@@ -50,9 +50,10 @@ import jax.numpy as jnp
 from repro.core.profiles import ModelProfile, build_profile
 from repro.core.simulator import RunRequest
 from repro.serving.engine import InferenceEngine
+from repro.serving.faults import EngineFault
 from repro.serving.kv_cache import OutOfPages
 from repro.serving.metrics import ModelPoolMetrics, PoolResult
-from repro.serving.plan import PlannerConfig, StepPlanner
+from repro.serving.plan import (PlannerConfig, StepPlanner, preemption_key)
 from repro.serving.request import Request, RequestQueue
 
 
@@ -127,7 +128,8 @@ class EnginePool:
     """A pool of slot engines that any ``Policy`` can drive (SchedView)."""
 
     def __init__(self, hosts: Dict[str, ModelHost],
-                 caps: Optional[PoolCaps] = None, lazy_kv: bool = False):
+                 caps: Optional[PoolCaps] = None, lazy_kv: bool = False,
+                 planner_config: Optional[PlannerConfig] = None):
         self.hosts = hosts
         self.profiles: Dict[str, ModelProfile] = {
             n: h.profile for n, h in hosts.items()}
@@ -135,10 +137,14 @@ class EnginePool:
         self.sim = caps or PoolCaps(total_chips=total)
         # lazy KV reservation: admission claims pages for the prompt only
         # (not the whole prompt+budget horizon) and decode grows
-        # page-by-page; when the pool runs dry mid-run the newest resident
-        # is preempted and requeued (counters in ModelPoolMetrics). The
-        # default keeps the deadlock-free up-front reservation.
+        # page-by-page; when the pool runs dry mid-run a resident chosen
+        # by the slack-aware victim rule is preempted and requeued
+        # (counters in ModelPoolMetrics). The default keeps the
+        # deadlock-free up-front reservation.
         self.lazy_kv = lazy_kv
+        # base PlannerConfig for every per-model planner (load-shed
+        # watermarks, victim rule, ...); `lazy` is overridden by lazy_kv
+        self._planner_config = planner_config or PlannerConfig()
         self.queues: Dict[str, RequestQueue] = {}
         self._runs: Dict[int, PoolRun] = {}
         self._metrics: Dict[str, ModelPoolMetrics] = {}
@@ -169,8 +175,9 @@ class EnginePool:
         # (page horizon, SLO expiry, blocked-on-memory accounting, head
         # reservation/aging) admit AND topup route through
         self._planners = {
-            n: StepPlanner(config=PlannerConfig(lazy=self.lazy_kv),
-                           metrics=self._metrics[n])
+            n: StepPlanner(config=dataclasses.replace(
+                self._planner_config, lazy=self.lazy_kv),
+                metrics=self._metrics[n])
             for n in self.profiles}
         self._runs.clear()
         self._seq = 0
@@ -240,7 +247,42 @@ class EnginePool:
 
     # ----------------------------------------------------------- serving
     def push(self, req: Request) -> None:
-        self.queues[req.model].push(req)
+        """Accept one arrival — or shed it (terminal, fail fast) when the
+        model's load-shed watermarks are crossed: queue depth against
+        ``shed_queue_depth``, pool-wide page occupancy against
+        ``shed_page_frac`` (both None by default — no shedding)."""
+        q = self.queues[req.model]
+        planner = self._planners[req.model]
+        used, total = self.page_usage()
+        frac = used / total if total else 0.0
+        if planner.should_shed(queue_len=len(q), page_frac=frac):
+            q.shed_request(req)
+            return
+        q.push(req)
+
+    def cancel(self, model: str, rid: int, now: float = 0.0) -> bool:
+        """Client cancellation at the pool plane: a queued request is
+        removed immediately; a resident one frees its slot and pages NOW
+        (the Cancel event) and its run continues with the remaining
+        slots. Returns False for unknown/terminal rids."""
+        del now
+        q = self.queues.get(model)
+        if q is None:
+            return False
+        if q.cancel(rid) is not None:
+            return True
+        for run in self._runs.values():
+            if run.model != model:
+                continue
+            for slot, req in list(run.slots.items()):
+                if req.rid == rid:
+                    run.slots.pop(slot)
+                    run.remaining.pop(slot, None)
+                    run.engine.free(slot)
+                    run.freed_early = True    # topup may refill the slot
+                    q.mark_cancelled(req)
+                    return True
+        return False
 
     def page_usage(self) -> tuple:
         """(pages in use, servable pages) — the KV-memory analogue of
@@ -350,7 +392,17 @@ class EnginePool:
         # segment's K/V scattered straight into its slot's pages
         plan = self._planners[rr.model].admission_plan(
             [host.prompt_batch()] * len(kept), kept)
-        sres = eng.execute(plan)
+        try:
+            sres = eng.execute(plan)
+        except EngineFault:
+            self._engine_reset(rr.model, eng, kept)
+            return None
+        if sres.admission_failed:
+            # transient/injected allocator failure: insert_many rolled
+            # back all-or-nothing — requeue and let a later plan retry
+            for req, _ in kept:
+                q.push(req)
+            return None
         for req, budget in kept:
             slot = sres.admitted[req.rid]
             run.slots[slot] = req
@@ -390,7 +442,15 @@ class EnginePool:
         if kept:
             plan = self._planners[run.model].admission_plan(
                 [host.prompt_batch()] * len(kept), kept)
-            sres = eng.execute(plan)
+            try:
+                sres = eng.execute(plan)
+            except EngineFault:
+                self._engine_reset(run.model, eng, kept)
+                return 0
+            if sres.admission_failed:
+                for req, _ in kept:
+                    self.queues[run.model].push(req)
+                return 0
             for req, budget in kept:
                 slot = sres.admitted[req.rid]
                 run.slots[slot] = req
@@ -403,14 +463,21 @@ class EnginePool:
             run.latency += extension * run.step_cost
         return len(kept)
 
-    def _preempt_newest(self, run: PoolRun) -> None:
-        """Evict this run's newest resident: its pages free, its request
+    def _preempt_victim(self, run: PoolRun, now: float) -> None:
+        """Evict one of this run's residents: its pages free, its request
         requeues (prompt re-prefills from scratch on re-admission — the
         vLLM recompute-preemption discipline; greedy decode keeps the
-        restarted stream identical). Newest-first keeps preemption from
-        thrashing older residents under FIFO re-admission."""
-        victim = max(run.slots.items(), key=lambda kv: (kv[1].arrival,
-                                                        kv[0]))[0]
+        restarted stream identical). The victim is chosen by the shared
+        ``preemption_key`` — most SLO slack per unit of sunk recompute
+        work (``PlannerConfig.victim="newest"`` restores the legacy
+        latest-arrival rule), the same rule the tick plane's
+        ``StepPlanner._pick_victim`` applies."""
+        eng = run.engine
+        mode = self._planner_config.victim
+        victim = max(
+            run.slots.items(),
+            key=lambda kv: preemption_key(kv[1], eng.slot_pos(kv[0]), now,
+                                          mode) + (kv[0],))[0]
         req = run.slots.pop(victim)
         run.remaining.pop(victim, None)
         run.engine.free(victim)
@@ -420,6 +487,31 @@ class EnginePool:
         m.preemptions += 1
         m.requeues += 1
 
+    def _engine_reset(self, model: str, eng: InferenceEngine,
+                      kept=None) -> None:
+        """Pool half of the engine-reset path (``EngineFault``: retries
+        exhausted). Device slot state is unknown, so every request that
+        was in flight on the engine — the batch being admitted (``kept``)
+        and any resident run — recompute-requeues, the run's allocation
+        releases, and the engine resets (all slots freed, page-
+        conservation audit). Stale controller heap entries for dropped
+        runs are ignored by ``Controller.fire`` (missing seq)."""
+        q = self.queues[model]
+        m = self._metrics[model]
+        for req, _ in kept or []:
+            q.push(req)
+            m.requeues += 1
+        for seq, run in list(self._runs.items()):
+            if run.engine is eng:
+                for req in run.slots.values():
+                    q.push(req)
+                    m.requeues += 1
+                del self._runs[seq]
+                self._alloc_frac -= run.frac
+        if not self._runs:
+            self._alloc_frac = 0.0
+        eng.recover()
+
     def step_run(self, run: PoolRun, now: float) -> bool:
         """One REAL decode dispatch for all of this run's slots (executed
         as a StepPlan, like every other data-plane entry). The engine's
@@ -427,9 +519,12 @@ class EnginePool:
         their requests complete NOW — mid-run, at ragged times — and
         their pages return to the pool immediately. Under ``lazy_kv``
         the decode first grows each slot's page horizon to cover its
-        next write; an ``OutOfPages`` there preempts the run's newest
-        resident (pages freed, request requeued) and retries. True when
-        the run finished and its allocation was released."""
+        next write; an ``OutOfPages`` there preempts the slack-aware
+        victim (pages freed, request requeued) and retries. An
+        ``EngineFault`` from the dispatch (transient-fault retries
+        exhausted) resets the engine: the whole run recompute-requeues
+        and the allocation releases. True when the run finished and its
+        allocation was released."""
         from repro.serving.plan import StepPlan
         eng = run.engine
         if self.lazy_kv and eng.paged:
@@ -438,14 +533,18 @@ class EnginePool:
                     eng.ensure_decode_room(sorted(run.remaining))
                     break
                 except OutOfPages:
-                    self._preempt_newest(run)
+                    self._preempt_victim(run, now)
             if not run.remaining:
                 del self._runs[run.seq]
                 self._alloc_frac -= run.frac
                 if not self._runs:
                     self._alloc_frac = 0.0
                 return True
-        res = eng.execute(StepPlan(decodes=sorted(run.remaining)))
+        try:
+            res = eng.execute(StepPlan(decodes=sorted(run.remaining)))
+        except EngineFault:
+            self._engine_reset(run.model, eng)
+            return True
         done = res.done
         completed: List[Request] = []
         for slot in done:
@@ -490,6 +589,13 @@ class EnginePool:
             m.dropped = q.dropped
             m.late = q.late
             m.abandoned = in_flight[n]
+            m.cancelled = q.cancelled
+            m.deadline_aborted = q.deadline_aborted
+            m.shed = q.shed
+            m.engine_retries = sum(e.stats.engine_retries
+                                   for e in self.hosts[n].engines())
+            m.engine_resets = sum(e.stats.engine_resets
+                                  for e in self.hosts[n].engines())
             m.latencies = list(q.latencies)
             per[n] = m
         duration = duration or 1e-9
@@ -572,14 +678,18 @@ def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
                reduced: bool = True, paged: bool = True, page_size: int = 8,
                slots: Optional[Dict[str, int]] = None,
                pages: Optional[Dict[str, int]] = None,
-               lazy_kv: bool = False) -> EnginePool:
+               lazy_kv: bool = False,
+               planner_config: Optional[PlannerConfig] = None) -> EnginePool:
     """Build an EnginePool over reduced real models and (by default) warm
     every standby executable so the measured run compiles nothing.
     ``slots`` / ``pages`` override slot count / usable page count per
     model name (the ROADMAP "per-model tuning" knobs — e.g. give a
     p50-lagging model more slots without re-sizing every host);
     ``lazy_kv`` switches admission to prompt-only page reservation with
-    decode-time growth and preempt-and-requeue on ``OutOfPages``."""
+    decode-time growth and preempt-and-requeue on ``OutOfPages``;
+    ``planner_config`` seeds every per-model planner (load-shed
+    watermarks, victim rule — its ``lazy`` field is overridden by
+    ``lazy_kv``)."""
     hosts: Dict[str, ModelHost] = {}
     for i, name in enumerate(names):
         host = build_host(
@@ -589,7 +699,8 @@ def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
             request_rate=request_rate, reduced=reduced, paged=paged,
             page_size=page_size, total_pages=(pages or {}).get(name))
         hosts[host.profile.name] = host
-    pool = EnginePool(hosts, caps=caps, lazy_kv=lazy_kv)
+    pool = EnginePool(hosts, caps=caps, lazy_kv=lazy_kv,
+                      planner_config=planner_config)
     if warm:
         pool.warmup()
     return pool

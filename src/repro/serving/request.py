@@ -28,6 +28,13 @@ class Request:
     # tick plane (repro.serving.plan) synthesize per-request prompt
     # lengths — long prompts are what chunked prefill splits across ticks.
     prompt_len: int = dataclasses.field(compare=False, default=0)
+    # lifecycle terminal cause:
+    #   pending -> completed | cancelled | deadline_aborted | shed
+    # "pending" covers queued/resident/requeued — a request has no
+    # intermediate persisted state because preemption and engine resets
+    # recompute from scratch. The queue's per-cause counters (not this
+    # field) are the accounting source of truth; state is introspection.
+    state: str = dataclasses.field(compare=False, default="pending")
 
     @property
     def deadline(self) -> float:
@@ -43,9 +50,15 @@ class RequestQueue:
         self.track_latency = track_latency
         self._q: List[Request] = []
         self.completed = 0
-        self.violated = 0      # expired-at-pop (dropped) + late-but-served
+        self.violated = 0      # dropped + late + aborted + shed
         self.dropped = 0       # expired before ever being scheduled
         self.late = 0          # served, but finished past the deadline
+        # per-cause terminal counters (ISSUE 6): with `completed` and
+        # `dropped` these partition every request that ever entered the
+        # serving plane — the chaos suite asserts they sum to offered load
+        self.cancelled = 0         # client cancel (not an SLO violation)
+        self.deadline_aborted = 0  # evicted while resident, past deadline
+        self.shed = 0              # refused at admission (overload)
         # arrival -> completion latency of every SERVED request — feeds
         # p50/p99 reporting (paper §7 tables). O(completed) memory, so the
         # analytic simulator (which never reads it) opts out.
@@ -73,11 +86,49 @@ class RequestQueue:
         while self._q and len(batch) < max_batch:
             req = heapq.heappop(self._q)
             if drop_expired and req.deadline < now:
+                req.state = "deadline_aborted"
                 self.dropped += 1
                 self.violated += 1
                 continue
             batch.append(req)
         return batch
+
+    # ------------------------------------------- lifecycle terminal causes
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Remove a still-QUEUED request by rid (client disconnect before
+        admission). Returns the request, or None if the rid is not queued
+        — resident requests are cancelled through the planner/pool, which
+        must also free their pages."""
+        for i, r in enumerate(self._q):
+            if r.rid == rid:
+                last = self._q.pop()
+                if i < len(self._q):
+                    self._q[i] = last
+                    heapq.heapify(self._q)
+                self.mark_cancelled(r)
+                return r
+        return None
+
+    def mark_cancelled(self, req: Request) -> None:
+        """Terminal accounting for a client cancel. Not an SLO violation:
+        the client walked away, the system didn't fail it."""
+        req.state = "cancelled"
+        self.cancelled += 1
+
+    def abort_deadline(self, req: Request) -> None:
+        """Terminal accounting for a resident evicted past its deadline —
+        an SLO violation (the system held it too long)."""
+        req.state = "deadline_aborted"
+        self.deadline_aborted += 1
+        self.violated += 1
+
+    def shed_request(self, req: Request) -> None:
+        """Terminal accounting for a request refused at admission under
+        overload — counted as a violation (the system couldn't serve it)
+        but cheap: it failed fast instead of timing out resident."""
+        req.state = "shed"
+        self.shed += 1
+        self.violated += 1
 
     def complete(self, batch: List[Request], finish_time: float) -> None:
         """Record served requests: completion latency (arrival→complete)
@@ -85,6 +136,7 @@ class RequestQueue:
         serving a request past its deadline is an SLO miss just like
         dropping it (paper Eq. 11 counts end-to-end latency)."""
         for req in batch:
+            req.state = "completed"
             self.completed += 1
             if self.track_latency:
                 self.latencies.append(finish_time - req.arrival)

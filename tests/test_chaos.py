@@ -1,0 +1,546 @@
+"""Fault-tolerant serving plane: cancellation, deadline aborts, load
+shedding, and injected-fault recovery (ISSUE 6).
+
+The load-bearing claim extends PR 5's plan equivalence into the failure
+domain: every failure path — client cancels (queued, resident, or
+mid-chunked-prefill), deadline aborts, load shedding, transient dispatch
+faults absorbed by retry, allocator failures absorbed by requeue, and
+full engine resets (retries exhausted / stuck ticks) — terminates or
+recompute-requeues requests WITHOUT perturbing the survivors: their
+greedy streams stay bit-exact with a fault-free run, no page leaks, and
+every offered request lands in exactly one terminal state
+(``completed | cancelled | deadline_aborted | shed | dropped``). The
+chaos acceptance test drives all fault sites at once from one seeded
+``FaultInjector`` and asserts exactly that, plus the zero-recompile
+discipline (fault handling reuses warmed executables only).
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import make_engine
+from repro.serving.faults import (EngineFault, FaultConfig, FaultInjector,
+                                  TransientFault)
+from repro.serving.kv_cache import NULL_PAGE, OutOfPages, PageAllocator
+from repro.serving.plan import (PlannerConfig, StepPlanner, preemption_key,
+                                serve_ticks)
+from repro.serving.request import Request, RequestQueue
+
+CACHE_LEN = 32
+N_SLOTS = 4
+PAGE = 8
+MODEL = "olmo-1b"
+
+
+@pytest.fixture(scope="module")
+def engine():
+    """One warmed dense engine for the whole module — fault handling
+    must reuse its executables, never compile (the acceptance test
+    asserts the jit caches stay frozen across the chaos run)."""
+    cfg = get_config(MODEL).reduced()
+    eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=True, page_size=PAGE)
+    return cfg, eng
+
+
+def _make_prompt(cfg, rid: int, length: int):
+    rng = np.random.default_rng(1000 + rid)
+    return {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, size=(1, length)).astype(np.int32))}
+
+
+def _workload(cfg, seed: int, n: int, prompt_range=(3, 12),
+              budget_range=(3, 8)):
+    rng = np.random.default_rng(seed)
+    reqs, prompts = [], {}
+    for i in range(n):
+        p = int(rng.integers(*prompt_range))
+        nt = int(rng.integers(*budget_range))
+        reqs.append(Request(arrival=0.0, rid=i, model=cfg.name, slo=1e9,
+                            n_tokens=nt, prompt_len=p))
+        prompts[i] = _make_prompt(cfg, i, p)
+    return reqs, prompts
+
+
+def _serve(cfg, eng, reqs, prompts, *, chunk_tokens=0, lazy=False,
+           faults=None, on_tick=None, max_retries=None, **planner_kw):
+    """Serve to drain and ALWAYS leave the module engine clean: faults
+    detached, all slots free, page conservation audited."""
+    eng.release_all_slots()
+    eng.reset_stats()
+    q = RequestQueue(cfg.name, slo=1e9)
+    planner = StepPlanner(eng, q, PlannerConfig(
+        chunk_tokens=chunk_tokens, lazy=lazy, gen_len=4, **planner_kw))
+    if faults is not None:
+        eng.attach_faults(faults, max_retries=max_retries)
+    try:
+        srv = serve_ticks(planner, reqs, lambda r: prompts[r.rid],
+                          faults=faults, on_tick=on_tick, stall_limit=50)
+    finally:
+        eng.attach_faults(None, max_retries=2)   # restore engine defaults
+    assert not srv.truncated
+    # the drain invariant every failure path must preserve: no request
+    # left resident, and every page back in the pool
+    assert eng.free_pages == eng.total_pages, "leaked pages"
+    assert eng.check_page_invariants()
+    return {r: tuple(t) for r, t in planner.streams.items()}, planner, srv
+
+
+@pytest.fixture(scope="module")
+def baseline(engine):
+    cfg, eng = engine
+    reqs, prompts = _workload(cfg, seed=7, n=6)
+    streams, _, _ = _serve(cfg, eng, reqs, prompts)
+    assert streams and all(len(t) for t in streams.values())
+    return reqs, prompts, streams
+
+
+# ---------------------------------------------------------------------------
+# fault injector: seeded determinism, independent sites, hard cap
+# ---------------------------------------------------------------------------
+def test_fault_injector_deterministic_and_capped():
+    sched = []
+    for _ in range(2):
+        inj = FaultInjector(FaultConfig(seed=3, dispatch_rate=0.3,
+                                        stuck_rate=0.2, max_faults=5))
+        hits = [(site, inj._roll(rate, site))
+                for site in ("dispatch", "stuck") * 20
+                for rate in (0.3 if site == "dispatch" else 0.2,)]
+        sched.append(hits)
+        assert inj.total == 5               # hard cap: chaos runs drain
+    assert sched[0] == sched[1]             # same seed, same schedule
+    # a zero-rate site consumes no randomness: adding it does not shift
+    # the other sites' schedules (per-seed fault plans stay independent)
+    a = FaultInjector(seed=9, dispatch_rate=0.5)
+    b = FaultInjector(seed=9, dispatch_rate=0.5, alloc_rate=0.0)
+    plan_a = [a._roll(0.5, "dispatch") for _ in range(30)]
+    for _ in range(30):
+        b._roll(0.0, "alloc")
+    plan_b = [b._roll(0.5, "dispatch") for _ in range(30)]
+    assert plan_a == plan_b
+    with pytest.raises(TransientFault):
+        FaultInjector(dispatch_rate=1.0).maybe_fault("dispatch")
+    with pytest.raises(OutOfPages):
+        FaultInjector(alloc_rate=1.0).maybe_fault("alloc")
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: cancellation (queued / resident / mid-chunked-prefill)
+# ---------------------------------------------------------------------------
+def test_cancel_queued_request(engine):
+    cfg, eng = engine
+    eng.release_all_slots()
+    q = RequestQueue(cfg.name, slo=1e9)
+    planner = StepPlanner(eng, q, PlannerConfig(gen_len=4))
+    req = Request(arrival=0.0, rid=0, model=cfg.name, slo=1e9, n_tokens=4)
+    assert planner.submit(req, _make_prompt(cfg, 0, 4))
+    assert planner.cancel(0)
+    assert len(q) == 0 and q.cancelled == 1
+    assert req.state == "cancelled"
+    assert 0 not in planner._prompts            # prompt arrays reclaimed
+    assert not planner.cancel(0)                # terminal: second is a no-op
+    assert not planner.cancel(999)              # unknown rid
+    assert q.violated == 0                      # cancel is not an SLO miss
+
+
+def test_cancel_resident_survivors_bit_exact(engine, baseline):
+    """Cancelling a decoding resident frees its slot and pages via the
+    plan's Cancel event; every other stream is bit-identical to the
+    fault-free run."""
+    cfg, eng = engine
+    reqs, prompts, base = baseline
+    done = []
+
+    def cancel_at(server, now):
+        if server.ticks == 3 and not done:
+            if server.planner.cancel(2):
+                done.append(now)
+
+    got, planner, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=3,
+                             on_tick=cancel_at)
+    assert done, "cancel never fired"
+    q = planner.queue
+    assert q.cancelled == 1 and q.completed == len(reqs) - 1
+    assert q.violated == 0
+    assert {r: t for r, t in got.items() if r != 2} \
+        == {r: t for r, t in base.items() if r != 2}
+    assert len(got[2]) < len(base[2])           # actually cut short
+
+
+def test_cancel_mid_chunked_prefill_frees_all_pages(engine):
+    """A request cancelled while still PREFILLING (chunked, multiple
+    ticks in) is no special case: its partially-written pages free like
+    a decoder's, and concurrent streams are untouched."""
+    cfg, eng = engine
+    long_req = Request(arrival=0.0, rid=0, model=cfg.name, slo=1e9,
+                       n_tokens=4, prompt_len=24)
+    side = Request(arrival=0.0, rid=1, model=cfg.name, slo=1e9,
+                   n_tokens=6, prompt_len=4)
+    prompts = {0: _make_prompt(cfg, 0, 24), 1: _make_prompt(cfg, 1, 4)}
+    base, _, _ = _serve(cfg, eng, [side], {1: prompts[1]})
+    state = {}
+
+    def cancel_mid_prefill(server, now):
+        if state:
+            return
+        pl = server.planner
+        for slot, r in pl._resident.items():
+            if r.req.rid == 0 and r.prefilling and r.done > 0:
+                # mid-prefill, some chunks already written to pages
+                state["pages"] = eng.slot_page_count(slot)
+                assert pl.cancel(0)
+                return
+
+    got, planner, _ = _serve(cfg, eng, [long_req, side], prompts,
+                             chunk_tokens=3, on_tick=cancel_mid_prefill)
+    assert state and state["pages"] > 0, "never caught it mid-prefill"
+    q = planner.queue
+    assert q.cancelled == 1 and q.completed == 1
+    assert got[0] == ()                          # never emitted a token
+    assert got[1] == base[1]                     # bystander bit-exact
+    # _serve's epilogue already asserted free_pages == total_pages
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: deadline aborts + load shedding
+# ---------------------------------------------------------------------------
+def test_deadline_abort_evicts_resident(engine, baseline):
+    """With ``deadline_aborts`` armed, a resident past its SLO deadline
+    is evicted (pages freed, counted ``deadline_aborted``) instead of
+    burning decode steps on a request nobody is waiting for."""
+    cfg, eng = engine
+    reqs, prompts, base = baseline
+    tight = [Request(arrival=0.0, rid=r.rid, model=r.model,
+                     slo=(4e-3 if r.rid == 1 else 1e9), n_tokens=20,
+                     prompt_len=r.prompt_len) for r in reqs[:3]]
+    got, planner, _ = _serve(cfg, eng, tight, prompts,
+                             deadline_aborts=True)
+    q = planner.queue
+    assert q.deadline_aborted == 1 and q.completed == 2
+    assert q.violated == 1                       # an abort IS an SLO miss
+    assert tight[1].state == "deadline_aborted"
+    assert len(got[1]) < 20                      # stopped early
+    # without the knob the same workload decodes rid 1 to completion
+    got2, planner2, _ = _serve(cfg, eng, tight, prompts)
+    assert planner2.queue.deadline_aborted == 0
+    assert len(got2[1]) == 20
+
+
+def test_load_shedding_watermarks(engine):
+    """Crossing either watermark sheds NEW submissions terminally (state
+    ``shed``, counted as violated) — accepted requests still complete."""
+    cfg, eng = engine
+    reqs, prompts = _workload(cfg, seed=21, n=12)
+    got, planner, _ = _serve(cfg, eng, reqs, prompts, shed_queue_depth=3)
+    q = planner.queue
+    assert q.shed > 0 and q.completed > 0
+    assert q.shed + q.completed == len(reqs)
+    assert q.violated == q.shed
+    shed_rids = [r.rid for r in reqs if r.state == "shed"]
+    assert len(shed_rids) == q.shed
+    assert all(got[r] == () for r in shed_rids)
+    # page-occupancy watermark: 0.0 sheds everything the moment the pool
+    # holds any page at all; with no residents the gate stays open
+    planner2 = StepPlanner(eng, RequestQueue(cfg.name, slo=1e9),
+                           PlannerConfig(shed_page_frac=0.5))
+    assert not planner2.should_shed(page_frac=0.4)
+    assert planner2.should_shed(page_frac=0.5)
+    assert planner2.should_shed(queue_len=0, page_frac=1.0)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: retry, reset, allocator failure, stuck ticks
+# ---------------------------------------------------------------------------
+def test_dispatch_fault_retry_is_invisible(engine, baseline):
+    """Transient dispatch faults under the retry budget are absorbed by
+    ``execute`` — zero resets, streams bit-exact, retries counted."""
+    cfg, eng = engine
+    reqs, prompts, base = baseline
+    inj = FaultInjector(seed=3, dispatch_rate=0.2, max_faults=10)
+    got, planner, srv = _serve(cfg, eng, reqs, prompts, chunk_tokens=3,
+                               faults=inj, max_retries=2)
+    assert inj.injected["dispatch"] > 0
+    assert planner.metrics.engine_retries == inj.injected["dispatch"]
+    assert planner.metrics.engine_resets == 0 and srv.recoveries == 0
+    assert got == base
+
+
+def test_retry_exhaustion_resets_engine_bit_exact(engine, baseline):
+    """retry_limit=0 turns every injected dispatch fault into an
+    ``EngineFault`` → full reset: all residents recompute-requeue and
+    the final streams STILL match the fault-free run."""
+    cfg, eng = engine
+    reqs, prompts, base = baseline
+    inj = FaultInjector(seed=5, dispatch_rate=0.15, max_faults=4)
+    got, planner, srv = _serve(cfg, eng, reqs, prompts, chunk_tokens=3,
+                               faults=inj, max_retries=0)
+    assert planner.metrics.engine_resets > 0
+    assert srv.recoveries == planner.metrics.engine_resets
+    assert planner.metrics.requeues > 0
+    assert got == base
+    assert planner.queue.completed == len(reqs)
+
+
+def test_alloc_fault_requeues_bit_exact(engine, baseline):
+    """Injected ``OutOfPages`` rides the real all-or-nothing rollback
+    paths: admissions requeue (``admission_failed``) and lazy grows
+    preempt-requeue (``failed_grows``) — no reset, streams bit-exact."""
+    cfg, eng = engine
+    reqs, prompts, base = baseline
+    inj = FaultInjector(seed=11, alloc_rate=0.1, max_faults=5)
+    got, planner, srv = _serve(cfg, eng, reqs, prompts, chunk_tokens=3,
+                               lazy=True, faults=inj)
+    assert inj.injected["alloc"] > 0
+    assert planner.metrics.engine_resets == 0
+    assert planner.metrics.requeues > 0
+    assert got == base
+    assert planner.queue.completed == len(reqs)
+
+
+def test_stuck_tick_recovery_bit_exact(engine, baseline):
+    """A watchdog-killed (stuck) tick recovers wholesale — engine reset
+    plus recompute-requeue — and leaves no trace in the streams."""
+    cfg, eng = engine
+    reqs, prompts, base = baseline
+    inj = FaultInjector(seed=9, stuck_rate=0.1, max_faults=3)
+    got, planner, srv = _serve(cfg, eng, reqs, prompts, chunk_tokens=3,
+                               faults=inj)
+    assert srv.stuck_ticks == inj.injected["stuck"] > 0
+    assert srv.recoveries >= srv.stuck_ticks
+    assert got == base
+    assert planner.queue.completed == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# victim selection: slack-aware preemption
+# ---------------------------------------------------------------------------
+def test_preemption_key_slack_aware():
+    """The shared victim rule: most SLO slack per unit of sunk recompute
+    work evicts first; nearly-due or deeply-invested residents are
+    protected. ``newest`` restores the legacy latest-arrival rule."""
+    now = 10.0
+
+    def req(rid, arrival, slo):
+        return Request(arrival=arrival, rid=rid, model=MODEL, slo=slo)
+
+    lax = req(0, arrival=0.0, slo=1e6)       # tons of slack
+    due = req(1, arrival=0.0, slo=10.5)      # nearly due
+    # equal slack: the one with less sunk work is the cheaper recompute
+    assert preemption_key(lax, 2, now) > preemption_key(due, 2, now)
+    assert preemption_key(lax, 1, now) > preemption_key(lax, 100, now)
+    # infinite SLO degrades to least-sunk-first, still discriminating
+    inf_a, inf_b = req(2, 0.0, math.inf), req(3, 0.0, math.inf)
+    assert preemption_key(inf_a, 1, now) > preemption_key(inf_b, 50, now)
+    # legacy mode ignores slack and sunk work entirely
+    old = req(4, arrival=5.0, slo=10.1)
+    new = req(5, arrival=9.0, slo=1e6)
+    assert preemption_key(new, 0, now, "newest") \
+        > preemption_key(old, 0, now, "newest")
+
+
+def test_slack_victim_protects_low_slack_resident(engine):
+    """End to end: under page pressure the lazy planner preempts the
+    slack-rich resident, not the nearly-due one — the tight-SLO request
+    completes without ever being recomputed."""
+    cfg, _ = engine
+    eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=True, page_size=PAGE, total_pages=6)
+    reqs = [Request(arrival=0.0, rid=0, model=cfg.name, slo=1e9,
+                    n_tokens=16, prompt_len=6),
+            Request(arrival=1e-5, rid=1, model=cfg.name, slo=0.5,
+                    n_tokens=16, prompt_len=6),
+            Request(arrival=2e-5, rid=2, model=cfg.name, slo=1e9,
+                    n_tokens=16, prompt_len=6)]
+    prompts = {r.rid: _make_prompt(cfg, r.rid, 6) for r in reqs}
+    preempted = []
+
+    class Spy(StepPlanner):
+        def _preempt(self, slot, plan, now):
+            preempted.append(self._resident[slot].req.rid)
+            return super()._preempt(slot, plan, now)
+
+    q = RequestQueue(cfg.name, slo=1e9)
+    planner = Spy(eng, q, PlannerConfig(lazy=True, gen_len=4))
+    srv = serve_ticks(planner, reqs, lambda r: prompts[r.rid])
+    assert not srv.truncated and planner.metrics.preemptions > 0
+    assert 1 not in preempted, "evicted the nearly-due resident"
+    assert q.completed == 3 and q.violated == 0
+
+
+# ---------------------------------------------------------------------------
+# allocator audit (satellite: invariant checker catches corruption)
+# ---------------------------------------------------------------------------
+def test_allocator_audit_catches_corruption():
+    a = PageAllocator(8)
+    pages = a.alloc(3)
+    assert a.check_invariants()
+    # double-free corruption: a page both free and allocated
+    a._free.append(pages[0])
+    with pytest.raises(AssertionError):
+        a.check_invariants()
+    a._free.pop()
+    # conservation corruption: a page vanishes entirely
+    a._allocated.discard(pages[1])
+    with pytest.raises(AssertionError):
+        a.check_invariants()
+    a._allocated.add(pages[1])
+    assert a.check_invariants()
+    # the null page may never enter circulation
+    a._free.append(NULL_PAGE)
+    with pytest.raises(AssertionError):
+        a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# the chaos acceptance run: every failure mode at once, one seed
+# ---------------------------------------------------------------------------
+def test_chaos_acceptance(engine):
+    """ISSUE 6 acceptance: a seeded chaos schedule (dispatch faults,
+    allocator failures, stuck ticks, client cancels, deadline aborts,
+    load shedding, all concurrently) drains with zero leaked pages, no
+    stuck loop, per-cause terminal counters summing exactly to the
+    offered load, survivors' streams bit-exact with the fault-free run,
+    and ZERO recompiles."""
+    cfg, eng = engine
+    reqs, prompts = _workload(cfg, seed=31, n=10, budget_range=(4, 10))
+    # two requests carry tight SLOs (deadline-abort bait)
+    reqs = [Request(arrival=r.arrival, rid=r.rid, model=r.model,
+                    slo=(8e-3 if r.rid in (4, 7) else 1e9),
+                    n_tokens=r.n_tokens, prompt_len=r.prompt_len)
+            for r in reqs]
+    base, _, _ = _serve(cfg, eng, reqs, prompts)      # fault-free, no SLO
+    jit_before = eng.jit_cache_sizes()
+
+    cancelled_rids = []
+
+    def chaos_script(server, now):
+        # scripted client cancels at fixed ticks: one early (likely
+        # queued or prefilling), one later (likely decoding)
+        for tick, rid in ((2, 3), (6, 8)):
+            if server.ticks == tick and rid not in cancelled_rids:
+                if server.planner.cancel(rid):
+                    cancelled_rids.append(rid)
+
+    inj = FaultInjector(seed=13, dispatch_rate=0.08, alloc_rate=0.05,
+                        stuck_rate=0.04, max_faults=12)
+    got, planner, srv = _serve(
+        cfg, eng, reqs, prompts, chunk_tokens=3, lazy=True, faults=inj,
+        on_tick=chaos_script, max_retries=1, deadline_aborts=True,
+        shed_queue_depth=8)
+    q = planner.queue
+    # 1. chaos actually happened
+    assert inj.total > 0 and cancelled_rids
+    # 2. conservation: every offered request reached exactly ONE
+    #    terminal state — nothing lost, nothing double-counted
+    terminal = (q.completed + q.cancelled + q.deadline_aborted + q.shed
+                + q.dropped)
+    assert terminal == len(reqs), (
+        q.completed, q.cancelled, q.deadline_aborted, q.shed, q.dropped)
+    assert q.cancelled == len(cancelled_rids)
+    by_state = {}
+    for r in reqs:
+        by_state.setdefault(r.state, []).append(r.rid)
+    assert len(by_state.get("completed", [])) == q.completed
+    # 3. the mirrored metrics agree with the queue (PoolResult surface)
+    m = planner.metrics
+    assert (m.cancelled, m.deadline_aborted, m.shed) \
+        == (q.cancelled, q.deadline_aborted, q.shed)
+    assert m.engine_retries + m.engine_resets + srv.stuck_ticks > 0
+    # 4. survivors are bit-exact with the fault-free run
+    for rid in by_state.get("completed", []):
+        assert got[rid] == base[rid], f"survivor rid={rid} diverged"
+    # 5. zero leaks / no stuck loop (drain + page audit in _serve) and
+    #    the executables are untouched: chaos recovery compiles NOTHING
+    assert eng.jit_cache_sizes() == jit_before
+    # 6. determinism: the same seed replays the same chaos outcome
+    inj2 = FaultInjector(seed=13, dispatch_rate=0.08, alloc_rate=0.05,
+                         stuck_rate=0.04, max_faults=12)
+    for r in reqs:
+        r.state = "pending"
+    cancelled_rids.clear()
+    got2, planner2, _ = _serve(
+        cfg, eng, reqs, prompts, chunk_tokens=3, lazy=True, faults=inj2,
+        on_tick=chaos_script, max_retries=1, deadline_aborts=True,
+        shed_queue_depth=8)
+    assert got2 == got
+    assert inj2.injected == inj.injected
+    q2 = planner2.queue
+    assert (q2.completed, q2.cancelled, q2.deadline_aborted, q2.shed,
+            q2.dropped) == (q.completed, q.cancelled, q.deadline_aborted,
+                            q.shed, q.dropped)
+
+
+# ---------------------------------------------------------------------------
+# pool plane: cancel + engine reset through EnginePool/Controller
+# ---------------------------------------------------------------------------
+def test_pool_plane_cancel_and_engine_reset():
+    """The pool plane shares the failure semantics: ``EnginePool.cancel``
+    frees a resident's slot and pages immediately, and an ``EngineFault``
+    mid-run resets the engine and recompute-requeues the whole run —
+    the drained pool still completes everything else, leaks nothing,
+    and surfaces per-cause counters in ``PoolResult``."""
+    from repro.core.simulator import RunRequest
+    from repro.serving.controller import run_policy
+    from repro.serving.pool import build_pool
+
+    pool = build_pool([MODEL], base_slots=4, cache_len=32,
+                      allocations={MODEL: [256]})
+    name = sorted(pool.hosts)[0]
+    pool.reset()
+    q = pool.queues[name]
+    for i in range(3):
+        pool.push(Request(arrival=0.0, rid=i, model=name, slo=1e9,
+                          n_tokens=8))
+    # cancel a QUEUED request
+    assert pool.cancel(name, 2)
+    run = pool.admit(RunRequest(name, chips=4096, batch=4), 0.0, 4)
+    assert run is not None and run.batch == 2
+    # cancel a RESIDENT request: slot + pages free NOW
+    eng = run.engine
+    pages_before = eng.free_pages
+    assert pool.cancel(name, 0)
+    assert eng.free_pages > pages_before
+    assert not pool.cancel(name, 0)            # terminal: no double count
+    while not pool.step_run(run, 0.0):
+        pass
+    assert q.cancelled == 2 and q.completed == 1
+    eng.check_page_invariants()
+
+    # injected dispatch faults with retries exhausted → engine resets
+    # mid-serve; the run requeues and the drain still completes
+    inj = FaultInjector(seed=2, dispatch_rate=0.2, max_faults=6)
+    for alloc in pool.hosts[name].allocations.values():
+        alloc.engine.attach_faults(inj, max_retries=0)
+    try:
+        res = run_policy(pool, "temporal", rate=800.0, duration=0.05,
+                         drain=True)
+    finally:
+        for alloc in pool.hosts[name].allocations.values():
+            alloc.engine.attach_faults(None)
+    m = res.per_model[name]
+    assert m.engine_resets > 0 and m.requeues > 0
+    assert m.completed > 0
+    for alloc in pool.hosts[name].allocations.values():
+        assert alloc.engine.free_pages == alloc.engine.total_pages
+        alloc.engine.check_page_invariants()
+
+
+def test_pool_shed_watermark():
+    """`EnginePool.push` sheds terminally at the queue-depth watermark,
+    and the shed count reaches the PoolResult metrics."""
+    from repro.serving.pool import build_pool
+
+    pool = build_pool([MODEL], base_slots=2, cache_len=32,
+                      allocations={MODEL: [256]},
+                      planner_config=PlannerConfig(shed_queue_depth=2))
+    name = sorted(pool.hosts)[0]
+    pool.reset()
+    for i in range(5):
+        pool.push(Request(arrival=0.0, rid=i, model=name, slo=1e9))
+    q = pool.queues[name]
+    assert len(q) == 2 and q.shed == 3
+    res = pool.snapshot("none", 1.0, 1.0, 0)
+    assert res.per_model[name].shed == 3

@@ -25,6 +25,10 @@ from repro.serving.kv_cache import (NULL_PAGE, OutOfPages, PageAllocator,
 
 
 def _check_invariants(kv: PagedKVCache):
+    # the shipped audit the chaos suite runs after every fault recovery
+    # (ISSUE 6 satellite) — must agree with this suite's independent
+    # re-derivation below on every random interleaving
+    kv.check_invariants()
     owned = []
     for row in range(kv.batch):
         pages = kv.pages(row)
@@ -87,7 +91,9 @@ def test_allocator_never_hands_out_null_or_duplicate(sizes, num_pages):
         live.append(got)
         if i % 3 == 2 and live:           # interleave frees
             a.free(live.pop(0))
+        a.check_invariants()              # the shipped conservation audit
     assert a.free_pages + sum(len(ps) for ps in live) == num_pages
+    assert a.check_invariants()
 
 
 @settings(max_examples=40, deadline=None)

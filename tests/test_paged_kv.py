@@ -138,8 +138,12 @@ def test_random_churn_invariants_seeded():
                 if kv.pages(r):
                     assert len(kv.pages(r)) == pages_for(kv.length(r),
                                                          kv.page_size)
+            # the shipped audit (chaos suite's post-recovery check) must
+            # agree with the independent re-derivation above
+            kv.check_invariants()
         kv.reset()
         assert kv.free_pages == num_pages
+        assert kv.check_invariants()
 
 
 # --------------------------------------------------- paged kernel parity
@@ -533,3 +537,67 @@ def test_event_loop_truncates_on_max_events():
     out = run_event_loop(LoopConfig(duration=100.0, max_events=3), [],
                          Hooks())
     assert out.truncated and out.events == 3
+
+
+class _TimedHooks:
+    """Fires at a scripted list of times; records what fired and the
+    furthest point the accumulators were advanced to."""
+
+    def __init__(self, times):
+        self.times = list(times)
+        self.fired = []
+        self.advanced = 0.0
+
+    def deliver(self, req):
+        pass
+
+    def next_completion(self):
+        return self.times[0] if self.times else float("inf")
+
+    def next_wakeup(self, now):
+        return float("inf")
+
+    def advance(self, t):
+        self.advanced = t
+
+    def fire(self, now, epsilon):
+        self.fired.append(self.times.pop(0))
+        return 1
+
+    def plan(self, now):
+        pass
+
+    def drained(self):
+        return False
+
+
+def test_event_loop_max_time_boundary():
+    """Regression (ISSUE 6 satellite): the max_time backstop boundary is
+    INCLUSIVE — an event exactly AT max_time fires; only events strictly
+    past it truncate the run."""
+    from repro.core.eventloop import LoopConfig, run_event_loop
+
+    h = _TimedHooks([0.5, 1.0, 1.5])
+    out = run_event_loop(
+        LoopConfig(duration=100.0, drain=True, arrival_horizon=1e-9,
+                   max_time=1.0), [], h)
+    assert h.fired == [0.5, 1.0]          # the AT-boundary event fired
+    assert out.truncated                  # 1.5 was beyond the backstop
+    assert out.now == 1.0
+
+
+def test_event_loop_max_time_truncation_advances_accumulators():
+    """The max_time cutoff advances accumulators to the backstop before
+    truncating — exactly like the duration cutoff — so ``out.now``
+    always equals the window the partial integrals cover (previously
+    they froze at the last fired event)."""
+    from repro.core.eventloop import LoopConfig, run_event_loop
+
+    h = _TimedHooks([0.25, 1.7])
+    out = run_event_loop(
+        LoopConfig(duration=100.0, drain=True, arrival_horizon=1e-9,
+                   max_time=1.0), [], h)
+    assert h.fired == [0.25]
+    assert out.truncated
+    assert out.now == 1.0                 # not 0.25: window is [0, 1.0]
+    assert h.advanced == 1.0              # integrals cover the window too
