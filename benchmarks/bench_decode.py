@@ -414,6 +414,15 @@ def bench_chunked_prefill(rows, *, n_decode, n_burst, cache_len, page_size,
                      f"p50={sorted(p50s)[1] * 1e6:.0f}us over "
                      f"{len(gaps)} decode ticks ({srv.ticks} ticks, "
                      f"{srv.dispatches} dispatches; min of 3 runs)"))
+        # TTFT in virtual tick time (always-on RequestQueue recording):
+        # chunking trades burst-prompt TTFT for decode TBT — both now
+        # visible (deterministic, so no min-over-repeats needed)
+        q = planner.queue
+        rows.append((f"serve/{label}_ttft_p50",
+                     percentile(q.ttfts, 0.5) * 1e6,
+                     f"p99={percentile(q.ttfts, 0.99) * 1e6:.0f}us "
+                     f"virtual (n={len(q.ttfts)}, "
+                     f"tbt_p50={percentile(q.tbts, 0.5) * 1e6:.1f}us)"))
     assert results["chunked"][0] == results["unchunked"][0], \
         "chunked prefill diverged from whole-prompt admission"
     _, p99_u, stall_u = results["unchunked"]
@@ -543,17 +552,34 @@ def main():
                     help="StepPlan chunked prefill vs whole-prompt "
                          "admission (time-between-tokens p99) + lazy "
                          "page reservation vs up-front (preemption)")
+    ap.add_argument("--json", nargs="?", const="BENCH_decode.json",
+                    default=None, metavar="PATH", dest="json_out",
+                    help="write rows as dstack-bench-v1 JSON (shared "
+                         "schema with bench_pool; default "
+                         "BENCH_decode.json)")
     args = ap.parse_args()
-    fn = run
+    fn, section = run, "all"
     if args.paged:
-        fn = run_paged
+        fn, section = run_paged, "paged"
     elif args.packed_prefill:
-        fn = run_packed_prefill
+        fn, section = run_packed_prefill, "packed_prefill"
     elif args.chunked_prefill:
-        fn = run_chunked_prefill
+        fn, section = run_chunked_prefill, "chunked_prefill"
+    rows = fn(quick=not args.full, smoke=args.smoke)
     print("name,us_per_call,derived")
-    for name, us, derived in fn(quick=not args.full, smoke=args.smoke):
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
+    if args.json_out:
+        try:                      # package context (benchmarks/run.py)
+            from benchmarks import common as _common
+        except ImportError:       # script context
+            import common as _common
+        payload = _common.bench_payload(
+            "bench_decode", rows,
+            args={"quick": not args.full, "smoke": args.smoke,
+                  "section": section})
+        _common.write_json(args.json_out, payload)
+        print(f"wrote {args.json_out} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,11 @@ from __future__ import annotations
 
 import time
 
+try:                      # package context (benchmarks/run.py)
+    from benchmarks import common as _common
+except ImportError:       # script context (python benchmarks/bench_pool.py)
+    import common as _common
+
 MODELS_QUICK = ["qwen2-0.5b", "olmo-1b", "mamba2-1.3b"]
 MODELS_FULL = MODELS_QUICK + ["whisper-small"]
 POLICIES_QUICK = ["temporal", "fixed_batch_mps", "maxmin", "dstack"]
@@ -131,7 +136,9 @@ def run_with_results(quick: bool = True):
         for n, m in sorted(res.per_model.items()):
             rows.append((f"pool/{pol}/{n.split('-')[0]}", 0.0,
                          f"served={m.completed} viol={m.violated} "
-                         f"p50={m.p50 * 1e3:.2f}ms p99={m.p99 * 1e3:.2f}ms"))
+                         f"p50={m.p50 * 1e3:.2f}ms p99={m.p99 * 1e3:.2f}ms"
+                         + (f" ttft_p50={m.ttft_p50 * 1e3:.2f}ms"
+                            if m.ttfts else "")))
 
     # the acceptance invariant: standby executables were compiled up front;
     # serving every policy family recompiled NOTHING
@@ -163,6 +170,71 @@ def run_with_results(quick: bool = True):
     return rows, results
 
 
+def run_telemetry(quick: bool = True, trace_path=None):
+    """The telemetry pass (always on under main()): serve the dstack
+    policy with the ``Telemetry`` plane attached — wall-clock step timers
+    behind block-until-ready on every dispatch — and join the measured
+    per-(model, chips, kind, bucket) latencies against the
+    ``core/latency_model`` rooflines (the ISSUE 7 roofline-validation
+    report). With ``trace_path`` set a ``TraceRecorder`` also runs and
+    the Perfetto-loadable Chrome trace is validated and written there.
+    Attaching telemetry must neither recompile nor change behavior
+    (asserted here via jit_cache_sizes; bit-identity is proved in
+    tests/test_telemetry.py). Returns (rows, roofline rows, Prometheus
+    text, PoolResult)."""
+    from repro.serving.controller import run_policy
+    from repro.serving.pool import build_pool
+    from repro.serving.telemetry import (MetricsRegistry, Telemetry,
+                                         TraceRecorder, export_pool_result,
+                                         roofline_report,
+                                         validate_chrome_trace)
+
+    rate = 2000.0
+    duration = 0.05 if quick else 0.25
+    t0 = time.time()
+    pool = build_pool(["qwen2-0.5b", "olmo-1b"], request_rate=rate,
+                      base_slots=4, cache_len=32)
+    jit_before = pool.jit_cache_sizes()
+    # attached AFTER warmup (like faults): timing covers warm executables
+    tel = Telemetry(trace=TraceRecorder() if trace_path else None)
+    pool.attach_telemetry(tel)
+    try:
+        res = run_policy(pool, "dstack", rate=rate, duration=duration,
+                         gen_len=4, gen_tokens=(4, 12))
+    finally:
+        pool.attach_telemetry(None)
+    assert not res.truncated, "telemetry pass hit a controller backstop"
+    assert pool.jit_cache_sizes() == jit_before, "telemetry recompiled"
+    report = roofline_report(tel.timers, pool.profiles)
+    assert report, "telemetry pass timed no dispatches"
+    flagged = sum(1 for r in report if r.flagged)
+    rows = [("pool/telemetry/dispatches_timed", (time.time() - t0) * 1e6,
+             f"{tel.timers.total_samples} wall samples over "
+             f"{len(tel.timers.samples)} (model,chips,kind,bucket) keys"),
+            ("pool/telemetry/roofline_rows", 0.0,
+             f"{len(report)} rows, {flagged} flagged at 4x tol "
+             f"(CPU host vs TPU rooflines — deviations are the signal)")]
+    # per-request streaming latency (TTFT/TBT), virtual time — the
+    # figures end-to-end latency hides (satellite: RequestQueue TTFT)
+    for n, m in sorted(res.per_model.items()):
+        if m.ttfts:
+            rows.append((f"pool/telemetry/{n.split('-')[0]}_ttft_p50",
+                         m.ttft_p50 * 1e6,
+                         f"p99={m.ttft_p99 * 1e6:.0f}us virtual "
+                         f"(n={len(m.ttfts)}, "
+                         f"tbt_p50={m.tbt_p50 * 1e6:.1f}us)"))
+    reg = MetricsRegistry()
+    export_pool_result(reg, res)
+    prom = reg.render()
+    if trace_path:
+        obj = tel.trace.save(trace_path)
+        n_spans = validate_chrome_trace(obj)
+        rows.append(("pool/telemetry/trace", 0.0,
+                     f"{len(obj['traceEvents'])} events ({n_spans} spans, "
+                     f"{len(tel.trace.tracks())} tracks) -> {trace_path}"))
+    return rows, report, prom, res
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser()
@@ -173,18 +245,45 @@ def main():
                     help="append the seeded chaos pass (fault injection "
                          "through a lazy pool; asserts the ISSUE 6 "
                          "acceptance invariants)")
+    ap.add_argument("--trace", nargs="?", const="trace_pool.json",
+                    default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace of the "
+                         "telemetry pass to PATH (default "
+                         "trace_pool.json)")
+    ap.add_argument("--json", nargs="?", const="BENCH_pool.json",
+                    default=None, metavar="PATH", dest="json_out",
+                    help="write rows + roofline report + Prometheus "
+                         "snapshot as dstack-bench-v1 JSON (default "
+                         "BENCH_pool.json)")
     args = ap.parse_args()
-    rows, results = run_with_results(quick=not args.full)
+    quick = not args.full
+    rows, results = run_with_results(quick)
     if args.faults:
-        rows += run_faults(quick=not args.full)
+        rows += run_faults(quick)
+    trows, report, prom, _ = run_telemetry(quick, trace_path=args.trace)
+    rows += trows
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
+    print()
+    from repro.serving.telemetry import format_roofline
+    print("roofline validation (measured wall-clock vs latency_model)")
+    for line in format_roofline(report):
+        print(line)
     print()
     print("policy           summary (virtual time; real jitted engines)")
     for res in results:
         for line in res.table_rows():
             print(line)
+    if args.json_out:
+        payload = _common.bench_payload(
+            "bench_pool", rows,
+            args={"quick": quick, "faults": bool(args.faults),
+                  "trace": bool(args.trace)},
+            extra={"roofline": [r.as_dict() for r in report],
+                   "prometheus": prom})
+        _common.write_json(args.json_out, payload)
+        print(f"wrote {args.json_out} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -37,3 +37,64 @@ def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+# --------------------------------------------------------------------------
+# shared machine-readable bench output (ISSUE 7): one schema for every
+# benchmark's --json flag, so BENCH_*.json files form a comparable
+# trajectory across PRs. CI validates each emitted file round-trips
+# through validate_bench_json.
+# --------------------------------------------------------------------------
+BENCH_SCHEMA = "dstack-bench-v1"
+
+
+def bench_payload(bench: str, rows, args=None, extra=None) -> dict:
+    """Wrap a benchmark's ``(name, us_per_call, derived)`` rows in the
+    shared schema. ``args`` records the CLI shape that produced the
+    numbers (quick vs full runs are not comparable); ``extra`` carries
+    bench-specific structured sections (roofline report, Prometheus
+    snapshot, ...)."""
+    return {
+        "schema": BENCH_SCHEMA,
+        "bench": str(bench),
+        "args": dict(args or {}),
+        "rows": [{"name": str(n), "us_per_call": float(us),
+                  "derived": str(d)} for n, us, d in rows],
+        "extra": dict(extra or {}),
+    }
+
+
+def write_json(path: str, payload: dict) -> dict:
+    import json
+    validate_bench_json(payload)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return payload
+
+
+def validate_bench_json(payload) -> int:
+    """Schema gate for the perf trajectory; returns the row count.
+    Raises ``ValueError`` on the first violation."""
+    if not isinstance(payload, dict):
+        raise ValueError("bench json: not an object")
+    if payload.get("schema") != BENCH_SCHEMA:
+        raise ValueError(f"bench json: schema {payload.get('schema')!r} "
+                         f"!= {BENCH_SCHEMA!r}")
+    if not payload.get("bench"):
+        raise ValueError("bench json: missing bench name")
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("bench json: rows missing or empty")
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict) or not r.get("name"):
+            raise ValueError(f"bench json: rows[{i}] malformed")
+        us = r.get("us_per_call")
+        if not isinstance(us, (int, float)) or us < 0:
+            raise ValueError(f"bench json: rows[{i}].us_per_call {us!r}")
+        if "derived" not in r:
+            raise ValueError(f"bench json: rows[{i}] missing derived")
+    for k in ("args", "extra"):
+        if not isinstance(payload.get(k, {}), dict):
+            raise ValueError(f"bench json: {k} is not an object")
+    return len(rows)

@@ -93,7 +93,14 @@ def run_event_loop(cfg: LoopConfig, generators: Sequence,
     out = LoopOutcome()
     ai = 0
     now = 0.0
+    # optional telemetry plane on the hooks object (Controller/TickServer
+    # expose the one attached to their pool/planner): arrival instants on
+    # the per-model queue tracks. None = zero-cost.
+    tel = getattr(hooks, "telemetry", None)
     while ai < len(arrivals) and arrivals[ai].arrival <= now:
+        if tel is not None:
+            tel.request_event(arrivals[ai].model, "arrival",
+                              rid=arrivals[ai].rid)
         hooks.deliver(arrivals[ai])
         ai += 1
     hooks.plan(now)
@@ -128,6 +135,9 @@ def run_event_loop(cfg: LoopConfig, generators: Sequence,
         hooks.advance(t)
         now = t
         while ai < len(arrivals) and arrivals[ai].arrival <= now + cfg.epsilon:
+            if tel is not None:
+                tel.request_event(arrivals[ai].model, "arrival",
+                                  rid=arrivals[ai].rid)
             hooks.deliver(arrivals[ai])
             ai += 1
         out.events += hooks.fire(now, cfg.epsilon)

@@ -43,11 +43,15 @@ def run_sim(model_names, duration: float, policy_name: str, rate: float):
 
 
 def run_real(model_names, duration: float, policy_name: str, rate: float,
-             gen_len: int = 4, lazy_kv: bool = False):
+             gen_len: int = 4, lazy_kv: bool = False,
+             trace_path=None, metrics: bool = False):
     """Thin wrapper over the engine pool: the named policy drives real
     jitted slot engines end to end (standby allocations compiled once).
     ``lazy_kv`` switches admission to prompt-only page reservation with
-    preempt-and-requeue on OutOfPages (see docs/serving_api.md)."""
+    preempt-and-requeue on OutOfPages (see docs/serving_api.md).
+    ``trace_path`` arms the telemetry plane and writes a Perfetto-
+    loadable Chrome trace there; ``metrics`` prints a Prometheus text
+    snapshot of the run (see docs/observability.md)."""
     from repro.serving.controller import run_policy
     from repro.serving.pool import build_pool
 
@@ -57,10 +61,29 @@ def run_real(model_names, duration: float, policy_name: str, rate: float,
         allocs = ", ".join(f"{a.chips}ch/{a.n_slots}sl"
                            for a in host.allocations.values())
         print(f"  {n:26s} standby engines: {allocs}")
-    res = run_policy(pool, policy_name, rate=rate, duration=duration,
-                     gen_len=gen_len)
+    tel = None
+    if trace_path or metrics:
+        from repro.serving.telemetry import Telemetry, TraceRecorder
+        tel = Telemetry(trace=TraceRecorder() if trace_path else None)
+        pool.attach_telemetry(tel)
+    try:
+        res = run_policy(pool, policy_name, rate=rate, duration=duration,
+                         gen_len=gen_len)
+    finally:
+        if tel is not None:
+            pool.attach_telemetry(None)
     for line in res.table_rows():
         print(line)
+    if trace_path:
+        tel.trace.save(trace_path)
+        print(f"trace: {len(tel.trace.events)} events -> {trace_path} "
+              f"(load in https://ui.perfetto.dev)")
+    if metrics:
+        from repro.serving.telemetry import (MetricsRegistry,
+                                             export_pool_result)
+        reg = MetricsRegistry()
+        export_pool_result(reg, res)
+        print(reg.render(), end="")
     return res
 
 
@@ -77,6 +100,14 @@ def main() -> None:
     ap.add_argument("--lazy-kv", action="store_true",
                     help="(real mode) lazy page reservation with "
                          "preempt-and-requeue on OutOfPages")
+    ap.add_argument("--trace", nargs="?", const="trace.json", default=None,
+                    metavar="PATH",
+                    help="(real mode) record a Chrome/Perfetto trace of "
+                         "the serve and write it to PATH "
+                         "(default trace.json)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="(real mode) print a Prometheus text snapshot "
+                         "of the run")
     args = ap.parse_args()
     names = args.models.split(",")
     if args.mode == "sim":
@@ -86,7 +117,8 @@ def main() -> None:
         # real mode defaults to a CPU-sized virtual duration
         dur = args.duration if args.duration is not None else 0.05
         run_real(names, dur, args.policy, args.rate, gen_len=args.gen_len,
-                 lazy_kv=args.lazy_kv)
+                 lazy_kv=args.lazy_kv, trace_path=args.trace,
+                 metrics=args.metrics)
 
 
 if __name__ == "__main__":

@@ -79,6 +79,11 @@ class Controller:
         self._heap: List[Tuple[float, int]] = []  # (next decode time, seq)
         self._last_served = 0
 
+    @property
+    def telemetry(self):
+        """The pool's telemetry plane (read by the core event loop)."""
+        return self.pool.telemetry
+
     # ------------------------------------------------------------------
     def _plan(self, now: float, heap: List[Tuple[float, int]]) -> None:
         for rr in self.policy.plan(now, self.pool) or []:

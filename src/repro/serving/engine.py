@@ -161,6 +161,12 @@ class InferenceEngine:
         self.fault_injector = None
         self.retry_limit = 2
         self.retry_backoff_s = 0.0
+        # telemetry plane (repro.serving.telemetry): when attached, each
+        # of execute()'s ≤3 dispatches is wall-clock timed behind a
+        # block_until_ready and traced as a sub-span. None = every
+        # instrumentation site is a single attribute check (no clock
+        # reads, no blocking, bit-identical behavior).
+        self.telemetry = None
 
         if mesh is not None:
             from jax.sharding import NamedSharding
@@ -825,6 +831,16 @@ class InferenceEngine:
         if self._kv is not None:
             self._kv.allocator.fault_injector = injector
 
+    # ------------------------------------------------------- telemetry
+    def attach_telemetry(self, tel) -> None:
+        """Arm (or with None, disarm) the serving telemetry plane
+        (``repro.serving.telemetry.Telemetry``) on this engine. Like
+        ``attach_faults``, attach AFTER warmup: timing covers only warm
+        executables. Timing blocks on dispatch outputs
+        (``block_until_ready``), which changes wall-clock pipelining but
+        never values, dispatch counts, or compilation."""
+        self.telemetry = tel
+
     def recover(self) -> int:
         """Engine reset after an unrecoverable fault (retries exhausted,
         or a stuck tick whose dispatch was killed mid-flight): slot state
@@ -841,6 +857,9 @@ class InferenceEngine:
                 "engine recovery leaked pages"
         self.check_page_invariants()
         self.stats.engine_resets += 1
+        if self.telemetry is not None:
+            self.telemetry.instant(self.telemetry.engine_track(self),
+                                   "engine_reset", dropped=dropped)
         return dropped
 
     def check_page_invariants(self) -> bool:
@@ -886,6 +905,10 @@ class InferenceEngine:
             except TransientFault as e:
                 self.stats.engine_retries += 1
                 attempts += 1
+                if self.telemetry is not None:
+                    self.telemetry.instant(
+                        self.telemetry.engine_track(self), "retry",
+                        attempt=attempts)
                 if attempts > self.retry_limit:
                     raise EngineFault(
                         f"dispatch fault persisted past {self.retry_limit} "
@@ -893,7 +916,16 @@ class InferenceEngine:
                 if self.retry_backoff_s > 0:
                     import time
                     time.sleep(self.retry_backoff_s * (2 ** (attempts - 1)))
-        return self._execute_plan(plan)
+        tel = self.telemetry
+        if tel is None or tel.trace is None:
+            return self._execute_plan(plan)
+        with tel.trace.span(tel.engine_track(self), "execute",
+                            admissions=len(plan.admissions),
+                            decodes=len(plan.decodes),
+                            frees=len(plan.frees), cancels=len(plan.cancels),
+                            preemptions=len(plan.preemptions),
+                            grows=len(plan.grows)):
+            return self._execute_plan(plan)
 
     def _execute_plan(self, plan) -> "Any":
         import numpy as np
@@ -906,20 +938,28 @@ class InferenceEngine:
             self.free(slot)
         for slot in plan.preemptions:
             self.free(slot)
+        tel = self.telemetry
         failed: set = set()
-        for slot, upto in plan.grows:
-            try:
-                self.grow_slot(slot, upto)
-            except OutOfPages:
-                # injected (or genuinely racy) allocator failure: the slot
-                # is untouched but its next write is unbacked — skip its
-                # chunk/decode this tick and report it for requeue
-                failed.add(slot)
-                res.failed_grows.append(slot)
+        if plan.grows:
+            t0 = tel.t0() if tel is not None else 0.0
+            for slot, upto in plan.grows:
+                try:
+                    self.grow_slot(slot, upto)
+                except OutOfPages:
+                    # injected (or genuinely racy) allocator failure: the
+                    # slot is untouched but its next write is unbacked —
+                    # skip its chunk/decode this tick, report for requeue
+                    failed.add(slot)
+                    res.failed_grows.append(slot)
+            if tel is not None:
+                tel.dispatch_done(self, "grow", len(plan.grows), t0,
+                                  sync=self._slot_cache,
+                                  failed=len(res.failed_grows))
         first = [c for c in plan.admissions if c.slot is None]
         cont = [c for c in plan.admissions if c.slot is not None
                 and c.slot not in failed]
         if first:
+            t0 = tel.t0() if tel is not None else 0.0
             try:
                 slots = self.insert_many(
                     [c.batch for c in first],
@@ -927,20 +967,42 @@ class InferenceEngine:
                     reserve_tokens=[c.reserve_tokens for c in first])
                 res.admitted = {c.rid: s for c, s in zip(first, slots)}
                 res.dispatches += 1
+                if tel is not None:
+                    ntok = sum(int(c.batch["tokens"].shape[1])
+                               for c in first)
+                    tel.dispatch_done(self, "admission_prefill",
+                                      _packed_bucket(ntok), t0,
+                                      sync=(self._slot_cache,
+                                            self._last_tok),
+                                      segs=len(first), tokens=ntok)
             except OutOfPages:
                 # all-or-nothing rollback already ran: no slot was touched;
                 # the planner requeues the whole staged batch
                 res.admission_failed = True
+                if tel is not None:
+                    tel.instant(tel.engine_track(self), "admission_failed",
+                                segs=len(first))
         if cont:
+            t0 = tel.t0() if tel is not None else 0.0
             self.chunk_append([(c.slot, c.batch, c.final) for c in cont])
             res.dispatches += 1
+            if tel is not None:
+                ntok = sum(int(c.batch["tokens"].shape[1]) for c in cont)
+                tel.dispatch_done(self, "chunk_prefill",
+                                  _packed_bucket(ntok), t0,
+                                  sync=(self._slot_cache, self._last_tok),
+                                  segs=len(cont), tokens=ntok)
         decodes = [s for s in plan.decodes if s not in failed]
         if decodes:
+            t0 = tel.t0() if tel is not None else 0.0
             toks, done = self.step(decodes)
             t = np.asarray(toks)
             res.tokens = {int(s): int(t[s]) for s in decodes}
             res.done = list(done)
             res.dispatches += 1
+            if tel is not None:
+                tel.dispatch_done(self, "decode", len(decodes), t0,
+                                  sync=toks)
         return res
 
     def _get_slot_step(self, sampling: Optional[SamplingParams]):

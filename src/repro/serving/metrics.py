@@ -90,6 +90,12 @@ class ModelPoolMetrics:
     chip_seconds: float = 0.0  # allocation-weighted: Σ chips·latency
     tokens: int = 0
     latencies: List[float] = dataclasses.field(default_factory=list)
+    # streaming latency views, mirrored from RequestQueue like latencies:
+    # TTFT (arrival → first token) of completed requests, and mean
+    # time-between-tokens per completed request — the figures that make
+    # chunked-prefill TBT wins visible in PoolResult (ISSUE 7)
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    tbts: List[float] = dataclasses.field(default_factory=list)
 
     def throughput(self, duration: float) -> float:
         return self.completed / duration if duration > 0 else 0.0
@@ -101,6 +107,22 @@ class ModelPoolMetrics:
     @property
     def p99(self) -> float:
         return percentile(self.latencies, 0.99)
+
+    @property
+    def ttft_p50(self) -> float:
+        return percentile(self.ttfts, 0.50)
+
+    @property
+    def ttft_p99(self) -> float:
+        return percentile(self.ttfts, 0.99)
+
+    @property
+    def tbt_p50(self) -> float:
+        return percentile(self.tbts, 0.50)
+
+    @property
+    def tbt_p99(self) -> float:
+        return percentile(self.tbts, 0.99)
 
 
 @dataclasses.dataclass
@@ -155,6 +177,10 @@ class PoolResult:
                 f"    {n:26s} served={m.completed:5d} viol={m.violated:4d} "
                 f"p50={m.p50 * 1e3:7.2f}ms p99={m.p99 * 1e3:7.2f}ms "
                 f"runtime={m.runtime * 1e3:8.2f}ms runs={m.runs}"
+                + (f" ttft_p50={m.ttft_p50 * 1e3:.2f}ms"
+                   f" ttft_p99={m.ttft_p99 * 1e3:.2f}ms"
+                   if m.ttfts else "")
+                + (f" tbt_p50={m.tbt_p50 * 1e3:.2f}ms" if m.tbts else "")
                 + (f" alloc_up={m.alloc_upgrades}"
                    if m.alloc_upgrades else "")
                 + (f" alloc_down={m.alloc_downgrades}"

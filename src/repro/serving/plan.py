@@ -283,6 +283,15 @@ class StepPlanner:
         # terminates there instead of re-entering the queue
         self._cancelled: set = set()
         self._now = 0.0                    # last build() time (victim keys)
+        # telemetry plane (repro.serving.telemetry.Telemetry), set by
+        # EnginePool.attach_telemetry or directly by the tick plane;
+        # None = zero-cost (one attribute check per lifecycle event)
+        self.telemetry = None
+
+    def _tel_event(self, name: str, req: Request, **args) -> None:
+        tel = self.telemetry
+        if tel is not None:
+            tel.request_event(req.model, name, rid=req.rid, **args)
 
     # ------------------------------------------------------- tick plane
     def submit(self, req: Request, batch) -> bool:
@@ -295,8 +304,10 @@ class StepPlanner:
         if self.should_shed():
             self.queue.shed_request(req)
             self.metrics.shed = self.queue.shed
+            self._tel_event("shed", req)
             return False
         self.queue.push(req)
+        self._tel_event("queued", req)
         self._prompts[req.rid] = batch
         return True
 
@@ -540,6 +551,7 @@ class StepPlanner:
         plan.grows = [(s, u) for s, u in plan.grows if s != slot]
         plan.admissions = [c for c in plan.admissions if c.slot != slot]
         self.metrics.preemptions += 1
+        self._tel_event("preempt", r.req, slot=slot)
         self._requeue(r.req)
         return credit
 
@@ -557,6 +569,8 @@ class StepPlanner:
                 self.queue.mark_cancelled(r.req)
             else:
                 self.queue.abort_deadline(r.req)
+        self._tel_event("cancel" if cancelled else "deadline_abort",
+                        r.req, slot=slot)
 
     def _requeue(self, req: Request) -> None:
         """Recompute-requeue: the stream restarts from scratch on
@@ -565,6 +579,7 @@ class StepPlanner:
         re-entering the queue — cancellation wins over recovery."""
         rid = req.rid
         self.streams[rid] = []
+        req.reset_stream()        # recompute discards streaming progress
         if rid in self._cancelled:
             self._cancelled.discard(rid)
             self._prompts.pop(rid, None)
@@ -574,6 +589,7 @@ class StepPlanner:
         if self.queue is not None:
             self.queue.push(req)
         self.metrics.requeues += 1
+        self._tel_event("requeue", req)
 
     def recover(self, now: float) -> int:
         """Planner half of the engine-reset path (retries exhausted or a
@@ -735,13 +751,19 @@ class StepPlanner:
             slot = res.admitted.get(r.req.rid)
             if slot is not None:
                 self._resident[slot] = r
+                self._tel_event("admitted", r.req, slot=slot)
             else:
                 self._requeue(r.req)
         self._staged = []
         for slot, tok in res.tokens.items():
             r = self._resident.get(slot)
             if r is not None:
-                self.streams[r.req.rid].append(tok)
+                req = r.req
+                if req.first_token < 0:
+                    req.first_token = now
+                    self._tel_event("first_token", req)
+                req.tokens_out += 1
+                self.streams[req.rid].append(tok)
         completed: List[Request] = []
         for slot in res.done:
             r = self._resident.pop(slot, None)
@@ -754,6 +776,8 @@ class StepPlanner:
             self._prompts.pop(r.req.rid, None)
         if completed and self.queue is not None:
             self.queue.complete(completed, now)
+        for req in completed:
+            self._tel_event("complete", req)
         if self.queue is not None:
             # the queue's per-cause counters are the accounting source of
             # truth; the metrics mirror them for PoolResult surfacing
@@ -906,6 +930,14 @@ class TickServer:
         # counterpart of tick_walls: what chunking actually bounds)
         self.tick_prefill: List[int] = []
         self._next_tick = 0.0
+        q = planner.queue
+        self._track = (f"tick/{q.model}" if q is not None
+                       else f"tick/{planner.engine.cfg.name}")
+
+    @property
+    def telemetry(self):
+        """The planner's telemetry plane (read by the core event loop)."""
+        return self.planner.telemetry
 
     # ----------------------------------------------------- EventLoopHooks
     def deliver(self, req: Request) -> None:
@@ -932,16 +964,29 @@ class TickServer:
         self._mirror_fault_stats()
 
     def fire(self, now: float, epsilon: float = 1e-12) -> int:
-        import time as _time
         if not self.planner.busy():
             return 0
+        tel = self.planner.telemetry
+        if tel is None or tel.trace is None:
+            return self._fire(now, None)
+        # one span per executed tick on the server's own track; the
+        # engine's execute/dispatch spans nest on the engine track
+        with tel.trace.span(self._track, "tick", tick=self.ticks):
+            return self._fire(now, tel.trace)
+
+    def _fire(self, now: float, trace) -> int:
+        import time as _time
         # the tick always reschedules, whatever happens below — a faulted
         # tick that forgot to advance _next_tick would spin the loop at
         # one instant until the max_events backstop
         self._next_tick = now + self.tick_dt
         if self.on_tick is not None:
             self.on_tick(self, now)
-        plan = self.planner.build(now)
+        if trace is None:
+            plan = self.planner.build(now)
+        else:
+            with trace.span(self._track, "plan"):
+                plan = self.planner.build(now)
         eng = self.planner.engine
         if self.faults is not None and self.faults.stuck():
             # watchdog-killed tick: the plan's bookkeeping was already

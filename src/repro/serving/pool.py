@@ -154,6 +154,10 @@ class EnginePool:
         self._occ_area = 0.0
         self._page_area = 0.0
         self._last_t = 0.0
+        # telemetry plane (attach_telemetry): shared across every engine
+        # and per-model planner; reset() re-propagates it to the fresh
+        # planners. None = disabled (zero-cost attribute checks).
+        self.telemetry = None
         self.reset()
 
     # ------------------------------------------------- SchedView protocol
@@ -185,10 +189,26 @@ class EnginePool:
         self._occ_area = 0.0
         self._page_area = 0.0
         self._last_t = 0.0
+        for p in self._planners.values():
+            p.telemetry = self.telemetry
         for host in self.hosts.values():
             for eng in host.engines():
                 eng.release_all_slots()
                 eng.reset_stats()
+
+    def attach_telemetry(self, tel) -> None:
+        """Arm (or with None, disarm) one shared ``Telemetry`` plane
+        across the pool: every standby engine (timed, traced dispatches)
+        and every per-model planner (lifecycle instants). Survives
+        ``reset()`` — run_policy's reset re-propagates it — so attach
+        once, serve many policies. Attach AFTER warmup, like
+        ``attach_faults``."""
+        self.telemetry = tel
+        for p in self._planners.values():
+            p.telemetry = tel
+        for host in self.hosts.values():
+            for eng in host.engines():
+                eng.attach_telemetry(tel)
 
     def warmup(self) -> None:
         """Compile every standby engine's admission-prefill + slot-step
@@ -257,8 +277,12 @@ class EnginePool:
         frac = used / total if total else 0.0
         if planner.should_shed(queue_len=len(q), page_frac=frac):
             q.shed_request(req)
+            if self.telemetry is not None:
+                self.telemetry.request_event(req.model, "shed", rid=req.rid)
             return
         q.push(req)
+        if self.telemetry is not None:
+            self.telemetry.request_event(req.model, "queued", rid=req.rid)
 
     def cancel(self, model: str, rid: int, now: float = 0.0) -> bool:
         """Client cancellation at the pool plane: a queued request is
@@ -270,6 +294,8 @@ class EnginePool:
         if q is None:
             return False
         if q.cancel(rid) is not None:
+            if self.telemetry is not None:
+                self.telemetry.request_event(model, "cancel", rid=rid)
             return True
         for run in self._runs.values():
             if run.model != model:
@@ -281,6 +307,9 @@ class EnginePool:
                     run.engine.free(slot)
                     run.freed_early = True    # topup may refill the slot
                     q.mark_cancelled(req)
+                    if self.telemetry is not None:
+                        self.telemetry.request_event(model, "cancel",
+                                                     rid=rid, slot=slot)
                     return True
         return False
 
@@ -407,6 +436,10 @@ class EnginePool:
             slot = sres.admitted[req.rid]
             run.slots[slot] = req
             run.remaining[slot] = budget
+            if self.telemetry is not None:
+                self.telemetry.request_event(rr.model, "admitted",
+                                             rid=req.rid, slot=slot,
+                                             chips=alloc.chips)
         m = self._metrics[rr.model]
         self._seq += 1
         self._runs[run.seq] = run
@@ -455,6 +488,10 @@ class EnginePool:
                 slot = sres.admitted[req.rid]
                 run.slots[slot] = req
                 run.remaining[slot] = budget
+                if self.telemetry is not None:
+                    self.telemetry.request_event(run.model, "admitted",
+                                                 rid=req.rid, slot=slot,
+                                                 chips=run.chips)
             m = self._metrics[run.model]
             extension = max(0, max(run.remaining.values()) - before)
             m.topups += len(kept)
@@ -482,10 +519,14 @@ class EnginePool:
         run.remaining.pop(victim, None)
         run.engine.free(victim)
         run.freed_early = True           # topup may refill the freed slot
+        req.reset_stream()               # recompute restarts the stream
         self.queues[run.model].push(req)
         m = self._metrics[run.model]
         m.preemptions += 1
         m.requeues += 1
+        if self.telemetry is not None:
+            self.telemetry.request_event(run.model, "preempt",
+                                         rid=req.rid, slot=victim)
 
     def _engine_reset(self, model: str, eng: InferenceEngine,
                       kept=None) -> None:
@@ -499,11 +540,13 @@ class EnginePool:
         q = self.queues[model]
         m = self._metrics[model]
         for req, _ in kept or []:
+            req.reset_stream()
             q.push(req)
             m.requeues += 1
         for seq, run in list(self._runs.items()):
             if run.engine is eng:
                 for req in run.slots.values():
+                    req.reset_stream()
                     q.push(req)
                     m.requeues += 1
                 del self._runs[seq]
@@ -545,6 +588,15 @@ class EnginePool:
         except EngineFault:
             self._engine_reset(run.model, eng)
             return True
+        for slot in res.tokens:
+            req = run.slots.get(slot)
+            if req is not None:
+                if req.first_token < 0:
+                    req.first_token = now
+                    if self.telemetry is not None:
+                        self.telemetry.request_event(
+                            run.model, "first_token", rid=req.rid)
+                req.tokens_out += 1
         done = res.done
         completed: List[Request] = []
         for slot in done:
@@ -559,6 +611,10 @@ class EnginePool:
         self._metrics[run.model].tokens += len(completed) + len(run.remaining)
         if completed:
             self.queues[run.model].complete(completed, now)
+            if self.telemetry is not None:
+                for req in completed:
+                    self.telemetry.request_event(run.model, "complete",
+                                                 rid=req.rid)
             if run.remaining:
                 run.freed_early = True
         if not run.remaining:
@@ -597,6 +653,8 @@ class EnginePool:
             m.engine_resets = sum(e.stats.engine_resets
                                   for e in self.hosts[n].engines())
             m.latencies = list(q.latencies)
+            m.ttfts = list(q.ttfts)
+            m.tbts = list(q.tbts)
             per[n] = m
         duration = duration or 1e-9
         return PoolResult(policy=policy, duration=duration, wall_s=wall_s,

@@ -35,10 +35,23 @@ class Request:
     # recompute from scratch. The queue's per-cause counters (not this
     # field) are the accounting source of truth; state is introspection.
     state: str = dataclasses.field(compare=False, default="pending")
+    # streaming progress: virtual time the FIRST decode token was
+    # observed (-1.0 = none yet) and tokens emitted so far. Reset on
+    # every requeue (preemption / failed grow / engine reset) — recompute
+    # discards emitted tokens, so TTFT is the time to the first token of
+    # the attempt that actually completed, matching what a streaming
+    # client replaying the stream would see.
+    first_token: float = dataclasses.field(compare=False, default=-1.0)
+    tokens_out: int = dataclasses.field(compare=False, default=0)
 
     @property
     def deadline(self) -> float:
         return self.arrival + self.slo
+
+    def reset_stream(self) -> None:
+        """Forget streaming progress on requeue-for-recompute."""
+        self.first_token = -1.0
+        self.tokens_out = 0
 
 
 class RequestQueue:
@@ -63,8 +76,18 @@ class RequestQueue:
         # p50/p99 reporting (paper §7 tables). O(completed) memory, so the
         # analytic simulator (which never reads it) opts out.
         self.latencies: List[float] = []
+        # TTFT (arrival → first token) per terminal cause, and mean
+        # time-between-tokens for completed requests — the streaming
+        # latency figures end-to-end latency hides (a chunked-prefill win
+        # shows up here, not in `latencies`). Same track_latency opt-out.
+        self.ttft_by_cause: Dict[str, List[float]] = {}
+        self.tbts: List[float] = []
 
     def push(self, req: Request) -> None:
+        # (re-)entering the queue always discards streaming progress:
+        # requeued requests recompute from scratch, and test harnesses
+        # re-serve the same Request objects across runs
+        req.reset_stream()
         heapq.heappush(self._q, req)
 
     def __len__(self) -> int:
@@ -93,6 +116,16 @@ class RequestQueue:
             batch.append(req)
         return batch
 
+    @property
+    def ttfts(self) -> List[float]:
+        """TTFT samples of COMPLETED requests (the headline figure)."""
+        return self.ttft_by_cause.get("completed", [])
+
+    def _record_ttft(self, cause: str, req: Request) -> None:
+        if self.track_latency and req.first_token >= req.arrival:
+            self.ttft_by_cause.setdefault(cause, []).append(
+                req.first_token - req.arrival)
+
     # ------------------------------------------- lifecycle terminal causes
     def cancel(self, rid: int) -> Optional[Request]:
         """Remove a still-QUEUED request by rid (client disconnect before
@@ -114,6 +147,7 @@ class RequestQueue:
         the client walked away, the system didn't fail it."""
         req.state = "cancelled"
         self.cancelled += 1
+        self._record_ttft("cancelled", req)
 
     def abort_deadline(self, req: Request) -> None:
         """Terminal accounting for a resident evicted past its deadline —
@@ -121,6 +155,7 @@ class RequestQueue:
         req.state = "deadline_aborted"
         self.deadline_aborted += 1
         self.violated += 1
+        self._record_ttft("deadline_aborted", req)
 
     def shed_request(self, req: Request) -> None:
         """Terminal accounting for a request refused at admission under
@@ -140,6 +175,10 @@ class RequestQueue:
             self.completed += 1
             if self.track_latency:
                 self.latencies.append(finish_time - req.arrival)
+                self._record_ttft("completed", req)
+                if req.tokens_out > 1 and req.first_token >= 0:
+                    self.tbts.append((finish_time - req.first_token)
+                                     / (req.tokens_out - 1))
             if finish_time > req.deadline:
                 self.late += 1
                 self.violated += 1

@@ -471,6 +471,33 @@ def test_chaos_acceptance(engine):
     assert (q2.completed, q2.cancelled, q2.deadline_aborted, q2.shed,
             q2.dropped) == (q.completed, q.cancelled, q.deadline_aborted,
                             q.shed, q.dropped)
+    # 7. observability (ISSUE 7): the Prometheus exposition preserves
+    #    conservation — per-cause terminal counters exported as
+    #    dstack_requests_total still sum to the offered load after the
+    #    render/parse round trip, and the injector's per-site fault
+    #    counts plus engine retries/resets all surface in the snapshot
+    from repro.serving.telemetry import (MetricsRegistry,
+                                         export_engine_stats,
+                                         export_fault_injector,
+                                         export_queue, parse_prometheus)
+    reg = MetricsRegistry()
+    export_queue(reg, q2)
+    export_engine_stats(reg, eng.stats, cfg.name)
+    export_fault_injector(reg, inj2)
+    parsed = parse_prometheus(reg.render())
+    exported = sum(v for (name, _), v in parsed.items()
+                   if name == "dstack_requests_total")
+    assert exported == len(reqs), parsed
+    for site, n in inj2.injected.items():
+        assert parsed[("dstack_faults_injected_total",
+                       (("site", site),))] == n
+    retries = sum(v for (name, _), v in parsed.items()
+                  if name == "dstack_engine_retries_total")
+    resets = sum(v for (name, _), v in parsed.items()
+                 if name == "dstack_engine_resets_total")
+    assert retries == eng.stats.engine_retries
+    assert resets == eng.stats.engine_resets
+    assert retries + resets > 0 or srv.stuck_ticks > 0
 
 
 # ---------------------------------------------------------------------------
