@@ -167,6 +167,25 @@ def run_with_results(quick: bool = True):
     assert m.preemptions > 0 and m.requeues > 0, \
         "lazy pool never exercised preempt-and-requeue"
     assert lazy.jit_cache_sizes() == jb, "lazy serving recompiled"
+
+    # radix prompt cache pool: pool prompts share their template by
+    # construction, so every admission after the first can alias the
+    # cached prefix pages. The gate here is the serving discipline —
+    # hits, COW copies, and teacher-forced catch-up all ride executables
+    # warmed up front (warm_prefix_ops), 0 recompiles; the token-savings
+    # and bit-exactness bars live in bench_decode --shared-prefix
+    t0 = time.time()
+    pfx = build_pool(["olmo-1b"], request_rate=rate, base_slots=4,
+                     cache_len=64, prompt_len=24, prefix_cache=True)
+    jb = pfx.jit_cache_sizes()
+    res = run_policy(pfx, "dstack", rate=rate, duration=duration,
+                     gen_len=4)
+    m = res.per_model["olmo-1b"]
+    rows.append(("pool/prefix_cache/hits", (time.time() - t0) * 1e6,
+                 f"hits={m.prefix_hits} aliased={m.prefix_hit_tokens}tok "
+                 f"cow={m.cow_copies} served={m.completed}"))
+    assert m.prefix_hits > 0, "prefix-cache pool never hit"
+    assert pfx.jit_cache_sizes() == jb, "prefix-cache serving recompiled"
     return rows, results
 
 

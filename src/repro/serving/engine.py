@@ -136,6 +136,16 @@ class EngineStats:
     # or a stuck tick) that dropped all slot state for recompute-requeue
     engine_retries: int = 0
     engine_resets: int = 0
+    # radix prompt cache (ISSUE 8): admissions whose prompt prefix was
+    # aliased from cached pages instead of prefilled, the prompt tokens
+    # those hits skipped, copy-on-write page copies (a hit ending inside
+    # a page), and the teacher-forced catch-up tokens hit admissions
+    # consumed through the decode dispatch (they ride `step` but are
+    # prefill progress, not generated output — kept out of tokens_out)
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+    cow_copies: int = 0
+    forced_catchup_tokens: int = 0
 
 
 class InferenceEngine:
@@ -195,6 +205,13 @@ class InferenceEngine:
         # chunk continuation (prefix recompute) reuses _packed_prefill_jit
         # and _write_segments — chunked serving compiles nothing new
         self._set_table_row = None         # built by init_slots(paged=True)
+        # radix prompt cache (enable_prefix_cache): host-side radix tree
+        # over the page allocator, plus the two static-shape executables
+        # hit admissions dispatch — a COW page copy and the combined
+        # table-row + position write
+        self.prefix_cache = None
+        self._copy_page = None
+        self._alias_slot = None
 
         # slot state (populated by init_slots)
         self.paged = False
@@ -409,6 +426,11 @@ class InferenceEngine:
         self.slot_len = cache_len or self.cache_len
         self.paged = (bool(paged) and bool(self.api.paged_keys)
                       and not getattr(self.cfg, "sliding_window", 0))
+        # re-initializing slots invalidates any attached prefix cache
+        # (page pool and page size may change) — re-enable explicitly
+        self.prefix_cache = None
+        self._copy_page = None
+        self._alias_slot = None
         self._slot_sampling = sampling
         self._slot_rng = jax.random.PRNGKey(rng_seed)
         if self.paged:
@@ -718,6 +740,148 @@ class InferenceEngine:
         else:
             self._slot_cache["pos"] = self._slot_cache["pos"].at[slot].set(0)
 
+    # ------------------------------------------- radix prompt cache
+    def prefix_cache_capable(self) -> bool:
+        """A family can prefix-share iff pages + ``pos`` are a row's
+        ENTIRE sequence state — i.e. the paged slot cache carries exactly
+        the paged K/V leaves plus ``block_tables``/``pos``. Families with
+        extra per-row leaves (SSM state, conv tails, cross K/V) fold the
+        whole prefix into non-shareable state, so aliasing pages would
+        not skip their prefill."""
+        if not self.paged or self._slot_cache is None:
+            return False
+        extra = (set(self._slot_cache.keys())
+                 - set(self.api.paged_keys) - {"block_tables", "pos"})
+        return not extra
+
+    def enable_prefix_cache(self):
+        """Attach a radix prompt cache over this engine's page allocator
+        and build the two hit-admission executables (COW page copy,
+        combined table-row + position write). Raises for incapable
+        families — callers that want best-effort use
+        ``prefix_cache_capable`` first."""
+        if not self.prefix_cache_capable():
+            raise ValueError(
+                f"{self.cfg.name}: prefix cache needs a paged engine whose "
+                "per-row state is exactly pages + pos (families with SSM "
+                "state / conv tails / cross K/V cannot alias their prefix)")
+        from repro.serving.prefix_cache import PrefixCache
+        self.prefix_cache = PrefixCache(self._kv.allocator, self.page_size)
+        if self._copy_page is None:
+            self._copy_page = jax.jit(_make_copy_page(self.api.paged_keys),
+                                      donate_argnums=(0,))
+            self._alias_slot = jax.jit(_alias_slot, donate_argnums=(0,))
+        return self.prefix_cache
+
+    def warm_prefix_ops(self) -> None:
+        """Compile the hit-admission executables up front (the pool/bench
+        0-recompile discipline): the COW copy warms null-page → null-page
+        (dead by convention), the alias write warms against a vacant
+        slot's existing parked state (null table row, position 0) so
+        warming is a no-op on serving state."""
+        if self.prefix_cache is None:
+            return
+        self._slot_cache = self._copy_page(
+            self._slot_cache, jnp.int32(NULL_PAGE), jnp.int32(NULL_PAGE))
+        if self._slot_free:
+            slot = self._slot_free[0]
+            null_row = jnp.full((self.max_pages,), NULL_PAGE, jnp.int32)
+            self._slot_cache = self._alias_slot(
+                self._slot_cache, jnp.int32(slot), null_row, jnp.int32(0))
+
+    def slot_pages(self, slot: int) -> List[int]:
+        """Physical pages backing a slot, in logical order (the prefix
+        cache registers a finished prefill's leading pages)."""
+        return self._kv.pages(slot) if self.paged else []
+
+    def alias_admit(self, batch: Dict[str, Any], hit,
+                    n_tokens: Optional[int] = None,
+                    reserve_tokens: Optional[int] = None) -> int:
+        """Admit one request whose prompt prefix is a cache hit — ZERO
+        prefill dispatches for the covered tokens.
+
+        ``hit`` is a pinned ``PrefixHit`` from ``prefix_cache.match``:
+        its fully-covered pages alias read-only into the new slot's block
+        table (the row adopts the match-time pins), a partial-page match
+        is copied into the row's first fresh page (one static-shape COW
+        dispatch; the pin on the source releases after the copy), and the
+        remaining horizon allocates fresh pages all-or-nothing. The slot
+        starts at ``pos = covered`` with ``last_tok`` = the first
+        uncovered prompt token, so teacher-forced catch-up steps (the
+        planner's ``StepPlan.forced``, or ``catchup_prefill``) replay the
+        prompt tail through the regular decode dispatch — each step
+        writes K/V at exactly the position whole-prompt prefill would
+        have, and the final forced step leaves ``last_tok`` = argmax over
+        the full prompt, exactly what ``insert`` seeds. Hit admissions
+        are therefore bit-exact with cache-off admission by construction.
+
+        Raises ``OutOfPages`` with nothing changed (the caller keeps the
+        hit's pins and must ``release_hit`` it)."""
+        if not self._slot_free:
+            raise RuntimeError("no free slots")
+        assert self.prefix_cache is not None, "enable_prefix_cache first"
+        assert batch["tokens"].shape[0] == 1, "alias_admit admits one request"
+        s = int(batch["tokens"].shape[1])
+        covered = int(hit.covered)
+        assert 0 < covered < s, \
+            f"hit covers {covered} of a {s}-token prompt"
+        if s >= self.slot_len:
+            raise ValueError(
+                f"prompt of {s} tokens leaves no decode room in a "
+                f"{self.slot_len}-token paged slot (pages are never "
+                f"evicted; use a longer cache_len)")
+        room = self.slot_len - s
+        budget = room if n_tokens is None else max(1, min(int(n_tokens),
+                                                          room))
+        horizon = s + budget if reserve_tokens is None else max(
+            covered + 1, min(int(reserve_tokens), self.slot_len))
+        slot = self._slot_free[0]          # claim only after pages are ours
+        fresh = self._kv.alloc_alias(slot, hit.pages, horizon)
+        self._slot_free.pop(0)
+        if hit.cow_src is not None:
+            # the partially-matched page copies into the row's first page
+            # past the aliased prefix; the divergent suffix inside it is
+            # stale but never read (attention masks by pos) and is
+            # overwritten in order by the forced catch-up writes
+            self._slot_cache = self._copy_page(
+                self._slot_cache, jnp.int32(hit.cow_src),
+                jnp.int32(fresh[0]))
+            self._kv.allocator.release([hit.cow_src])
+            self.stats.cow_copies += 1
+        row = jnp.asarray(self._kv.table_row(slot), jnp.int32)
+        self._slot_cache = self._alias_slot(
+            self._slot_cache, jnp.int32(slot), row, jnp.int32(covered))
+        import numpy as np
+        toks = np.asarray(batch["tokens"])[0]
+        self._last_tok = self._last_tok.at[slot].set(
+            jnp.int32(int(toks[covered])))
+        self._slot_active[slot] = True
+        self._slot_budget[slot] = budget
+        self._slot_generated[slot] = 0
+        self._slot_pos[slot] = covered
+        self._active_mask = self._active_mask.at[slot].set(True)
+        self.stats.inserts += 1
+        self.stats.prefix_hits += 1
+        self.stats.prefix_hit_tokens += covered
+        if self.telemetry is not None:
+            self.telemetry.instant(
+                self.telemetry.engine_track(self), "prefix_hit",
+                slot=slot, covered=covered,
+                cow=int(hit.cow_src is not None))
+        return slot
+
+    def catchup_prefill(self, slot: int, tokens, covered: int) -> None:
+        """Teacher-forced completion of an aliased prompt, one decode
+        dispatch per remaining token (the pool plane's eager form; the
+        tick plane spreads the same steps across ticks via
+        ``StepPlan.forced``). After the loop the slot sits exactly where
+        a whole-prompt insert would: ``pos = len(tokens)``, ``last_tok``
+        = argmax over the full prompt."""
+        for i in range(int(covered), len(tokens)):
+            self._last_tok = self._last_tok.at[slot].set(
+                jnp.int32(int(tokens[i])))
+            self.step([slot], forced={slot})
+
     # -------------------------------------------- lazy page reservation
     def slot_pos(self, slot: int) -> int:
         """Tokens written to the slot so far (host mirror of pos)."""
@@ -868,7 +1032,11 @@ class InferenceEngine:
         pages, live rows match the allocator). No-op for ring engines."""
         if not self.paged:
             return True
-        self._kv.check_invariants()
+        extra = (self.prefix_cache.page_refs()
+                 if self.prefix_cache is not None else None)
+        self._kv.check_invariants(extra_refs=extra)
+        if self.prefix_cache is not None:
+            self.prefix_cache.check_invariants()
         for slot in self._slot_free:
             assert not self._kv.pages(slot), \
                 f"vacant slot {slot} still owns pages"
@@ -955,9 +1123,28 @@ class InferenceEngine:
                 tel.dispatch_done(self, "grow", len(plan.grows), t0,
                                   sync=self._slot_cache,
                                   failed=len(res.failed_grows))
-        first = [c for c in plan.admissions if c.slot is None]
+        alias = [c for c in plan.admissions
+                 if c.slot is None and getattr(c, "alias", None) is not None]
+        first = [c for c in plan.admissions
+                 if c.slot is None and getattr(c, "alias", None) is None]
         cont = [c for c in plan.admissions if c.slot is not None
                 and c.slot not in failed]
+        for c in alias:
+            # prefix-cache hit: zero model dispatches — at most one COW
+            # page copy plus one table-row/pos write, both warm. Each hit
+            # consumes its match-time pins; on OutOfPages (fresh tail
+            # pages) nothing changed, so the pins return to the cache and
+            # the planner requeues the request like any failed admission
+            try:
+                slot = self.alias_admit(c.batch, c.alias,
+                                        n_tokens=c.n_tokens,
+                                        reserve_tokens=c.reserve_tokens)
+                res.admitted[c.rid] = slot
+            except OutOfPages:
+                self.prefix_cache.release_hit(c.alias)
+                if tel is not None:
+                    tel.instant(tel.engine_track(self),
+                                "alias_admission_failed", rid=c.rid)
         if first:
             t0 = tel.t0() if tel is not None else 0.0
             try:
@@ -965,7 +1152,8 @@ class InferenceEngine:
                     [c.batch for c in first],
                     n_tokens=[c.n_tokens for c in first],
                     reserve_tokens=[c.reserve_tokens for c in first])
-                res.admitted = {c.rid: s for c, s in zip(first, slots)}
+                res.admitted.update(
+                    {c.rid: s for c, s in zip(first, slots)})
                 res.dispatches += 1
                 if tel is not None:
                     ntok = sum(int(c.batch["tokens"].shape[1])
@@ -993,16 +1181,27 @@ class InferenceEngine:
                                   sync=(self._slot_cache, self._last_tok),
                                   segs=len(cont), tokens=ntok)
         decodes = [s for s in plan.decodes if s not in failed]
-        if decodes:
+        forced = [(s, t) for s, t in getattr(plan, "forced", [])
+                  if s not in failed]
+        if decodes or forced:
             t0 = tel.t0() if tel is not None else 0.0
-            toks, done = self.step(decodes)
+            # teacher-forced catch-up slots join THE decode dispatch: the
+            # planner pre-picked this tick's prompt token per slot; the
+            # masked step writes its K/V at pos (exactly what prefill
+            # would write there) and advances pos. Forced outputs never
+            # reach res.tokens — nothing was generated for the stream
+            for s, t in forced:
+                self._last_tok = self._last_tok.at[s].set(jnp.int32(int(t)))
+            toks, done = self.step(decodes + [s for s, _ in forced],
+                                   forced={s for s, _ in forced})
             t = np.asarray(toks)
             res.tokens = {int(s): int(t[s]) for s in decodes}
             res.done = list(done)
             res.dispatches += 1
             if tel is not None:
-                tel.dispatch_done(self, "decode", len(decodes), t0,
-                                  sync=toks)
+                tel.dispatch_done(self, "decode",
+                                  len(decodes) + len(forced), t0,
+                                  sync=toks, forced=len(forced))
         return res
 
     def _get_slot_step(self, sampling: Optional[SamplingParams]):
@@ -1024,7 +1223,8 @@ class InferenceEngine:
             self._slot_step_jit[sampling] = fn
         return fn
 
-    def step(self, slots: Optional[List[int]] = None
+    def step(self, slots: Optional[List[int]] = None,
+             forced: Optional[set] = None
              ) -> Tuple[jax.Array, List[int]]:
         """One decode step in a single dispatch — for all active slots
         (default) or only the plan's ``decodes`` subset.
@@ -1037,7 +1237,14 @@ class InferenceEngine:
         done flags are host-side counters, so reading them never syncs
         the device. The step mask is an INPUT to one shared executable:
         stepping a subset (the plan API excludes mid-prefill slots)
-        retraces nothing."""
+        retraces nothing.
+
+        Slots in ``forced`` are teacher-forced prompt catch-up (a prefix-
+        cache hit replaying its uncovered tail): the caller pre-loaded
+        the slot's ``last_tok`` with a prompt token, the step writes that
+        token's K/V and advances ``pos`` exactly like prefill would, but
+        the slot's generated counter — and the emitted-token accounting —
+        are untouched: nothing was sampled for the stream."""
         import numpy as np
         if slots is None:
             mask = self._active_mask
@@ -1048,6 +1255,7 @@ class InferenceEngine:
                 m[s] = self._slot_active[s]
             mask = jnp.asarray(m)
             stepped = [s for s in slots if self._slot_active[s]]
+        forced = forced or set()
         fn = self._get_slot_step(self._slot_sampling)
         if self._slot_sampling is None:
             tok, self._slot_cache = fn(
@@ -1057,9 +1265,13 @@ class InferenceEngine:
             tok, self._slot_cache = fn(
                 self.params, self._last_tok, self._slot_cache, mask, sub)
         self._last_tok = tok
+        n_forced = 0
         for slot in stepped:
-            self._slot_generated[slot] += 1
             self._slot_pos[slot] += 1
+            if slot in forced:
+                n_forced += 1
+            else:
+                self._slot_generated[slot] += 1
         done: List[int] = []
         for slot, active in enumerate(self._slot_active):
             if active:
@@ -1067,7 +1279,8 @@ class InferenceEngine:
                 if budget is not None and self._slot_generated[slot] >= budget:
                     done.append(slot)
         self.stats.decode_steps += 1
-        self.stats.tokens_out += len(stepped)
+        self.stats.tokens_out += len(stepped) - n_forced
+        self.stats.forced_catchup_tokens += n_forced
         return tok, done
 
     def slot_active(self, slot: int) -> bool:
@@ -1094,6 +1307,12 @@ class InferenceEngine:
         for slot, active in enumerate(self._slot_active):
             if active:
                 self.free(slot)
+        if self.prefix_cache is not None:
+            # the cache's held references die with the reset: a replayed
+            # seeded run must start from a cold cache (hit patterns are
+            # deterministic but history-dependent), and recover()'s page-
+            # conservation assert requires every reference returned
+            self.prefix_cache.flush()
         self._slot_free.sort()
         if self.paged:
             self._kv.allocator.sort_free()
@@ -1136,6 +1355,9 @@ class InferenceEngine:
             out["write_slot_paged"] = n(self._write_slot_paged)
             out["clear_slot"] = n(self._clear_slot)
             out["set_table_row"] = n(self._set_table_row)
+        if self._copy_page is not None:
+            out["copy_page"] = n(self._copy_page)
+            out["alias_slot"] = n(self._alias_slot)
         return out
 
 
@@ -1266,6 +1488,38 @@ def _set_table_row(cache, slot, table_row):
     (max_pages,) vector — so growth never retraces."""
     cache = dict(cache)
     cache["block_tables"] = cache["block_tables"].at[slot].set(table_row)
+    return cache
+
+
+def _make_copy_page(paged_keys):
+    """Build the copy-on-write page copy: every paged K/V leaf copies
+    physical page ``src`` onto ``dst`` — one static-shape executable
+    regardless of which pages are involved, so a stream of COW hits
+    compiles exactly once. The alias path dispatches it at most once per
+    hit admission (only when the match ends inside a page)."""
+    paged_keys = frozenset(paged_keys)
+
+    def copy(cache, src, dst):
+        out = dict(cache)
+        for key in sorted(paged_keys):
+            leaf = out[key]                   # (layers, pages, page_size, …)
+            page = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=1)
+            out[key] = jax.lax.dynamic_update_slice_in_dim(
+                leaf, page, dst, axis=1)
+        return out
+
+    return copy
+
+
+def _alias_slot(cache, slot, table_row, pos):
+    """Point a hit admission's slot at its aliased + fresh pages and set
+    its position to the covered prefix length — the ONLY device writes a
+    fully-page-aligned hit needs (COW adds one page copy). Like
+    ``_set_table_row``, the row is the full padded (max_pages,) vector:
+    one static shape for every hit."""
+    cache = dict(cache)
+    cache["block_tables"] = cache["block_tables"].at[slot].set(table_row)
+    cache["pos"] = cache["pos"].at[slot].set(pos)
     return cache
 
 

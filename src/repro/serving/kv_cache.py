@@ -76,6 +76,12 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages, 0, -1))  # pop() -> 1 first
         self._allocated: set = set()
+        # per-page reference counts (prefix sharing): every allocated page
+        # has a count >= 1; ``share`` adds holders, ``release`` drops them
+        # and returns the page to the pool at zero. ``free`` stays the
+        # strict single-owner path (it refuses shared pages), so legacy
+        # callers cannot silently tear a page out from under a co-holder.
+        self._ref: Dict[int, int] = {}
         # duck-typed hook (repro.serving.faults.FaultInjector): when set,
         # alloc may raise an injected OutOfPages before touching the pool
         self.fault_injector = None
@@ -103,18 +109,59 @@ class PageAllocator:
                 f"of {self.num_pages}")
         pages = [self._free.pop() for _ in range(n)]
         self._allocated.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
     def free(self, pages: Sequence[int]) -> None:
-        """Return pages to the pool. Double-frees and frees of the null
-        page are errors (they would alias two sequences onto one page)."""
+        """Return pages to the pool. Double-frees, frees of the null page,
+        and frees of a page another holder still references are errors
+        (they would alias two sequences onto one page)."""
         for p in pages:
             if p == NULL_PAGE:
                 raise ValueError("cannot free the reserved null page")
             if p not in self._allocated:
                 raise ValueError(f"page {p} is not allocated")
+            if self._ref.get(p, 1) != 1:
+                raise ValueError(
+                    f"page {p} has {self._ref[p]} holders — use release()")
+            self._ref.pop(p, None)
             self._allocated.remove(p)
             self._free.append(p)
+
+    # ------------------------------------------------------ prefix sharing
+    def refcount(self, page: int) -> int:
+        """Current holder count for a page (0 when not allocated)."""
+        return self._ref.get(page, 0)
+
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one holder to each page (prefix-cache aliasing). Sharing an
+        unallocated page or the null page is an error — a holder can only
+        piggyback on a page that already has an owner."""
+        for p in pages:
+            if p == NULL_PAGE:
+                raise ValueError("cannot share the reserved null page")
+            if p not in self._allocated:
+                raise ValueError(f"page {p} is not allocated")
+            self._ref[p] += 1
+
+    def release(self, pages: Sequence[int]) -> int:
+        """Drop one holder from each page; pages whose count reaches zero
+        return to the pool. Returns how many pages were actually freed
+        (the planner's eviction loop needs real pages, not dropped refs)."""
+        freed = 0
+        for p in pages:
+            if p == NULL_PAGE:
+                raise ValueError("cannot release the reserved null page")
+            if p not in self._allocated:
+                raise ValueError(f"page {p} is not allocated")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._allocated.remove(p)
+                self._free.append(p)
+                freed += 1
+        return freed
 
     def sort_free(self) -> None:
         """Restore the canonical free-list order (descending ids, so
@@ -141,6 +188,11 @@ class PageAllocator:
         assert all(1 <= p <= self.num_pages
                    for p in list(free) + list(self._allocated)), \
             "page id out of range"
+        assert set(self._ref) == self._allocated, (
+            "refcount keys and allocated set disagree: "
+            f"{sorted(set(self._ref) ^ self._allocated)}")
+        assert all(c >= 1 for c in self._ref.values()), \
+            "allocated page with refcount < 1"
         return True
 
 
@@ -216,6 +268,31 @@ class PagedKVCache:
         self._rows[row] = SeqPages(pages=pages, length=tokens)
         return pages
 
+    def alloc_alias(self, row: int, shared_pages: Sequence[int],
+                    tokens: int) -> List[int]:
+        """Claim a free row whose leading pages alias an already-resident
+        prefix (prefix-cache hit). The caller must ALREADY hold one
+        reference per shared page (``PageAllocator.share`` — the match-time
+        pin); this call adopts those references as the row's ownership and
+        allocates only the fresh tail pages, all-or-nothing. On
+        ``OutOfPages`` nothing changes and the caller keeps its pins."""
+        if row in self._rows:
+            raise ValueError(f"row {row} already allocated")
+        tokens = int(tokens)
+        if tokens > self.max_pages * self.page_size:
+            raise OutOfPages(
+                f"{tokens} tokens exceed the row maximum "
+                f"{self.max_pages * self.page_size}")
+        shared = list(shared_pages)
+        need = self.pages_needed(tokens) - len(shared)
+        if need < 1:
+            raise ValueError(
+                f"aliased prefix ({len(shared)} pages) already covers "
+                f"{tokens} tokens — nothing left to write")
+        fresh = self.allocator.alloc(need)
+        self._rows[row] = SeqPages(pages=shared + fresh, length=tokens)
+        return fresh
+
     def append(self, row: int, n: int = 1) -> List[int]:
         """Advance row's length by ``n`` token slots, allocating new pages
         lazily as page boundaries are crossed. Returns the newly allocated
@@ -236,34 +313,49 @@ class PagedKVCache:
         return fresh
 
     def free(self, row: int) -> int:
-        """Release every page the row owns; returns how many. Idempotent
-        for unknown rows (mirrors the engine's ``free`` contract)."""
+        """Drop the row's reference on every page it owns; returns how
+        many pages actually returned to the pool (aliased prefix pages
+        stay resident while the radix cache or another row still holds
+        them). Idempotent for unknown rows (mirrors the engine's ``free``
+        contract)."""
         sp = self._rows.pop(row, None)
         if sp is None:
             return 0
-        self.allocator.free(sp.pages)
-        return len(sp.pages)
+        return self.allocator.release(sp.pages)
 
     def reset(self) -> None:
         for row in list(self._rows):
             self.free(row)
 
-    def check_invariants(self) -> bool:
+    def check_invariants(self,
+                         extra_refs: Optional[Dict[int, int]] = None) -> bool:
         """Audit row-level ownership on top of the allocator's free-list
-        audit: every live row's page count matches its length, no page is
-        aliased by two rows, and the rows' pages are exactly the
-        allocator's allocated set (no leaks in either direction)."""
+        audit: every live row's page count matches its length, and page
+        references are exactly conserved — for every allocated page, the
+        number of rows holding it plus ``extra_refs`` (external holders:
+        the prefix cache's ``page_refs()``) equals the allocator's
+        refcount. Without sharing this degenerates to the historical
+        contract (no page aliased by two rows, rows == allocated set);
+        with sharing it is strictly stronger: a leaked reference, a
+        dangling alias, and cross-request aliasing without a matching
+        holder all trip it."""
         self.allocator.check_invariants()
-        owned: List[int] = []
+        held: Dict[int, int] = dict(extra_refs or {})
         for row, sp in self._rows.items():
             assert sp.pages, f"live row {row} owns no pages"
             assert NULL_PAGE not in sp.pages, f"row {row} owns the null page"
             assert len(sp.pages) == pages_for(sp.length, self.page_size), (
                 f"row {row}: {len(sp.pages)} pages for {sp.length} tokens")
-            owned.extend(sp.pages)
-        assert len(owned) == len(set(owned)), "page aliased by two rows"
-        assert set(owned) == self.allocator._allocated, (
-            "leak: allocator and row ownership disagree "
-            f"({len(owned)} owned vs {len(self.allocator._allocated)} "
-            "allocated)")
+            assert len(sp.pages) == len(set(sp.pages)), (
+                f"row {row} lists a page twice")
+            for p in sp.pages:
+                held[p] = held.get(p, 0) + 1
+        assert set(held) <= self.allocator._allocated, (
+            "dangling alias: held pages not allocated "
+            f"{sorted(set(held) - self.allocator._allocated)}")
+        for p in self.allocator._allocated:
+            refs = self.allocator.refcount(p)
+            assert held.get(p, 0) == refs, (
+                f"page {p}: {held.get(p, 0)} holders accounted "
+                f"(rows + extra_refs) vs allocator refcount {refs}")
         return True

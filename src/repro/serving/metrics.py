@@ -86,6 +86,13 @@ class ModelPoolMetrics:
     # exhausted or stuck tick) that recompute-requeued the residents
     engine_retries: int = 0
     engine_resets: int = 0
+    # radix prompt cache (ISSUE 8), mirrored from EngineStats: admissions
+    # whose prefix aliased cached pages instead of prefilling, the prompt
+    # tokens those hits skipped, and copy-on-write page copies for hits
+    # that diverged mid-page
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+    cow_copies: int = 0
     runtime: float = 0.0       # virtual busy seconds (Σ run latencies)
     chip_seconds: float = 0.0  # allocation-weighted: Σ chips·latency
     tokens: int = 0
@@ -197,5 +204,8 @@ class PoolResult:
                 + (f" shed={m.shed}" if m.shed else "")
                 + (f" retries={m.engine_retries}"
                    if m.engine_retries else "")
-                + (f" resets={m.engine_resets}" if m.engine_resets else ""))
+                + (f" resets={m.engine_resets}" if m.engine_resets else "")
+                + (f" pfx_hits={m.prefix_hits}({m.prefix_hit_tokens}tok)"
+                   if m.prefix_hits else "")
+                + (f" cow={m.cow_copies}" if m.cow_copies else ""))
         return rows

@@ -78,6 +78,8 @@ import dataclasses
 import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.serving.faults import EngineFault
 from repro.serving.metrics import ModelPoolMetrics
 from repro.serving.request import Request, RequestQueue
@@ -107,6 +109,13 @@ class PrefillChunk:
     # None = the legacy up-front reservation (prompt + budget); the lazy
     # planner passes just the chunk's own tokens and grows later.
     reserve_tokens: Optional[int] = None
+    # prefix-cache hit (``PrefixHit``) backing a zero-dispatch alias
+    # admission: instead of prefilling, the engine aliases the hit's
+    # pages into the new slot's block table (plus at most one COW page
+    # copy) and the uncovered tail arrives via ``StepPlan.forced``
+    # teacher-forced catch-up. First chunks only (``slot is None``);
+    # ``length == 0`` — no prefill tokens are computed for the chunk.
+    alias: Optional[Any] = None
 
 
 @dataclasses.dataclass
@@ -130,11 +139,18 @@ class StepPlan:
     cancels: List[int] = dataclasses.field(default_factory=list)
     # lazy page growth: extend slot's page horizon to cover >= tokens
     grows: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    # teacher-forced catch-up: (slot, prompt token) pairs riding THE
+    # decode dispatch — an aliased admission consumes its uncovered
+    # prompt tail one token per tick, writing exactly the K/V a prefill
+    # would write there, with zero extra dispatches. Forced outputs
+    # never reach ``StepResult.tokens`` (nothing was generated)
+    forced: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
 
     @property
     def empty(self) -> bool:
         return not (self.admissions or self.decodes or self.preemptions
-                    or self.frees or self.cancels or self.grows)
+                    or self.frees or self.cancels or self.grows
+                    or self.forced)
 
 
 @dataclasses.dataclass
@@ -187,6 +203,17 @@ class PlannerConfig:
     # unit of sunk recompute work (see preemption_key); "newest" is the
     # legacy latest-arrival rule
     victim: str = "slack"
+    # radix prompt cache (needs an engine with ``enable_prefix_cache()``
+    # attached): admissions matching a cached prefix alias its pages
+    # instead of prefilling them, finished prompts register their full
+    # pages, and cold cache nodes are evicted BEFORE any resident is
+    # preempted when pages run short
+    prefix_cache: bool = False
+    # hit-quality floor: a hit must cover >= 1 full page AND >= this
+    # fraction of the prompt, else it counts as a miss (the uncovered
+    # tail advances one teacher-forced token per tick, so low-coverage
+    # hits trade little prefill for a long serialized catch-up)
+    prefix_min_frac: float = 0.5
 
 
 @dataclasses.dataclass
@@ -198,6 +225,17 @@ class _Resident:
     done: int                          # prompt tokens prefilled so far
     budget: int                        # decode-token budget
     prefilling: bool                   # True until the final chunk ran
+    # teacher-forced catch-up (aliased admissions): a ``forced`` resident
+    # consumes prompt[done] one token per tick via ``StepPlan.forced``
+    # until the prompt completes — it never takes continuation chunks
+    forced: bool = False
+    host_tokens: Optional[List[int]] = None   # prompt as host ints (lazy)
+    # pinned PrefixHit while STAGED only: the engine consumes the pins at
+    # alias admission (or releases them itself on OutOfPages), so observe
+    # clears this on both outcomes; recover() releases it when execute
+    # never ran (fault-before-mutation / stuck tick)
+    alias: Any = None
+    registered: bool = False           # prompt pages inserted in the cache
 
 
 def preemption_key(req: Request, sunk_tokens: int, now: float,
@@ -395,6 +433,67 @@ class StepPlanner:
             return None
         return max(cands)[-1]
 
+    # ---------------------------------------------------- prefix cache
+    def _pcache(self):
+        """The engine's prefix cache when BOTH the config flag and the
+        engine attachment agree; None disables every cache path (the
+        pool plane's unbound planners pass the engine explicitly)."""
+        eng = self.engine
+        if not self.config.prefix_cache or eng is None:
+            return None
+        return eng.prefix_cache
+
+    @staticmethod
+    def _host_tokens(r: _Resident) -> List[int]:
+        if r.host_tokens is None:
+            r.host_tokens = [int(t)
+                             for t in np.asarray(r.batch["tokens"])[0]]
+        return r.host_tokens
+
+    def _min_covered(self, eng, prompt_len: int) -> int:
+        """Hit-quality floor for ``PrefixCache.match`` (see
+        ``PlannerConfig.prefix_min_frac``)."""
+        return max(eng.page_size,
+                   int(math.ceil(self.config.prefix_min_frac * prompt_len)))
+
+    def _evict_cache(self, need: int, pages_avail: int) -> int:
+        """Evict cold radix nodes to cover ``need`` pages BEFORE any
+        resident is preempted: a cached-but-unreferenced prefix page is
+        strictly cheaper to reclaim than a resident's recompute-requeue.
+        Returns the updated availability projection."""
+        cache = self._pcache()
+        if cache is None or need <= pages_avail:
+            return pages_avail
+        freed = cache.evict(need - pages_avail)
+        if freed:
+            eng = self.engine
+            if eng.telemetry is not None:
+                eng.telemetry.instant(eng.telemetry.engine_track(eng),
+                                      "prefix_evict", pages=freed)
+        return pages_avail + freed
+
+    def _register_prompts(self) -> None:
+        """Insert finished prompts' full pages into the prefix cache —
+        once per resident, only after its prompt is COMPLETE. That
+        timing is the safety argument for read-only aliasing: chunk
+        recompute (which rewrites prompt positions) is over, and every
+        later write — decode or a dead masked write — lands at
+        ``pos >= prompt_len``, past the registered pages."""
+        cache = self._pcache()
+        eng = self.engine
+        if cache is None or not eng.paged:
+            return
+        ps = eng.page_size
+        for slot, r in self._resident.items():
+            if r.prefilling or r.registered:
+                continue
+            r.registered = True
+            n_full = r.prompt_len // ps
+            if n_full < 1:
+                continue
+            toks = self._host_tokens(r)
+            cache.insert(toks[:n_full * ps], eng.slot_pages(slot)[:n_full])
+
     def build(self, now: float) -> StepPlan:
         """Emit this tick's plan. Mutates planner bookkeeping under the
         assumption the plan WILL be executed (the tick loop always does:
@@ -436,6 +535,7 @@ class StepPlanner:
             # next decode writes at pos = written tokens; cover it
             upto = min(eng.slot_pos(slot) + 1, eng.slot_len)
             need = self._grow_cost(slot, upto)
+            pages_avail = self._evict_cache(need, pages_avail)
             while need > pages_avail:
                 v = self._pick_victim(excluded=victims | freed)
                 if v is None:
@@ -453,6 +553,45 @@ class StepPlanner:
                 # bookkeeping must advance with the physical coverage
                 plan.grows.append((slot, upto))
                 pages_avail -= need
+
+        # -- phase A': teacher-forced catch-up for aliased admissions.
+        # Each forced resident consumes ONE uncovered prompt token this
+        # tick, riding the decode dispatch — zero extra dispatches. Its
+        # page need is exactly a decode's (the forced write lands at
+        # slot_pos), competing through the same evict-then-preempt
+        # ladder; a failed grow requeues it like any decode's would.
+        for slot, r in sorted(self._resident.items()):
+            if (not r.forced or slot in victims or slot in freed
+                    or slot not in self._resident):
+                continue
+            upto = min(eng.slot_pos(slot) + 1, eng.slot_len)
+            need = self._grow_cost(slot, upto)
+            pages_avail = self._evict_cache(need, pages_avail)
+            while need > pages_avail:
+                v = self._pick_victim(excluded=victims | freed)
+                if v is None:
+                    break
+                victims.add(v)
+                pages_avail += eng.slot_page_count(v)
+                pages_avail += self._preempt(v, plan, now)
+                if v == slot:
+                    need = 0
+                    break
+            if slot in victims:
+                continue
+            if upto > eng.reserved_tokens(slot):
+                plan.grows.append((slot, upto))
+                pages_avail -= need
+            toks = self._host_tokens(r)
+            plan.forced.append((slot, toks[r.done]))
+            r.done += 1
+            if r.done >= r.prompt_len:
+                # the final forced step's logits seed the first sampled
+                # token exactly as a one-shot prefill's last logits
+                # would — decodable from the NEXT tick's snapshot
+                r.prefilling = False
+                r.forced = False
+
         decodes = [s for s in decodes if s not in victims]
         slots_avail += len(victims)
 
@@ -471,7 +610,8 @@ class StepPlanner:
         inflight = sorted(
             ((r.req.arrival, r.req.rid, slot) for slot, r in
              self._resident.items()
-             if r.prefilling and slot not in victims and slot not in freed))
+             if r.prefilling and not r.forced
+             and slot not in victims and slot not in freed))
         first_cont = True
         for _, _, slot in inflight:
             if budget_left <= 0:
@@ -486,6 +626,8 @@ class StepPlanner:
                 # including slack past the reserved horizon in its last
                 # page), so a zero-page-cost continuation is never
                 # skipped; a zero-token chunk just waits for pages
+                pages_avail = self._evict_cache(
+                    self._grow_cost(slot, r.done + c), pages_avail)
                 while c > 0:
                     need = self._grow_cost(slot, r.done + c)
                     if need <= pages_avail:
@@ -513,15 +655,32 @@ class StepPlanner:
             kept = self._scan_queue(
                 eng, q, now, max_batch=slots_avail,
                 pages_avail=pages_avail, budget_left=budget_left)
-            for req, batch, budget, c, reserve in kept:
-                final = c == _prompt_tokens(batch)
+            for req, batch, budget, c, reserve, hit, toks in kept:
+                p = _prompt_tokens(batch)
+                if hit is not None:
+                    # prefix-cache hit: zero-cost leading chunk — no
+                    # prefill tokens computed, no chunk budget charged.
+                    # The uncovered tail teacher-forces from next tick
+                    plan.admissions.append(PrefillChunk(
+                        rid=req.rid, batch=batch, start=0, length=0,
+                        final=False, n_tokens=budget,
+                        reserve_tokens=reserve, alias=hit))
+                    self._staged.append(_Resident(
+                        req=req, batch=batch, prompt_len=p,
+                        done=hit.covered, budget=budget, prefilling=True,
+                        forced=True, host_tokens=toks, alias=hit))
+                    self._tel_event("prefix_hit", req, covered=hit.covered,
+                                    cow=hit.cow_src is not None)
+                    continue
+                final = c == p
                 plan.admissions.append(PrefillChunk(
                     rid=req.rid, batch=_chunk_batch(batch, c),
                     start=0, length=c, final=final,
                     n_tokens=budget, reserve_tokens=reserve))
                 self._staged.append(_Resident(
-                    req=req, batch=batch, prompt_len=_prompt_tokens(batch),
-                    done=c, budget=budget, prefilling=not final))
+                    req=req, batch=batch, prompt_len=p,
+                    done=c, budget=budget, prefilling=not final,
+                    host_tokens=toks))
 
         plan.decodes = decodes
         # stall-breaker: every resident is page-starved mid-prefill and
@@ -550,6 +709,7 @@ class StepPlanner:
                      if s == slot)
         plan.grows = [(s, u) for s, u in plan.grows if s != slot]
         plan.admissions = [c for c in plan.admissions if c.slot != slot]
+        plan.forced = [(s, t) for s, t in plan.forced if s != slot]
         self.metrics.preemptions += 1
         self._tel_event("preempt", r.req, slot=slot)
         self._requeue(r.req)
@@ -606,7 +766,16 @@ class StepPlanner:
             self._requeue(r.req)
             n += 1
         self._resident.clear()
+        pcache = (self.engine.prefix_cache
+                  if self.engine is not None else None)
         for r in self._staged:
+            # staged alias pins were never consumed (EngineFault fires
+            # before the plan mutates anything; a stuck tick never
+            # executed) — return them so the engine-reset page audit
+            # (free == total after the cache flush) holds
+            if r.alias is not None and pcache is not None:
+                pcache.release_hit(r.alias)
+                r.alias = None
             self._requeue(r.req)
             n += 1
         self._staged = []
@@ -621,8 +790,12 @@ class StepPlanner:
                     budget_left) -> List[Tuple]:
         """Tick-plane admission scan: pops requests the projected pages /
         slots / chunk budget can back. Returns
-        [(req, batch, budget, first_chunk_len, reserve_tokens)]."""
+        [(req, batch, budget, first_chunk_len, reserve_tokens, hit,
+        host_tokens)] — ``hit`` is a pinned ``PrefixHit`` for alias
+        admissions (None otherwise; ``host_tokens`` likewise only
+        materialized when the prefix cache looked at the prompt)."""
         cfg = self.config
+        cache = self._pcache()
         kept: List[Tuple] = []
         blocked: List[Request] = []
         is_head = True
@@ -655,19 +828,42 @@ class StepPlanner:
                 continue
             c = int(min(p, budget_left, max(1, eng.slot_len - 1)))
             reserve: Optional[int] = None
+            hit = None
+            toks: Optional[List[int]] = None
+            if cache is not None and eng.paged:
+                toks = [int(t) for t in np.asarray(batch["tokens"])[0]]
+                hit = cache.match(toks, max_covered=p - 1,
+                                  min_covered=self._min_covered(eng, p))
             if eng.paged:
-                horizon = c if cfg.lazy else min(p + budget, eng.slot_len)
+                if hit is not None:
+                    # pages for the FRESH tail only: the hit's covered
+                    # pages alias at zero page cost (a refcount bump,
+                    # not an allocation)
+                    horizon = (hit.covered + 1 if cfg.lazy
+                               else min(p + budget, eng.slot_len))
+                    need = self._pages_for(horizon) - len(hit.pages)
+                else:
+                    horizon = c if cfg.lazy else min(p + budget,
+                                                     eng.slot_len)
+                    need = self._pages_for(horizon)
                 reserve = horizon
-                left = self._page_gate(req, is_head,
-                                       self._pages_for(horizon),
-                                       pages_avail)
+                pages_avail = self._evict_cache(need, pages_avail)
+                left = self._page_gate(req, is_head, need, pages_avail)
                 if left is None:
+                    if hit is not None:
+                        # pins return to the cache; the request retries
+                        # (and re-matches) on a later scan
+                        cache.release_hit(hit)
+                        hit = None
                     blocked.append(req)
                     is_head = False
                     continue
                 pages_avail = left
-            kept.append((req, batch, budget, c, reserve))
-            budget_left -= c
+            if hit is not None:
+                kept.append((req, batch, budget, 0, reserve, hit, toks))
+            else:
+                kept.append((req, batch, budget, c, reserve, None, toks))
+                budget_left -= c
             is_head = False
         for req in blocked:
             q.push(req)
@@ -749,12 +945,18 @@ class StepPlanner:
             self._requeue(r.req)
         for r in self._staged:
             slot = res.admitted.get(r.req.rid)
+            # the engine settled every executed alias either way: an
+            # admitted hit's pins now live in the slot's row; a failed
+            # one's pins went back via release_hit. Neither is ours to
+            # release any more (recover() handles never-executed plans)
+            r.alias = None
             if slot is not None:
                 self._resident[slot] = r
                 self._tel_event("admitted", r.req, slot=slot)
             else:
                 self._requeue(r.req)
         self._staged = []
+        self._register_prompts()
         for slot, tok in res.tokens.items():
             r = self._resident.get(slot)
             if r is not None:
@@ -869,12 +1071,33 @@ class StepPlanner:
         return kept
 
     def admission_plan(self, batches: Sequence[Any],
-                       kept: Sequence[Tuple[Request, int]]) -> StepPlan:
+                       kept: Sequence[Tuple[Request, int]],
+                       eng=None) -> StepPlan:
         """Wrap a ``select_admissible`` result as a whole-prompt plan
-        (the unchunked admission the pool plane runs)."""
+        (the unchunked admission the pool plane runs). With ``eng``
+        passed and the prefix cache on, prompts matching a cached prefix
+        become zero-dispatch alias admissions — the pool completes their
+        uncovered tail eagerly via ``InferenceEngine.catchup_prefill``
+        right after the plan executes (the pool plane has no per-tick
+        forced phase to ride)."""
+        cache = (eng.prefix_cache
+                 if eng is not None and self.config.prefix_cache else None)
         plan = StepPlan()
         for batch, (req, budget) in zip(batches, kept):
             p = _prompt_tokens(batch)
+            hit = None
+            if cache is not None and eng.paged:
+                toks = [int(t) for t in np.asarray(batch["tokens"])[0]]
+                hit = cache.match(toks, max_covered=p - 1,
+                                  min_covered=self._min_covered(eng, p))
+            if hit is not None:
+                plan.admissions.append(PrefillChunk(
+                    rid=req.rid, batch=batch, start=0, length=0,
+                    final=False, n_tokens=budget,
+                    reserve_tokens=(hit.covered + 1) if self.config.lazy
+                    else None,
+                    alias=hit))
+                continue
             plan.admissions.append(PrefillChunk(
                 rid=req.rid, batch=batch, start=0, length=p, final=True,
                 n_tokens=budget,
@@ -1014,7 +1237,8 @@ class TickServer:
         self._mirror_fault_stats()
         progress = bool(res.tokens or res.done or res.admitted
                         or res.failed_grows or plan.admissions
-                        or plan.frees or plan.cancels or plan.preemptions)
+                        or plan.forced or plan.frees or plan.cancels
+                        or plan.preemptions)
         if progress:
             self._no_progress = 0
         elif self.stall_limit is not None:

@@ -129,7 +129,8 @@ class EnginePool:
 
     def __init__(self, hosts: Dict[str, ModelHost],
                  caps: Optional[PoolCaps] = None, lazy_kv: bool = False,
-                 planner_config: Optional[PlannerConfig] = None):
+                 planner_config: Optional[PlannerConfig] = None,
+                 prefix_cache: bool = False):
         self.hosts = hosts
         self.profiles: Dict[str, ModelProfile] = {
             n: h.profile for n, h in hosts.items()}
@@ -144,7 +145,20 @@ class EnginePool:
         self.lazy_kv = lazy_kv
         # base PlannerConfig for every per-model planner (load-shed
         # watermarks, victim rule, ...); `lazy` is overridden by lazy_kv
+        # and `prefix_cache` by the pool-level knob below
         self._planner_config = planner_config or PlannerConfig()
+        # radix prompt cache: attach one PrefixCache per CAPABLE standby
+        # engine (dense transformers; families whose per-row state
+        # exceeds pages + pos — SSM/hybrid/enc-dec — skip gracefully and
+        # serve exactly as before). Admissions then alias cached
+        # prefixes and complete their tails via eager teacher-forced
+        # catch-up (``admission_plan``/``catchup_prefill``).
+        self.prefix_cache = prefix_cache
+        if prefix_cache:
+            for host in hosts.values():
+                for eng in host.engines():
+                    if eng.prefix_cache_capable():
+                        eng.enable_prefix_cache()
         self.queues: Dict[str, RequestQueue] = {}
         self._runs: Dict[int, PoolRun] = {}
         self._metrics: Dict[str, ModelPoolMetrics] = {}
@@ -180,7 +194,8 @@ class EnginePool:
         # reservation/aging) admit AND topup route through
         self._planners = {
             n: StepPlanner(config=dataclasses.replace(
-                self._planner_config, lazy=self.lazy_kv),
+                self._planner_config, lazy=self.lazy_kv,
+                prefix_cache=self.prefix_cache),
                 metrics=self._metrics[n])
             for n in self.profiles}
         self._runs.clear()
@@ -255,6 +270,10 @@ class EnginePool:
                         eng.grow_slot(
                             slot, host.prompt_len + eng.page_size + 1)
                         eng.free(slot)
+                # prefix-cache hit admissions dispatch two more
+                # static-shape executables (COW page copy, table-row
+                # alias write) — warm them on dead state up front
+                eng.warm_prefix_ops()
         self.reset()
 
     def jit_cache_sizes(self) -> Dict[str, int]:
@@ -420,26 +439,44 @@ class EnginePool:
         # engine executes it as ONE packed prefill dispatch with each
         # segment's K/V scattered straight into its slot's pages
         plan = self._planners[rr.model].admission_plan(
-            [host.prompt_batch()] * len(kept), kept)
+            [host.prompt_batch()] * len(kept), kept, eng=eng)
         try:
             sres = eng.execute(plan)
         except EngineFault:
+            # the fault fired BEFORE the plan mutated anything, so any
+            # alias chunks still hold their match-time pins — return
+            # them or recover()'s page-conservation audit trips
+            self._release_plan_pins(eng, plan)
             self._engine_reset(rr.model, eng, kept)
             return None
         if sres.admission_failed:
             # transient/injected allocator failure: insert_many rolled
-            # back all-or-nothing — requeue and let a later plan retry
+            # back all-or-nothing — alias admissions that DID land roll
+            # back here too (all-or-nothing at the pool grain), then
+            # requeue and let a later plan retry
+            for slot in sres.admitted.values():
+                eng.free(slot)
             for req, _ in kept:
                 q.push(req)
             return None
+        self._finish_aliases(host, eng, plan, sres)
         for req, budget in kept:
-            slot = sres.admitted[req.rid]
+            slot = sres.admitted.get(req.rid)
+            if slot is None:
+                # an individual alias admission ran out of fresh tail
+                # pages (its pins already went back to the cache):
+                # requeue just that request
+                q.push(req)
+                continue
             run.slots[slot] = req
             run.remaining[slot] = budget
             if self.telemetry is not None:
                 self.telemetry.request_event(rr.model, "admitted",
                                              rid=req.rid, slot=slot,
                                              chips=alloc.chips)
+        if not run.slots:
+            return None
+        run.batch = len(run.slots)
         m = self._metrics[rr.model]
         self._seq += 1
         self._runs[run.seq] = run
@@ -474,27 +511,38 @@ class EnginePool:
                                     gen_len, drop_expired)
         if kept:
             plan = self._planners[run.model].admission_plan(
-                [host.prompt_batch()] * len(kept), kept)
+                [host.prompt_batch()] * len(kept), kept, eng=eng)
             try:
                 sres = eng.execute(plan)
             except EngineFault:
+                self._release_plan_pins(eng, plan)
                 self._engine_reset(run.model, eng, kept)
                 return 0
             if sres.admission_failed:
+                for slot in sres.admitted.values():
+                    eng.free(slot)
                 for req, _ in kept:
                     self.queues[run.model].push(req)
                 return 0
+            self._finish_aliases(host, eng, plan, sres)
+            admitted = 0
             for req, budget in kept:
-                slot = sres.admitted[req.rid]
+                slot = sres.admitted.get(req.rid)
+                if slot is None:
+                    self.queues[run.model].push(req)
+                    continue
+                admitted += 1
                 run.slots[slot] = req
                 run.remaining[slot] = budget
                 if self.telemetry is not None:
                     self.telemetry.request_event(run.model, "admitted",
                                                  rid=req.rid, slot=slot,
                                                  chips=run.chips)
+            if not admitted:
+                return 0
             m = self._metrics[run.model]
             extension = max(0, max(run.remaining.values()) - before)
-            m.topups += len(kept)
+            m.topups += admitted
             m.runtime += extension * run.step_cost
             m.chip_seconds += run.chips * extension * run.step_cost
             run.latency += extension * run.step_cost
@@ -527,6 +575,43 @@ class EnginePool:
         if self.telemetry is not None:
             self.telemetry.request_event(run.model, "preempt",
                                          rid=req.rid, slot=victim)
+
+    @staticmethod
+    def _release_plan_pins(eng: InferenceEngine, plan) -> None:
+        """Return every alias chunk's match-time pins after an execute
+        that never ran (``EngineFault`` fires before the plan mutates
+        anything) — without this the reset's page-conservation audit
+        (free == total after the cache flush) trips."""
+        if eng.prefix_cache is None:
+            return
+        for c in plan.admissions:
+            if getattr(c, "alias", None) is not None:
+                eng.prefix_cache.release_hit(c.alias)
+
+    def _finish_aliases(self, host: ModelHost, eng: InferenceEngine,
+                        plan, sres) -> None:
+        """Pool-plane completion of prefix-cache admissions: aliased
+        slots catch up their uncovered prompt tail eagerly (teacher-
+        forced through the warm decode executable — the pool has no
+        per-tick forced phase to spread them over), then every admitted
+        slot registers its full prompt pages in the cache (``insert``
+        dedupes shared prefixes, so repeats retain nothing new)."""
+        cache = eng.prefix_cache
+        if cache is None:
+            return
+        import numpy as np
+        toks = [int(t) for t in
+                np.asarray(host.prompt_batch()["tokens"])[0]]
+        hits = {c.rid: c.alias for c in plan.admissions
+                if getattr(c, "alias", None) is not None}
+        n_full = host.prompt_len // eng.page_size
+        for rid, slot in sres.admitted.items():
+            hit = hits.get(rid)
+            if hit is not None:
+                eng.catchup_prefill(slot, toks, hit.covered)
+            if n_full >= 1:
+                cache.insert(toks[:n_full * eng.page_size],
+                             eng.slot_pages(slot)[:n_full])
 
     def _engine_reset(self, model: str, eng: InferenceEngine,
                       kept=None) -> None:
@@ -652,6 +737,12 @@ class EnginePool:
                                    for e in self.hosts[n].engines())
             m.engine_resets = sum(e.stats.engine_resets
                                   for e in self.hosts[n].engines())
+            m.prefix_hits = sum(e.stats.prefix_hits
+                                for e in self.hosts[n].engines())
+            m.prefix_hit_tokens = sum(e.stats.prefix_hit_tokens
+                                      for e in self.hosts[n].engines())
+            m.cow_copies = sum(e.stats.cow_copies
+                               for e in self.hosts[n].engines())
             m.latencies = list(q.latencies)
             m.ttfts = list(q.ttfts)
             m.tbts = list(q.tbts)
@@ -737,7 +828,8 @@ def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
                slots: Optional[Dict[str, int]] = None,
                pages: Optional[Dict[str, int]] = None,
                lazy_kv: bool = False,
-               planner_config: Optional[PlannerConfig] = None) -> EnginePool:
+               planner_config: Optional[PlannerConfig] = None,
+               prefix_cache: bool = False) -> EnginePool:
     """Build an EnginePool over reduced real models and (by default) warm
     every standby executable so the measured run compiles nothing.
     ``slots`` / ``pages`` override slot count / usable page count per
@@ -747,7 +839,10 @@ def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
     decode-time growth and preempt-and-requeue on ``OutOfPages``;
     ``planner_config`` seeds every per-model planner (load-shed
     watermarks, victim rule — its ``lazy`` field is overridden by
-    ``lazy_kv``)."""
+    ``lazy_kv``); ``prefix_cache`` attaches a radix prompt cache to
+    every capable standby engine (incapable families skip gracefully)
+    and its hit-admission executables are warmed with everything
+    else."""
     hosts: Dict[str, ModelHost] = {}
     for i, name in enumerate(names):
         host = build_host(
@@ -758,7 +853,8 @@ def build_pool(names: Sequence[str], *, request_rate: float = 500.0,
             page_size=page_size, total_pages=(pages or {}).get(name))
         hosts[host.profile.name] = host
     pool = EnginePool(hosts, caps=caps, lazy_kv=lazy_kv,
-                      planner_config=planner_config)
+                      planner_config=planner_config,
+                      prefix_cache=prefix_cache)
     if warm:
         pool.warmup()
     return pool

@@ -546,7 +546,11 @@ def export_engine_stats(reg: MetricsRegistry, stats, model: str,
             ("tokens_out", "dstack_tokens_out_total"),
             ("grows", "dstack_page_grows_total"),
             ("engine_retries", "dstack_engine_retries_total"),
-            ("engine_resets", "dstack_engine_resets_total")):
+            ("engine_resets", "dstack_engine_resets_total"),
+            ("prefix_hits", "dstack_prefix_hits_total"),
+            ("prefix_hit_tokens", "dstack_prefix_hit_tokens_total"),
+            ("cow_copies", "dstack_cow_copies_total"),
+            ("forced_catchup_tokens", "dstack_prefix_catchup_tokens_total")):
         reg.counter(name).inc(getattr(stats, field, 0), **labels)
 
 
@@ -591,6 +595,12 @@ def export_pool_result(reg: MetricsRegistry, result,
             m.engine_retries, model=name)
         reg.counter("dstack_engine_resets_total").inc(
             m.engine_resets, model=name)
+        reg.counter("dstack_prefix_hits_total").inc(
+            getattr(m, "prefix_hits", 0), model=name)
+        reg.counter("dstack_prefix_hit_tokens_total").inc(
+            getattr(m, "prefix_hit_tokens", 0), model=name)
+        reg.counter("dstack_cow_copies_total").inc(
+            getattr(m, "cow_copies", 0), model=name)
         for v in m.latencies:
             lat.observe(v, model=name)
         for v in getattr(m, "ttfts", ()):

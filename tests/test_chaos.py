@@ -83,9 +83,13 @@ def _serve(cfg, eng, reqs, prompts, *, chunk_tokens=0, lazy=False,
         eng.attach_faults(None, max_retries=2)   # restore engine defaults
     assert not srv.truncated
     # the drain invariant every failure path must preserve: no request
-    # left resident, and every page back in the pool
-    assert eng.free_pages == eng.total_pages, "leaked pages"
+    # left resident, and every page free or held by the radix cache
+    # (whose holds the refcount audit verifies page by page)
+    held = eng.prefix_cache.held_pages if eng.prefix_cache else 0
+    assert eng.free_pages + held == eng.total_pages, "leaked pages"
     assert eng.check_page_invariants()
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.check_invariants()
     return {r: tuple(t) for r, t in planner.streams.items()}, planner, srv
 
 
@@ -571,3 +575,97 @@ def test_pool_shed_watermark():
     assert len(q) == 2 and q.shed == 3
     res = pool.snapshot("none", 1.0, 1.0, 0)
     assert res.per_model[name].shed == 3
+
+
+# ---------------------------------------------------------------------------
+# chaos with the radix prompt cache on: refcounted aliased pages in play
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def prefix_engine():
+    """A separate warmed engine with the radix prompt cache attached —
+    the chaos invariants must hold with aliased refcounted pages, COW
+    copies, and teacher-forced catch-up in the fault domain."""
+    cfg = get_config(MODEL).reduced()
+    eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=True, page_size=PAGE)
+    eng.enable_prefix_cache()
+    eng.warm_prefix_ops()
+    return cfg, eng
+
+
+def _shared_workload(cfg, seed: int, n: int, template_lens=(20, 8)):
+    """Shared-prefix stream (ISSUE 8): two prompt templates plus short
+    random tails; template length 20 is not a page multiple, so some
+    hits diverge mid-page and exercise the COW copy under faults."""
+    rng = np.random.default_rng(seed)
+    temps = [rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
+             for s in template_lens]
+    reqs, prompts = [], {}
+    for i in range(n):
+        t = temps[int(rng.integers(0, len(temps)))]
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(2, 6))).astype(np.int32)
+        toks = np.concatenate([t, tail])
+        reqs.append(Request(arrival=0.0, rid=i, model=cfg.name, slo=1e9,
+                            n_tokens=int(rng.integers(3, 7)),
+                            prompt_len=len(toks)))
+        prompts[i] = {"tokens": jnp.asarray(toks[None, :])}
+    return reqs, prompts
+
+
+def test_chaos_with_prefix_cache(prefix_engine):
+    """ISSUE 8 chaos bar: the seeded chaos schedule over a shared-prefix
+    stream with the cache ON drains with zero leaked pages (cache holds
+    audited page by page), survivors bit-exact with BOTH the fault-free
+    cache-on run and the cache-off run, an identical seeded replay after
+    recovery, and zero recompiles."""
+    cfg, eng = prefix_engine
+    reqs, prompts = _shared_workload(cfg, seed=23, n=10)
+
+    def reset_states():
+        for r in reqs:
+            r.state = "pending"
+
+    base_off, _, _ = _serve(cfg, eng, reqs, prompts, lazy=True)
+    reset_states()
+    base_on, _, _ = _serve(cfg, eng, reqs, prompts, lazy=True,
+                           prefix_cache=True)
+    # cache-hit admissions are bit-exact with whole-prompt admissions
+    assert base_on == base_off
+    assert eng.stats.prefix_hits > 0 and eng.stats.cow_copies > 0
+    # warm the chunked-admission shapes the chaos run will use, then
+    # freeze the executables: chaos may compile NOTHING
+    reset_states()
+    _serve(cfg, eng, reqs, prompts, chunk_tokens=3, lazy=True,
+           prefix_cache=True)
+    jit_before = eng.jit_cache_sizes()
+
+    def run_chaos():
+        reset_states()
+        inj = FaultInjector(seed=29, dispatch_rate=0.08, alloc_rate=0.05,
+                            stuck_rate=0.04, max_faults=10)
+        got, planner, srv = _serve(
+            cfg, eng, reqs, prompts, chunk_tokens=3, lazy=True, faults=inj,
+            max_retries=1, prefix_cache=True)
+        return got, planner, srv, inj
+
+    got, planner, srv, inj = run_chaos()
+    assert inj.total > 0, "fault schedule never fired"
+    q = planner.queue
+    assert q.completed + q.dropped == len(reqs)
+    # survivors bit-exact against the fault-free cache-on (== cache-off)
+    for r in reqs:
+        if r.state == "completed":
+            assert got[r.rid] == base_on[r.rid], f"rid={r.rid} diverged"
+    # flushing the cache returns every page to the pool
+    eng.prefix_cache.flush()
+    assert eng.free_pages == eng.total_pages
+    eng.check_page_invariants()
+    # chaos recovery with aliasing/COW in play compiled NOTHING
+    assert eng.jit_cache_sizes() == jit_before
+    # determinism: the same seed replays the same chaos outcome from a
+    # cold cache (engine recover() re-sorts the free list; release_all
+    # in _serve flushes the cache)
+    got2, _, _, inj2 = run_chaos()
+    assert got2 == got
+    assert inj2.injected == inj.injected

@@ -11,9 +11,21 @@ the serving engine's correctness rests on:
   * a failed (OutOfPages) operation leaves every row and the free count
     exactly as they were (all-or-nothing).
 
-A seeded-random sibling that needs no hypothesis install lives in
-``test_paged_kv.py`` (``test_random_churn_invariants_seeded``); this file
-skips cleanly where hypothesis is absent (CI installs it).
+With the radix prompt cache (ISSUE 8) pages are refcounted and the rules
+generalize; the sharing churn below drives register/alias/evict/COW
+interleavings on top and asserts:
+
+  * rows share a page ONLY when it was aliased through the cache — no
+    aliasing across unrelated requests,
+  * refcount conservation: every allocated page's refcount equals its
+    row holders plus the cache's holds (``check_invariants(extra_refs)``),
+  * a failed alias admission (OutOfPages) changes nothing and leaves the
+    caller's match-time pins intact (all-or-nothing, COW pin included).
+
+Seeded-random siblings that need no hypothesis install live in
+``test_paged_kv.py`` (``test_random_churn_invariants_seeded`` /
+``test_shared_churn_invariants_seeded``); this file skips cleanly where
+hypothesis is absent (CI installs it).
 """
 import pytest
 
@@ -94,6 +106,95 @@ def test_allocator_never_hands_out_null_or_duplicate(sizes, num_pages):
         a.check_invariants()              # the shipped conservation audit
     assert a.free_pages + sum(len(ps) for ps in live) == num_pages
     assert a.check_invariants()
+
+
+# sharing churn op encoding: (kind, row, amount) — kind 0=alloc,
+# 1=append, 2=free, 3=register (cache takes refs on a live row's pages),
+# 4=alias-admit (pin cached pages + optional COW pin, adopt via
+# alloc_alias), 5=evict (cache drops refs)
+_share_ops = st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                                st.integers(1, 40)), max_size=80)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_share_ops, page_size=st.sampled_from([4, 8]),
+       num_pages=st.integers(4, 24))
+def test_shared_pages_random_churn(ops, page_size, num_pages):
+    """Random churn with an external cache holder in the loop — the
+    refcounted generalization of the churn above."""
+    kv = PagedKVCache(batch=6, page_size=page_size, max_pages=6,
+                      num_pages=num_pages)
+    cache = {}                 # page -> refs the simulated radix tree holds
+    shared_origin = set()      # pages that were ever aliased via the cache
+    for kind, row, amount in ops:
+        before_free = kv.free_pages
+        before = {r: (kv.length(r), tuple(kv.pages(r))) for r in range(6)}
+        before_cache = dict(cache)
+        try:
+            if kind == 0 and not kv.pages(row):
+                kv.alloc(row, amount)
+            elif kind == 1 and kv.pages(row):
+                kv.append(row, amount)
+            elif kind == 2:
+                kv.free(row)
+            elif kind == 3 and kv.pages(row):
+                # register: one cache ref per page, deduped like the tree
+                fresh = [p for p in kv.pages(row) if p not in cache]
+                kv.allocator.share(fresh)
+                cache.update({p: 1 for p in fresh})
+            elif kind == 4 and not kv.pages(row) and cache:
+                # alias-admit: pin a prefix of the cached pages (plus an
+                # optional COW source pin), adopt the prefix pins into the
+                # row, and return the COW pin once the "copy" lands
+                held = sorted(cache)[:max(1, amount % (len(cache) + 1))]
+                tokens = min(len(held) * page_size + 1 + amount % page_size,
+                             6 * page_size)
+                if pages_for(tokens, page_size) <= len(held):
+                    continue               # alias would cover everything
+                cow = None
+                if amount % 2 and len(cache) > len(held):
+                    cow = sorted(cache)[len(held)]
+                kv.allocator.share(held)             # match-time pins
+                if cow is not None:
+                    kv.allocator.share([cow])
+                try:
+                    kv.alloc_alias(row, held, tokens)
+                    shared_origin.update(held)
+                    if cow is not None:              # copy landed
+                        kv.allocator.release([cow])
+                except OutOfPages:
+                    # pins stay valid on failure; return them like the
+                    # engine's release_hit
+                    assert all(kv.allocator.refcount(p) > 0 for p in held)
+                    kv.allocator.release(held)
+                    if cow is not None:
+                        kv.allocator.release([cow])
+                    raise
+            elif kind == 5 and cache:
+                drop = sorted(cache)[:max(1, amount % (len(cache) + 1))]
+                kv.allocator.release(drop)
+                for p in drop:
+                    del cache[p]
+        except OutOfPages:
+            # all-or-nothing: rows, free count, and cache holds unchanged
+            assert kv.free_pages == before_free
+            assert cache == before_cache
+            for r in range(6):
+                assert (kv.length(r), tuple(kv.pages(r))) == before[r]
+        # the shipped audit with the cache's holds declared
+        kv.check_invariants(extra_refs=dict(cache))
+        owned = [p for r in range(6) for p in kv.pages(r)]
+        # no aliasing across unrelated requests: a page in two rows'
+        # tables must have been shared through the cache
+        multi = {p for p in owned if owned.count(p) > 1}
+        assert multi <= shared_origin, multi - shared_origin
+        # conservation under sharing: distinct held pages + free == pool
+        assert kv.free_pages + len(set(owned) | set(cache)) == num_pages
+    # teardown drains every reference — nothing leaks
+    kv.allocator.release(list(cache))
+    kv.reset()
+    assert kv.free_pages == num_pages
+    assert kv.check_invariants()
 
 
 @settings(max_examples=40, deadline=None)

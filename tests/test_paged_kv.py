@@ -146,6 +146,81 @@ def test_random_churn_invariants_seeded():
         assert kv.check_invariants()
 
 
+def test_shared_churn_invariants_seeded():
+    """Seeded-random churn with a simulated radix-cache holder in the
+    loop (the no-hypothesis sibling of ``test_shared_pages_random_churn``
+    in tests/test_kv_properties.py): rows share a page only via the
+    cache, refcounts conserve with the cache's holds declared, and a
+    failed alias admission changes nothing (pins included)."""
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        num_pages = int(rng.integers(4, 24))
+        ps = int(rng.choice([4, 8]))
+        kv = PagedKVCache(batch=6, page_size=ps, max_pages=6,
+                          num_pages=num_pages)
+        cache = {}             # page -> refs the simulated cache holds
+        shared_origin = set()
+        for _ in range(80):
+            kind = int(rng.integers(0, 6))
+            row = int(rng.integers(0, 6))
+            amount = int(rng.integers(1, 40))
+            before_free = kv.free_pages
+            before = {r: (kv.length(r), tuple(kv.pages(r)))
+                      for r in range(6)}
+            before_cache = dict(cache)
+            try:
+                if kind == 0 and not kv.pages(row):
+                    kv.alloc(row, amount)
+                elif kind == 1 and kv.pages(row):
+                    kv.append(row, amount)
+                elif kind == 2:
+                    kv.free(row)
+                elif kind == 3 and kv.pages(row):
+                    fresh = [p for p in kv.pages(row) if p not in cache]
+                    kv.allocator.share(fresh)
+                    cache.update({p: 1 for p in fresh})
+                elif kind == 4 and not kv.pages(row) and cache:
+                    held = sorted(cache)[:max(1, amount % (len(cache) + 1))]
+                    tokens = min(len(held) * ps + 1 + amount % ps, 6 * ps)
+                    if pages_for(tokens, ps) <= len(held):
+                        continue
+                    cow = None
+                    if amount % 2 and len(cache) > len(held):
+                        cow = sorted(cache)[len(held)]
+                    kv.allocator.share(held)
+                    if cow is not None:
+                        kv.allocator.share([cow])
+                    try:
+                        kv.alloc_alias(row, held, tokens)
+                        shared_origin.update(held)
+                        if cow is not None:
+                            kv.allocator.release([cow])
+                    except OutOfPages:
+                        kv.allocator.release(held)
+                        if cow is not None:
+                            kv.allocator.release([cow])
+                        raise
+                elif kind == 5 and cache:
+                    drop = sorted(cache)[:max(1, amount % (len(cache) + 1))]
+                    kv.allocator.release(drop)
+                    for p in drop:
+                        del cache[p]
+            except OutOfPages:
+                assert kv.free_pages == before_free
+                assert cache == before_cache
+                for r in range(6):
+                    assert (kv.length(r), tuple(kv.pages(r))) == before[r]
+            kv.check_invariants(extra_refs=dict(cache))
+            owned = [p for r in range(6) for p in kv.pages(r)]
+            multi = {p for p in owned if owned.count(p) > 1}
+            assert multi <= shared_origin, multi - shared_origin
+            assert kv.free_pages + len(set(owned) | set(cache)) == num_pages
+        kv.allocator.release(list(cache))
+        kv.reset()
+        assert kv.free_pages == num_pages
+        assert kv.check_invariants()
+
+
 # --------------------------------------------------- paged kernel parity
 PAGED_CASES = [
     # (b, h, kv, d, page_size, max_pages, lengths)
