@@ -1,4 +1,5 @@
-from repro.core.scheduler.base import Policy, SchedView, chips_for_frac
+from repro.core.scheduler.base import (
+    Policy, SchedView, chips_for_frac, speculation_worthwhile)
 from repro.core.scheduler.baselines import (
     FixedBatchMPSPolicy, GSLICEPolicy, MaxMinPolicy, MaxThroughputPolicy,
     TemporalPolicy, TritonPolicy)
@@ -16,7 +17,8 @@ POLICIES = {
 }
 
 __all__ = [
-    "Policy", "SchedView", "chips_for_frac", "POLICIES", "TemporalPolicy",
+    "Policy", "SchedView", "chips_for_frac", "speculation_worthwhile",
+    "POLICIES", "TemporalPolicy",
     "FixedBatchMPSPolicy", "GSLICEPolicy", "TritonPolicy", "MaxMinPolicy",
     "MaxThroughputPolicy", "DStackPolicy", "IdealSimulator",
 ]

@@ -98,3 +98,20 @@ def chips_for_frac(frac: float, total: int) -> int:
 
 def running_models(sim) -> set:
     return {r.model for r in sim.running}
+
+
+def speculation_worthwhile(decode_batch: int,
+                           knee_batch: "int | None") -> bool:
+    """Acceptance-independent speculation gate: drafting pays only while
+    decode is MEMORY-bound — below the roofline knee, a verify dispatch
+    over k+1 tokens streams the same weights/KV bytes as the single-token
+    step it replaces, so the extra FLOPs are free. At or past the knee
+    the accelerator is compute-bound and verification FLOPs displace
+    decode FLOPs one-for-one (speculation can only break even, and loses
+    whenever a draft is rejected). ``knee_batch`` is the decode batch
+    size at the knee — the same knee D-STACK's scheduler derives per
+    model from its latency profile (§3.1) — or None to always speculate
+    (CPU-scale tests, where the knee is not meaningful)."""
+    if knee_batch is None:
+        return True
+    return int(decode_batch) < int(knee_batch)

@@ -81,6 +81,48 @@ def decode_attention_ref(q, k_cache, v_cache, valid_len):
     return out.astype(q.dtype)
 
 
+def chunk_attention_ref(q, k_hist, v_hist, k_chunk, v_chunk, hist_len, *,
+                        window: int = 0):
+    """Incremental chunk attention oracle: chunk queries attend history
+    K/V already resident plus the chunk's own K/V causally.
+
+    q/k_chunk/v_chunk: (B,R,H|KV,D) — R new tokens per row; k_hist/v_hist:
+    (B,C,KV,D) with the first ``hist_len[b]`` entries live. Query r in row
+    b sits at absolute position hist_len[b] + r and attends history keys
+    [0, hist_len[b]) plus chunk keys [0, r]. ``window`` keeps only the
+    trailing ``window`` positions. fp32 internals; rows never have zero
+    attendable keys (the query itself always is one)."""
+    b, r, h, d = q.shape
+    c = k_hist.shape[1]
+    kvh = k_hist.shape[2]
+    rep = h // kvh
+    hist = jnp.broadcast_to(jnp.asarray(hist_len, jnp.int32).reshape(-1), (b,))
+    kh = jnp.repeat(k_hist, rep, axis=2).astype(jnp.float32)
+    vh = jnp.repeat(v_hist, rep, axis=2).astype(jnp.float32)
+    kc = jnp.repeat(k_chunk, rep, axis=2).astype(jnp.float32)
+    vc = jnp.repeat(v_chunk, rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    # scores over the concatenated [history | chunk] key axis
+    sh = jnp.einsum("brhd,bkhd->bhrk", qf, kh) / np.sqrt(d)
+    sc = jnp.einsum("brhd,bkhd->bhrk", qf, kc) / np.sqrt(d)
+    qpos = hist[:, None] + jnp.arange(r)[None, :]               # (B,R) absolute
+    hmask = jnp.arange(c)[None, None, :] < hist[:, None, None]  # (B,1,C)
+    hmask = jnp.broadcast_to(hmask, (b, r, c))
+    cmask = jnp.arange(r)[None, None, :] <= jnp.arange(r)[None, :, None]
+    cmask = jnp.broadcast_to(cmask, (b, r, r))
+    if window:
+        kpos_h = jnp.arange(c)[None, None, :]
+        kpos_c = hist[:, None, None] + jnp.arange(r)[None, None, :]
+        hmask &= qpos[:, :, None] - kpos_h < window
+        cmask &= qpos[:, :, None] - kpos_c < window
+    sh = jnp.where(hmask[:, None], sh, -jnp.inf)
+    sc = jnp.where(cmask[:, None], sc, -jnp.inf)
+    s = jnp.concatenate([sh, sc], axis=-1)
+    w = jax.nn.softmax(s, axis=-1)
+    vcat = jnp.concatenate([vh, vc], axis=1)
+    return jnp.einsum("bhrk,bkhd->brhd", w, vcat).astype(q.dtype)
+
+
 def ssd_ref(x, dt, a, b, c, initial_state=None):
     """Sequential Mamba2/SSD recurrence — the exact oracle.
 

@@ -404,6 +404,69 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, valid_len):
     return _masked_decode_attention(q, kc, vc, lengths)
 
 
+def _masked_chunk_attention(q_rows, k_cache, v_cache, lengths):
+    """The jnp (CPU/dry-run) incremental chunk-attention body: each of the
+    R chunk queries runs the EXACT single-token masked-decode body against
+    the (virtual) per-segment cache with its own valid length — so a
+    verify chunk's logits are bit-identical to the decode steps it
+    replaces on the fallback backend (the property speculative decoding's
+    bit-exactness rests on).
+
+    q_rows: (B, R, H, D); caches: (B, C, KV, D) with the chunk's own K/V
+    already scattered in at positions [hist, hist + R); lengths: (B, R)
+    int32 — query r attends cache entries [0, lengths[b, r]), and rows
+    with length 0 (padding) return zeros."""
+
+    def per_pos(args):
+        q, ln = args
+        return _masked_decode_attention(q, k_cache, v_cache, ln)
+
+    out = jax.lax.map(per_pos, (q_rows.swapaxes(0, 1), lengths.T))
+    return out.swapaxes(0, 1)
+
+
+def paged_chunk_attention(q_rows, k_pages, v_pages, k_rows, v_rows,
+                          block_tables, hist_lens, seg_lens):
+    """Incremental chunk attention: R new tokens per segment attend the
+    K/V their sequence already wrote into the shared page pool plus the
+    chunk's own K/V causally — the continuation/verification sibling of
+    ``paged_decode_attention``.
+
+    q_rows/k_rows/v_rows: (S, R, H|KV, D) per-segment chunk rows (row r
+    of segment s sits at absolute position hist_lens[s] + r);
+    k_pages/v_pages: (P, page_size, KV, D); block_tables: (S, max_pages)
+    int32; hist_lens/seg_lens: (S,) int32. Rows r >= seg_lens[s] are
+    padding (zeros in, garbage out — callers discard them).
+
+    On real TPUs this dispatches to the chunked paged Pallas kernel
+    (repro.kernels.chunk_attention); the fallback gathers each segment's
+    pages into logical order, scatters the chunk rows in at their
+    absolute positions, and runs the exact masked-decode body per chunk
+    position — bit-identical to the decode steps the chunk replaces."""
+    s, r_len, h, d = q_rows.shape
+    _, page_size, kvh, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    hist = jnp.broadcast_to(
+        jnp.asarray(hist_lens, jnp.int32).reshape(-1), (s,))
+    slen = jnp.broadcast_to(
+        jnp.asarray(seg_lens, jnp.int32).reshape(-1), (s,))
+    if jax.default_backend() == "tpu" and page_size % 8 == 0:
+        from repro.kernels.chunk_attention import \
+            paged_chunk_attention as _pallas
+        return _pallas(q_rows, k_pages, v_pages, k_rows, v_rows,
+                       block_tables, hist, slen)
+    kc = k_pages[block_tables].reshape(s, max_pages * page_size, kvh, d)
+    vc = v_pages[block_tables].reshape(s, max_pages * page_size, kvh, d)
+    pos = hist[:, None] + jnp.arange(r_len, dtype=jnp.int32)[None, :]
+    sidx = jnp.arange(s)[:, None]
+    kc = kc.at[sidx, pos].set(k_rows, mode="drop")
+    vc = vc.at[sidx, pos].set(v_rows, mode="drop")
+    lengths = jnp.where(
+        jnp.arange(r_len, dtype=jnp.int32)[None, :] < slen[:, None],
+        pos + 1, 0)
+    return _masked_chunk_attention(q_rows, kc, vc, lengths)
+
+
 def decode_index(pos, cache, key):
     """Per-row write/read machinery for one decode step over EITHER cache
     layout — the single place the paged-vs-ring storage contract lives, so

@@ -45,6 +45,11 @@ class ModelAPI:
     paged_keys: tuple = ()
     paged_cache_plan: Optional[Callable] = None
     init_paged_cache: Optional[Callable] = None
+    # incremental chunk attention: score NEW tokens against K/V already
+    # resident in the paged pool (chunked-prefill continuations and
+    # speculative-decoding verification). None for families without it —
+    # the engine then recomputes continuations from token 0.
+    prefill_chunk: Optional[Callable] = None
 
     # ------------------------------------------------------------- sharding
     def param_specs(self, mesh):
@@ -137,6 +142,12 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
     def prefill_packed(params, packed, max_seg_len):
         return mod.prefill_packed(params, cfg, packed, max_seg_len)
 
+    chunk_fn = getattr(mod, "prefill_chunk", None)
+    prefill_chunk = None
+    if chunk_fn is not None:
+        def prefill_chunk(params, packed, cache, max_seg_len):
+            return chunk_fn(params, cfg, packed, cache, max_seg_len)
+
     return ModelAPI(
         cfg=cfg,
         plan=mod.plan(cfg),
@@ -152,4 +163,5 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         paged_keys=paged_keys,
         paged_cache_plan=paged_plan,
         init_paged_cache=init_paged,
+        prefill_chunk=prefill_chunk,
     )

@@ -235,6 +235,74 @@ def prefill_packed(params, cfg, packed, max_seg_len: int):
     return logits, {"k": ks, "v": vs, "pos": seg_lens.astype(jnp.int32)}
 
 
+def prefill_chunk(params, cfg, packed, cache, max_seg_len: int):
+    """Incremental chunked prefill: score a packed batch of NEW token
+    segments against the K/V their sequences already hold in the paged
+    pool — each chunk token attends its slot's resident history (through
+    its block-table row) plus the chunk's earlier tokens causally, so a
+    continuation costs O(chunk) attention instead of recomputing the
+    whole prefix. The same dispatch powers speculative-decoding
+    verification: the k draft tokens are the chunk, and every position's
+    argmax is returned so the engine can score the draft on host.
+
+    ``packed`` carries the usual ``tokens`` (1, T) / ``seg_ids`` (T,) /
+    ``seg_starts``/``seg_lens`` (S,) plus ``seg_slots`` (S,) — the cache
+    row each segment's history lives in (padding = n_rows, clamped) —
+    and ``hist_lens`` (S,) — tokens already resident per segment
+    (padding = 0). ``cache`` is the engine's paged slot cache, READ
+    ONLY: (layers, P, page_size, KV, D) pools + (n_rows, max_pages)
+    ``block_tables``. Returns (per-segment last-position logits (S, V),
+    per-token argmax (T,) int32, a packed cache {k/v: (layers, T, KV, D),
+    pos: hist + seg_lens}) — the engine scatters the chunk's K/V into
+    pages afterwards via the same segment scatter admissions use.
+
+    On the jnp fallback every chunk position runs the exact masked-decode
+    attention body (see ``layers._masked_chunk_attention``), so chunk
+    logits are bit-identical to the decode steps they replace."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = packed["tokens"]
+    seg_ids, seg_starts = packed["seg_ids"], packed["seg_starts"]
+    seg_lens = packed["seg_lens"]
+    seg_slots = packed["seg_slots"]
+    hist = jnp.asarray(packed["hist_lens"], jnp.int32)
+    b, t = tokens.shape
+    s = seg_starts.shape[0]
+    x = L.embed_tokens(params["embed"], tokens, dtype)
+    local = L.packed_positions(seg_ids, seg_starts)
+    hist_t = jnp.where(seg_ids < s, hist[jnp.minimum(seg_ids, s - 1)], 0)
+    positions = (local + hist_t)[None, :]
+    n_rows = cache["block_tables"].shape[0]
+    tables = cache["block_tables"][jnp.clip(seg_slots, 0, n_rows - 1)]
+
+    def body(carry, xs):
+        lp, kp, vp = xs
+        h = L.apply_norm(lp["ln1"], carry, cfg.norm)
+        q, k, v = L.attn_qkv(lp["attn"], cfg, h, positions)
+        qr = L.segments_to_rows(q[0], seg_starts, seg_lens, max_seg_len)
+        kr = L.segments_to_rows(k[0], seg_starts, seg_lens, max_seg_len)
+        vr = L.segments_to_rows(v[0], seg_starts, seg_lens, max_seg_len)
+        ar = L.paged_chunk_attention(qr, kp, vp, kr, vr, tables, hist,
+                                     seg_lens)
+        attn = L.rows_to_segments(ar, seg_ids, local)[None]
+        x1 = carry + L.attn_out(lp["attn"], carry.dtype, attn)
+        h2 = L.apply_norm(lp["ln2"], x1, cfg.norm)
+        if cfg.num_experts:
+            y, _ = apply_moe(lp["moe"], cfg, h2)
+        else:
+            y = L.apply_mlp(lp["mlp"], h2)
+        return x1 + y, (k[0], v[0])
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    xl = L.apply_norm(params["final_norm"], x[0], cfg.norm)
+    logits_all = L.unembed(params["embed"], xl, cfg)           # (T, V)
+    tok_argmax = jnp.argmax(logits_all, -1).astype(jnp.int32)
+    last = jnp.clip(seg_starts + seg_lens - 1, 0, t - 1)
+    seg_logits = logits_all[last]
+    return seg_logits, tok_argmax, {
+        "k": ks, "v": vs, "pos": (hist + seg_lens).astype(jnp.int32)}
+
+
 def decode_step(params, cfg, token, cache) -> Tuple[jax.Array, dict]:
     """token: (B,) int32; one autoregressive step against the KV cache.
 

@@ -146,6 +146,18 @@ class EngineStats:
     prefix_hit_tokens: int = 0
     cow_copies: int = 0
     forced_catchup_tokens: int = 0
+    # incremental chunk attention (ISSUE 9): continuation dispatches that
+    # computed ONLY the new chunk against resident pages (no prefix
+    # recompute) — each is also counted in chunk_prefills
+    incr_chunks: int = 0
+    # speculative decoding (ISSUE 9): draft tokens proposed, of which
+    # accepted by the target's verify chunk, verify rounds run, and
+    # rounds that rejected at least one draft token (rolled back to the
+    # last accepted position)
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
+    spec_rounds: int = 0
+    rollbacks: int = 0
 
 
 class InferenceEngine:
@@ -198,6 +210,7 @@ class InferenceEngine:
         self._write_slot = jax.jit(_write_slot, donate_argnums=(0,))
         self._write_slot_paged = None      # built by init_slots(paged=True)
         self._clear_slot = None
+        self._clear_ring = None            # built by init_slots(paged=False)
         # packed ragged prefill: one executable per (total-token bucket,
         # row_len) pair — O(log max_len) total; built lazily
         self._packed_prefill_jit: Dict[Any, Any] = {}
@@ -212,6 +225,23 @@ class InferenceEngine:
         self.prefix_cache = None
         self._copy_page = None
         self._alias_slot = None
+        # incremental chunk attention (ISSUE 9): one executable per
+        # (token bucket, row_len, segment bucket) triple, shared by
+        # chunked-prefill continuations and speculative verification.
+        # The slot cache rides in as a READ-ONLY operand (never donated):
+        # only the chunk's own K/V comes back, and the segment scatter
+        # commits it
+        self._chunk_prefill_jit: Dict[Any, Any] = {}
+        # speculative decoding (attach_draft): a paired ring engine
+        # drafts spec_k tokens per round in one scanned dispatch; the
+        # target verifies them in one chunk dispatch. _draft_ready holds
+        # target slots whose draft twin is admitted (identity pairing:
+        # target slot i drafts in draft slot i)
+        self._draft: Optional["InferenceEngine"] = None
+        self._draft_scan = None
+        self._spec_commit = None
+        self._draft_ready: set = set()
+        self.spec_k = 0
 
         # slot state (populated by init_slots)
         self.paged = False
@@ -286,6 +316,34 @@ class InferenceEngine:
         self.stats.packed_prefills += 1
         self.stats.prefill_tokens += int(jnp.sum(packed["seg_lens"]))
         return logits, pcache
+
+    def prefill_chunk_packed(self, packed: Dict[str, Any],
+                             row_len: Optional[int] = None):
+        """One INCREMENTAL dispatch over a packed batch of continuation
+        chunks: each segment's new tokens attend the K/V its slot already
+        wrote into the page pool (through the slot's block-table row)
+        plus the chunk itself causally — nothing before the chunk is
+        recomputed. Same (T, row_len, S) bucket discipline as
+        ``prefill_packed``; ``packed`` additionally carries ``seg_slots``
+        (block-table rows to read) and ``hist_lens`` (tokens already
+        resident per segment). Returns (per-segment last logits (S, V),
+        per-token argmax (T,), packed cache) — the per-token argmax row
+        is what speculative verification scores drafts against. Stats are
+        charged by the callers (a continuation is prefill progress; a
+        verify chunk is not)."""
+        if row_len is None:
+            row_len = min(self.slot_len, _pow2_at_least(
+                int(jnp.max(packed["seg_lens"]))))
+        row_len = max(1, row_len)
+        key = (packed["tokens"].shape[1], row_len,
+               packed["seg_starts"].shape[0])
+        fn = self._chunk_prefill_jit.get(key)
+        if fn is None:
+            api = self.api
+            fn = jax.jit(lambda p, pk, cache, _r=row_len: api.prefill_chunk(
+                p, pk, cache, _r))
+            self._chunk_prefill_jit[key] = fn
+        return fn(self.params, packed, self._slot_cache)
 
     def decode(self, token, cache):
         logits, cache = self._decode(self.params, token, cache)
@@ -450,11 +508,12 @@ class InferenceEngine:
             self._write_slot_paged = jax.jit(
                 _make_write_slot_paged(self.api.paged_keys, page_size),
                 donate_argnums=(0,))
-            self._clear_slot = jax.jit(_clear_slot, donate_argnums=(0,))
+            self._clear_slot = jax.jit(_clear_slot, donate_argnums=(0, 1))
             self._set_table_row = jax.jit(_set_table_row, donate_argnums=(0,))
         else:
             self._kv = None
             self._slot_cache = self.api.init_cache(n_slots, self.slot_len)
+            self._clear_ring = jax.jit(_clear_ring, donate_argnums=(0, 1))
         # decode/chunk dispatches merge per-row cache leaves through a step
         # mask; page-indexed leaves (and the table, which decode never
         # writes) pass through — their dead writes land on the null page
@@ -722,6 +781,53 @@ class InferenceEngine:
         return (jnp.asarray(dest0), jnp.asarray(dest1),
                 jnp.asarray(seg_slots), table_rows)
 
+    def _pack_chunks(self, batches: List[Dict[str, Any]], lens: List[int],
+                     slots: List[int], hists: List[int]) -> Dict[str, Any]:
+        """Pack continuation chunks for the incremental prefill: the
+        regular packed-prompt row plus ``seg_slots`` (whose block-table
+        row each segment reads its history through; padding carries
+        ``n_slots``, clamped inside the model where its zero-length
+        segment attends nothing) and ``hist_lens`` (tokens already
+        resident; padding 0)."""
+        import numpy as np
+        packed = self._pack_prompts(batches, lens)
+        s_max = packed["seg_starts"].shape[0]
+        seg_slots = np.full((s_max,), self.n_slots, np.int32)
+        seg_slots[:len(slots)] = slots
+        hist = np.zeros((s_max,), np.int32)
+        hist[:len(hists)] = hists
+        packed["seg_slots"] = jnp.asarray(seg_slots)
+        packed["hist_lens"] = jnp.asarray(hist)
+        return packed
+
+    def _segment_dest_at(self, slots: List[int], lens: List[int],
+                         offs: List[int]):
+        """``_segment_dest`` for continuation chunks: segment i's tokens
+        land at positions ``offs[i] .. offs[i]+lens[i]`` of its slot
+        (paged only — the incremental path requires resident pages).
+        Table rows are the slot's CURRENT pages: the chunk's destination
+        pages were reserved before the dispatch (admission horizon or an
+        executed grow)."""
+        import numpy as np
+        assert self.paged
+        t = max(1, _packed_bucket(sum(lens)))
+        s_max = max(1, _pow2_at_least(len(slots)))
+        seg_slots = np.full((s_max,), self.n_slots, np.int32)
+        seg_slots[:len(slots)] = slots
+        dest0 = np.zeros((t,), np.int32)             # null page
+        dest1 = np.zeros((t,), np.int32)
+        tables = np.full((s_max, self.max_pages), NULL_PAGE, np.int32)
+        off = 0
+        for i, (slot, ln, h) in enumerate(zip(slots, lens, offs)):
+            pages = np.asarray(self._kv.pages(slot), np.int32)
+            p = np.arange(h, h + ln)
+            dest0[off:off + ln] = pages[p // self.page_size]
+            dest1[off:off + ln] = p % self.page_size
+            tables[i, :len(pages)] = pages
+            off += ln
+        return (jnp.asarray(dest0), jnp.asarray(dest1),
+                jnp.asarray(seg_slots), jnp.asarray(tables))
+
     def free(self, slot: int) -> None:
         """Release a slot: its pages return to the pool, its block-table
         row parks on the null page, and its position pins to 0 (here and
@@ -729,16 +835,22 @@ class InferenceEngine:
         the null page and their attention reads are masked to zero."""
         if not self._slot_active[slot]:
             return
+        if slot in self._draft_ready:
+            # the draft twin dies with its target
+            self._draft.free(slot)
+            self._draft_ready.discard(slot)
         self._slot_active[slot] = False
         self._slot_free.append(slot)
         self._slot_pos[slot] = 0
-        self._active_mask = self._active_mask.at[slot].set(False)
         if self.paged:
             self._kv.free(slot)
-            self._slot_cache = self._clear_slot(self._slot_cache,
-                                                jnp.int32(slot))
+            self._slot_cache, self._active_mask = self._clear_slot(
+                self._slot_cache, self._active_mask, jnp.int32(slot))
         else:
-            self._slot_cache["pos"] = self._slot_cache["pos"].at[slot].set(0)
+            cache = dict(self._slot_cache)
+            cache["pos"], self._active_mask = self._clear_ring(
+                cache["pos"], self._active_mask, jnp.int32(slot))
+            self._slot_cache = cache
 
     # ------------------------------------------- radix prompt cache
     def prefix_cache_capable(self) -> bool:
@@ -753,6 +865,39 @@ class InferenceEngine:
         extra = (set(self._slot_cache.keys())
                  - set(self.api.paged_keys) - {"block_tables", "pos"})
         return not extra
+
+    # --------------------------------- incremental chunk / speculation
+    def chunk_capable(self) -> bool:
+        """A family takes the incremental continuation path iff its paged
+        pages + ``pos`` are a row's entire sequence state (same criterion
+        as the prefix cache — extra per-row leaves mean the prefix must
+        be recomputed to carry the state forward), the family ships a
+        ``prefill_chunk``, and it has no experts (the MoE packed-prefill
+        caveat: per-token routing under segment masking is not yet
+        bit-stable across packings — see tests/test_moe.py)."""
+        if not self.prefix_cache_capable():
+            return False
+        if self.api.prefill_chunk is None:
+            return False
+        return not getattr(self.cfg, "num_experts", 0)
+
+    def spec_capable(self) -> bool:
+        """Speculative decoding additionally requires greedy slot
+        sampling: draft/verify equivalence is an arg-max identity."""
+        return self.chunk_capable() and self._slot_sampling is None
+
+    def host_last_token(self, slot: int) -> int:
+        """Host read of the slot's pending token (the next decode input,
+        not yet emitted). The planner captures it once per request as the
+        speculation seed; a per-slot sync, so gated on spec serving."""
+        import numpy as np
+        return int(np.asarray(self._last_tok[slot]))
+
+    def draft_synced(self, slot: int) -> bool:
+        """True when the slot's draft twin exists and sits at the same
+        written-token position — the next spec round needs no re-init."""
+        return (self._draft is not None and slot in self._draft_ready
+                and self._draft._slot_pos[slot] == self._slot_pos[slot])
 
     def enable_prefix_cache(self):
         """Attach a radix prompt cache over this engine's page allocator
@@ -956,7 +1101,16 @@ class InferenceEngine:
         what a one-shot insert seeds — so chunked prefill is bit-exact
         with whole-prompt admission by construction. The recompute costs
         O(prefix) extra FLOPs per chunk (the classic chunked-prefill
-        trade: bounded per-tick work, decode never stalls on a burst)."""
+        trade: bounded per-tick work, decode never stalls on a burst).
+
+        ``chunk_capable`` engines skip the recompute entirely
+        (``stats.incr_chunks``): only the NEW tokens pack, and the
+        incremental chunk attention kernel scores them against the K/V
+        already resident in the slot's pages — O(chunk) per continuation
+        instead of O(prefix + chunk). Each new position runs the same
+        masked-decode attention body a decode step would, so the
+        continuation stays exact with the whole-prompt admission it
+        replaces."""
         if not chunks:
             return
         lens = []
@@ -969,6 +1123,28 @@ class InferenceEngine:
                 f"slot {slot}: chunk makes no progress"
             lens.append(ln)
         slots = [slot for slot, _, _ in chunks]
+        if self.chunk_capable():
+            import numpy as np
+            offs = [self._slot_pos[slot] for slot in slots]
+            new_lens = [ln - off for ln, off in zip(lens, offs)]
+            news = [{"tokens": jnp.asarray(
+                np.asarray(b["tokens"])[:, off:ln])}
+                for (_, b, _), off, ln in zip(chunks, offs, lens)]
+            packed = self._pack_chunks(news, new_lens, slots, offs)
+            seg_logits, _, pcache = self.prefill_chunk_packed(
+                packed, row_len=min(self.slot_len,
+                                    _pow2_at_least(max(new_lens))))
+            args = self._segment_dest_at(slots, new_lens, offs)
+            self._slot_cache, self._last_tok = self._write_segments(
+                self._slot_cache, self._last_tok, pcache, seg_logits, *args)
+            for slot, ln in zip(slots, lens):
+                self._slot_pos[slot] = ln
+            self.stats.prefills += 1
+            self.stats.packed_prefills += 1
+            self.stats.chunk_prefills += 1
+            self.stats.incr_chunks += 1
+            self.stats.prefill_tokens += sum(new_lens)
+            return
         packed = self._pack_prompts([b for _, b, _ in chunks], lens)
         logits, pcache = self.prefill_packed(
             packed, row_len=min(self.slot_len, _pow2_at_least(max(lens))))
@@ -978,6 +1154,346 @@ class InferenceEngine:
         for slot, ln in zip(slots, lens):
             self._slot_pos[slot] = ln
         self.stats.chunk_prefills += 1
+
+    # ------------------------------------------- speculative decoding
+    def attach_draft(self, draft: "InferenceEngine", spec_k: int
+                     ) -> "InferenceEngine":
+        """Pair a small ring-slot draft engine with this (paged, greedy)
+        target for speculative decoding: per spec round the draft
+        proposes up to ``spec_k`` tokens in ONE scanned dispatch and the
+        target verifies them all in ONE incremental chunk dispatch.
+
+        Identity pairing — target slot i drafts in draft slot i — so the
+        draft needs at least as many slots, each long enough to mirror a
+        full target slot (ring wrap would corrupt the mirrored history).
+        The ring never pages, so drafting can neither OutOfPages nor
+        perturb the target's pool. Vocabularies must agree: accepted
+        draft tokens feed the target's embedding directly."""
+        if int(spec_k) < 1:
+            raise ValueError("spec_k must be >= 1")
+        if not self.spec_capable():
+            raise ValueError(
+                f"{self.cfg.name}: speculative decoding needs a paged "
+                "greedy engine whose per-row state is exactly pages + pos "
+                "and whose family ships prefill_chunk")
+        if draft.paged:
+            raise ValueError("draft must use ring slots (paged=False)")
+        if draft.n_slots < self.n_slots or draft.slot_len < self.slot_len:
+            raise ValueError(
+                f"draft needs >= {self.n_slots} slots of >= "
+                f"{self.slot_len} tokens (has {draft.n_slots} x "
+                f"{getattr(draft, 'slot_len', 0)})")
+        if draft.cfg.vocab_size != self.cfg.vocab_size:
+            raise ValueError(
+                f"draft/target vocabularies differ "
+                f"({draft.cfg.vocab_size} vs {self.cfg.vocab_size})")
+        self._draft = draft
+        self.spec_k = int(spec_k)
+        self._draft_ready = set()
+        api, skip = draft.api, draft._step_skip
+
+        # the whole draft round is one scanned dispatch: spec_k + 1
+        # masked greedy decode-steps (the same body `step` runs), each
+        # step's per-slot mask an input. Step i writes the previous
+        # token's K/V and proposes the next; the final step exists only
+        # to write the last proposal's K/V (its own proposal is
+        # discarded) so an all-accepted round leaves the draft exactly
+        # one teacher-forced bonus token behind the target.
+        # the scan also assembles the verify-chunk token row ON DEVICE:
+        # position 0 of each segment is the target's pending token,
+        # positions 1..k its draft proposals. The host builds only the
+        # (static) index vectors, so the verify dispatch queues
+        # back-to-back behind the draft scan with no host sync — and no
+        # separate gather dispatch — between them.
+        def scan_fn(params, tok, cache, masks, tok_t, idx_t, idx_d,
+                    step_idx, slot_idx):
+            # teacher-force inside the dispatch: pin each paired row's
+            # pending token to the target's — the host never reads
+            # either engine's _last_tok to start a round
+            tok = tok.at[idx_d].set(tok_t[idx_t], mode="drop")
+
+            def body(carry, mask_t):
+                tok, cache = carry
+                tok, cache = _slot_decode_step(api, skip, params, tok,
+                                               cache, mask_t)
+                return (tok, cache), tok
+
+            (tok, cache), props = jax.lax.scan(body, (tok, cache), masks)
+            seed = tok_t[jnp.clip(slot_idx, 0, tok_t.shape[0] - 1)]
+            drafted = props[jnp.maximum(step_idx - 1, 0), slot_idx]
+            verify = jnp.where(step_idx == 0, seed, drafted)[None, :]
+            return props, verify, tok, cache
+
+        self._draft_scan = jax.jit(scan_fn, donate_argnums=(2,))
+
+        # end-of-round commit fused into ONE dispatch: the packed-segment
+        # scatter plus the fixups (pin both engines' pending tokens to
+        # the bonus, rewind the draft ring to the accepted horizon) —
+        # separately they cost three extra dispatch overheads per round.
+        # All round-variable integers ride as ONE flat upload, sliced by
+        # the (static) arg shapes: [bonus | draft pos | accepted pos |
+        # dest pages/offsets].
+        ws = _make_write_segments(self.api.paged_keys)
+
+        def commit_fn(slot_cache, last_tok, lt_d, pos_d, pcache,
+                      seg_logits, aux, segs, tables, idx_t, idx_d):
+            n, s = idx_t.shape[0], segs.shape[0]
+            gv, dp = aux[:n], aux[n:2 * n]
+            new_pos = aux[2 * n:2 * n + s]
+            dest = aux[2 * n + s:].reshape(2, -1)
+            pcache = dict(pcache)
+            pcache["pos"] = new_pos
+            slot_cache, last_tok = ws(slot_cache, last_tok, pcache,
+                                      seg_logits, dest[0], dest[1], segs,
+                                      tables)
+            return (slot_cache,
+                    last_tok.at[idx_t].set(gv, mode="drop"),
+                    lt_d.at[idx_d].set(gv, mode="drop"),
+                    pos_d.at[idx_d].set(dp, mode="drop"))
+
+        self._spec_commit = jax.jit(commit_fn, donate_argnums=(0, 1, 2, 3))
+        self._spec_consts = {}
+        self._spec_dest = {}
+        return draft
+
+    def _spec_round(self, entries: List[Tuple[int, int, Optional[List[int]]]],
+                    res) -> None:
+        """One draft → verify → accept/rollback round for the plan's
+        ``spec`` entries [(slot, k, init_tokens-or-None)].
+
+        Protocol (greedy): the target's pending token t sits at position
+        P = ``_slot_pos[slot]`` with its K/V unwritten. The draft —
+        teacher-forced to the same history — proposes d_1..d_k; the
+        verify chunk runs [t, d_1..d_k] through the incremental prefill,
+        whose per-token argmax row IS the sequence of tokens greedy
+        decode would have emitted one step at a time. The longest prefix
+        a of agreeing drafts is accepted, and position P+a's argmax is
+        the bonus token — a+1 tokens emitted per round (so a round is
+        never slower than the decode step it replaced). Commit rides the
+        existing segment scatter with the packed ``pos`` overridden to
+        the ACCEPTED horizon P+a+1: rejected positions' K/V land in the
+        slot's reserved pages but sit past pos, never attended, and are
+        rewritten in order before they ever matter — rollback costs zero
+        dispatches and conserves pages. The draft rolls back the same
+        way (ring pos rewind) and both ends hold the bonus token as
+        their pending input, keeping the pair in lockstep for the next
+        round."""
+        import numpy as np
+        tel = self.telemetry
+        draft = self._draft
+        slots = [s for s, _, _ in entries]
+        offs = [self._slot_pos[s] for s in slots]
+
+        # (re)admit draft twins that are missing or out of lockstep (the
+        # slot decoded plainly while speculation was gated off): one
+        # packed prefill on the DRAFT engine re-mirrors the history
+        admit = []
+        for (slot, _, init), off in zip(entries, offs):
+            if self.draft_synced(slot):
+                continue
+            if slot in self._draft_ready:
+                draft.free(slot)
+                self._draft_ready.discard(slot)
+            assert init is not None and len(init) == off, \
+                f"slot {slot}: draft init missing or mismatched"
+            admit.append((slot, init))
+        if admit:
+            order = [s for s, _ in admit]
+            chosen = set(order)
+            draft._slot_free = order + [s for s in draft._slot_free
+                                        if s not in chosen]
+            t0 = tel.t0() if tel is not None else 0.0
+            got = draft.insert_many(
+                [{"tokens": jnp.asarray(np.asarray(toks, np.int32)[None, :])}
+                 for _, toks in admit],
+                n_tokens=[None] * len(admit))
+            assert got == order, "draft twin landed on the wrong slot"
+            self._draft_ready.update(order)
+            res.dispatches += 1
+            if tel is not None:
+                tel.dispatch_done(draft, "spec_admit", len(admit), t0,
+                                  sync=draft._slot_cache, segs=len(admit))
+
+        # round constants: every index vector, scan mask, and segment-
+        # layout array depends only on (slots, ks) — identical for every
+        # steady-state round — so each combination's host numpy and
+        # device arrays build ONCE and replay. A spec round's HOST cost
+        # is what bounds the speedup over plain per-token decode
+        # (bench_decode --speculative measures exactly this), so the
+        # per-round work must be O(changed state), not O(layout).
+        ckey = (tuple(slots), tuple(k for _, k, _ in entries))
+        consts = self._spec_consts.get(ckey)
+        if consts is None:
+            # index vectors pad to each engine's OWN slot count (out of
+            # bounds, mode="drop"); the draft gets its own padding — it
+            # may have more slots, so the target's n_slots could be a
+            # live row there
+            idx = np.full((self.n_slots,), self.n_slots, np.int32)
+            idx[:len(slots)] = slots
+            idxd = np.full((self.n_slots,), draft.n_slots, np.int32)
+            idxd[:len(slots)] = slots
+            n_steps = self.spec_k + 1
+            m = np.zeros((n_steps, draft.n_slots), bool)
+            for slot, k, _ in entries:
+                m[:k + 1, slot] = True
+            vlens = [k + 1 for _, k, _ in entries]
+            t = max(1, _packed_bucket(sum(vlens)))
+            s_max = max(1, _pow2_at_least(len(slots)))
+            seg_ids = np.full((t,), s_max, np.int32)
+            seg_starts = np.zeros((s_max,), np.int32)
+            seg_lens = np.zeros((s_max,), np.int32)
+            seg_slots = np.full((s_max,), self.n_slots, np.int32)
+            seg_slots[:len(slots)] = slots
+            step_np = np.zeros((t,), np.int32)
+            slot_np = np.zeros((t,), np.int32)
+            starts = []
+            off = 0
+            for j, (slot, k, _) in enumerate(entries):
+                ln = k + 1
+                seg_ids[off:off + ln] = j
+                seg_starts[j] = off
+                seg_lens[j] = ln
+                step_np[off:off + ln] = np.arange(ln)
+                slot_np[off:off + ln] = slot
+                starts.append(off)
+                off += ln
+            consts = {
+                "idx_j": jnp.asarray(idx), "idx_d": jnp.asarray(idxd),
+                "mask": jnp.asarray(m), "n_steps": n_steps,
+                "vlens": vlens, "t": t, "s_max": s_max, "starts": starts,
+                "row_len": min(self.slot_len, _pow2_at_least(max(vlens))),
+                "seg_ids": jnp.asarray(seg_ids),
+                "seg_starts": jnp.asarray(seg_starts),
+                "seg_lens": jnp.asarray(seg_lens),
+                "seg_slots": jnp.asarray(seg_slots),
+                "step_idx": jnp.asarray(step_np),
+                "slot_idx": jnp.asarray(slot_np),
+            }
+            self._spec_consts[ckey] = consts
+        idx_j, idx_d = consts["idx_j"], consts["idx_d"]
+        vlens, starts = consts["vlens"], consts["starts"]
+        t, s_max = consts["t"], consts["s_max"]
+
+        # ---- draft: k+1 masked steps (teacher-forcing fused into the
+        # scan prologue), one dispatch, nothing read back yet
+        t0 = tel.t0() if tel is not None else 0.0
+        props, verify_tok, dtok, dcache = self._draft_scan(
+            draft.params, draft._last_tok, draft._slot_cache,
+            consts["mask"], self._last_tok, idx_j, idx_d,
+            consts["step_idx"], consts["slot_idx"])
+        draft._last_tok = dtok
+        draft._slot_cache = dcache
+        res.dispatches += 1
+        if tel is not None:
+            tel.dispatch_done(draft, "spec_draft", consts["n_steps"], t0,
+                              sync=props, slots=len(slots))
+
+        # ---- verify: [t, d_1..d_k] per slot, one incremental chunk.
+        # The token row is gathered from the draft's proposals ON
+        # DEVICE, so the verify queues behind the scan without a host
+        # sync and the two dispatches pipeline; only hist_lens (the
+        # per-slot accepted horizon) uploads fresh each round
+        hist = np.zeros((s_max,), np.int32)
+        hist[:len(offs)] = offs
+        packed = {
+            "tokens": verify_tok,
+            "seg_ids": consts["seg_ids"],
+            "seg_starts": consts["seg_starts"],
+            "seg_lens": consts["seg_lens"],
+            "seg_slots": consts["seg_slots"],
+            "hist_lens": jnp.asarray(hist),
+        }
+        t0 = tel.t0() if tel is not None else 0.0
+        seg_logits, tok_argmax, pcache = self.prefill_chunk_packed(
+            packed, row_len=consts["row_len"])
+        res.dispatches += 1
+        if tel is not None:
+            tel.dispatch_done(self, "spec_verify",
+                              _packed_bucket(sum(vlens)), t0,
+                              sync=(seg_logits, pcache),
+                              segs=len(slots), tokens=sum(vlens))
+
+        # ---- accept / commit / rollback: the round's ONLY host reads —
+        # both dispatches are already in flight when these block
+        props_h = np.asarray(props).T.tolist()   # per-slot proposal lists
+        amax = np.asarray(tok_argmax).tolist()
+        new_pos = np.zeros((s_max,), np.int32)
+        gvals = np.zeros((self.n_slots,), np.int32)
+        dpos = np.zeros((self.n_slots,), np.int32)
+        emitted_total = accepted_total = drafted_total = n_roll = 0
+        for j, (slot, k, _) in enumerate(entries):
+            st = starts[j]
+            pl = props_h[slot]
+            a = 0
+            while a < k and pl[a] == amax[st + a]:
+                a += 1
+            g = amax[st + a]                         # bonus token
+            res.spec_tokens[slot] = pl[:a] + [g]
+            new_pos[j] = offs[j] + a + 1
+            gvals[j] = g
+            dpos[j] = offs[j] + a + 1
+            self._slot_pos[slot] = offs[j] + a + 1
+            self._slot_generated[slot] += a + 1
+            draft._slot_pos[slot] = offs[j] + a + 1
+            emitted_total += a + 1
+            accepted_total += a
+            drafted_total += k
+            if a < k:
+                n_roll += 1
+        # commit through the segment scatter with pos pinned to the
+        # accepted horizon (rejected K/V sits past pos, never attended),
+        # fused with the fixups — pending tokens pinned to the BONUS
+        # (the scatter seeds argmax after P+k, not P+a), draft ring
+        # rolled back to lockstep — in ONE dispatch. A resident slot's
+        # pages are stable, so its table row uploads once per (slots,
+        # pages) set; only the per-token dest coords (which track the
+        # accepted horizon) re-upload each round.
+        dkey = (ckey[0], self._kv.version)
+        cached = self._spec_dest.get(dkey)
+        if cached is None:
+            if len(self._spec_dest) > 64:
+                self._spec_dest.clear()
+            pages_h = [np.asarray(self._kv.pages(s), np.int32)
+                       for s in slots]
+            tb = np.full((s_max, self.max_pages), NULL_PAGE, np.int32)
+            for i, p in enumerate(pages_h):
+                tb[i, :len(p)] = p
+            cached = (pages_h, jnp.asarray(tb))
+            self._spec_dest[dkey] = cached
+        pages_h, tables = cached
+        n = self.n_slots
+        aux = np.zeros((2 * n + s_max + 2 * t,), np.int32)
+        aux[:n], aux[n:2 * n] = gvals, dpos
+        aux[2 * n:2 * n + s_max] = new_pos
+        dest = aux[2 * n + s_max:].reshape(2, t)
+        for i, (p, ln, h) in enumerate(zip(pages_h, vlens, offs)):
+            span = np.arange(h, h + ln)
+            dest[0, starts[i]:starts[i] + ln] = p[span // self.page_size]
+            dest[1, starts[i]:starts[i] + ln] = span % self.page_size
+        dc = dict(draft._slot_cache)
+        (self._slot_cache, self._last_tok, draft._last_tok,
+         dc["pos"]) = self._spec_commit(
+            self._slot_cache, self._last_tok, draft._last_tok, dc["pos"],
+            pcache, seg_logits, jnp.asarray(aux),
+            consts["seg_slots"], tables, idx_j, idx_d)
+        draft._slot_cache = dc
+
+        self.stats.spec_rounds += 1
+        self.stats.draft_tokens += drafted_total
+        self.stats.accepted_tokens += accepted_total
+        self.stats.rollbacks += n_roll
+        self.stats.tokens_out += emitted_total
+        for slot, active in enumerate(self._slot_active):
+            if active:
+                budget = self._slot_budget[slot]
+                if (budget is not None
+                        and self._slot_generated[slot] >= budget
+                        and slot not in res.done):
+                    res.done.append(slot)
+        if tel is not None:
+            tel.instant(tel.engine_track(self), "spec_round",
+                        slots=len(slots), drafted=drafted_total,
+                        accepted=accepted_total, rollbacks=n_roll)
 
     # ---------------------------------------------------- fault tolerance
     def attach_faults(self, injector, max_retries: Optional[int] = None,
@@ -1202,6 +1718,10 @@ class InferenceEngine:
                 tel.dispatch_done(self, "decode",
                                   len(decodes) + len(forced), t0,
                                   sync=toks, forced=len(forced))
+        spec = [e for e in getattr(plan, "spec", ())
+                if e[0] not in failed]
+        if spec:
+            self._spec_round(spec, res)
         return res
 
     def _get_slot_step(self, sampling: Optional[SamplingParams]):
@@ -1316,6 +1836,10 @@ class InferenceEngine:
         self._slot_free.sort()
         if self.paged:
             self._kv.allocator.sort_free()
+        if self._draft is not None:
+            # freeing the targets freed their twins; restore the draft's
+            # canonical free-list order too (same exact-replay argument)
+            self._draft.release_all_slots()
 
     def reset_stats(self) -> None:
         """Zero the counters WITHOUT touching the jit caches — the pool
@@ -1355,9 +1879,18 @@ class InferenceEngine:
             out["write_slot_paged"] = n(self._write_slot_paged)
             out["clear_slot"] = n(self._clear_slot)
             out["set_table_row"] = n(self._set_table_row)
+        if self._clear_ring is not None:
+            out["clear_ring"] = n(self._clear_ring)
         if self._copy_page is not None:
             out["copy_page"] = n(self._copy_page)
             out["alias_slot"] = n(self._alias_slot)
+        if self._chunk_prefill_jit:
+            out["chunk_prefill"] = sum(
+                n(f) for f in self._chunk_prefill_jit.values())
+        if self._draft_scan is not None:
+            out["draft_scan"] = n(self._draft_scan)
+        if self._spec_commit is not None:
+            out["spec_commit"] = n(self._spec_commit)
         return out
 
 
@@ -1523,14 +2056,20 @@ def _alias_slot(cache, slot, table_row, pos):
     return cache
 
 
-def _clear_slot(cache, slot):
+def _clear_slot(cache, mask, slot):
     """Park a freed slot: position 0 + whole table row on the null page,
     so its dead writes can never alias a page later granted to another
-    sequence."""
+    sequence. The active-mask clear rides the same dispatch — a separate
+    eager scatter costs a full dispatch overhead per free."""
     cache = dict(cache)
     cache["pos"] = cache["pos"].at[slot].set(0)
     cache["block_tables"] = cache["block_tables"].at[slot].set(NULL_PAGE)
-    return cache
+    return cache, mask.at[slot].set(False)
+
+
+def _clear_ring(pos, mask, slot):
+    """Ring-slot free: position and active-mask clear in one dispatch."""
+    return pos.at[slot].set(0), mask.at[slot].set(False)
 
 
 def make_engine(cfg, *, seed: int = 0, cache_len: int = 256,

@@ -223,6 +223,10 @@ class PagedKVCache:
         self.page_size = page_size
         self.max_pages = max_pages
         self._rows: Dict[int, SeqPages] = {}
+        # bumps on every page-ownership change — an O(1) cache key for
+        # host-side structures derived from page layouts (e.g. the
+        # speculative rounds' uploaded block-table rows)
+        self.version = 0
 
     # ------------------------------------------------------------- queries
     @property
@@ -266,6 +270,7 @@ class PagedKVCache:
                 f"{self.max_pages * self.page_size}")
         pages = self.allocator.alloc(self.pages_needed(tokens))
         self._rows[row] = SeqPages(pages=pages, length=tokens)
+        self.version += 1
         return pages
 
     def alloc_alias(self, row: int, shared_pages: Sequence[int],
@@ -291,6 +296,7 @@ class PagedKVCache:
                 f"{tokens} tokens — nothing left to write")
         fresh = self.allocator.alloc(need)
         self._rows[row] = SeqPages(pages=shared + fresh, length=tokens)
+        self.version += 1
         return fresh
 
     def append(self, row: int, n: int = 1) -> List[int]:
@@ -308,6 +314,8 @@ class PagedKVCache:
                 f"{self.max_pages * self.page_size}")
         need = pages_for(new_len, self.page_size) - len(sp.pages)
         fresh = self.allocator.alloc(need) if need > 0 else []
+        if fresh:
+            self.version += 1
         sp.pages.extend(fresh)
         sp.length = new_len
         return fresh
@@ -321,6 +329,7 @@ class PagedKVCache:
         sp = self._rows.pop(row, None)
         if sp is None:
             return 0
+        self.version += 1
         return self.allocator.release(sp.pages)
 
     def reset(self) -> None:

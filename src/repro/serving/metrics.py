@@ -93,6 +93,13 @@ class ModelPoolMetrics:
     prefix_hits: int = 0
     prefix_hit_tokens: int = 0
     cow_copies: int = 0
+    # speculative decoding (ISSUE 9), mirrored from EngineStats: draft
+    # tokens proposed, draft tokens the target accepted, verify rounds
+    # dispatched, and rounds that rolled at least one token back
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
+    spec_rounds: int = 0
+    rollbacks: int = 0
     runtime: float = 0.0       # virtual busy seconds (Σ run latencies)
     chip_seconds: float = 0.0  # allocation-weighted: Σ chips·latency
     tokens: int = 0
@@ -207,5 +214,8 @@ class PoolResult:
                 + (f" resets={m.engine_resets}" if m.engine_resets else "")
                 + (f" pfx_hits={m.prefix_hits}({m.prefix_hit_tokens}tok)"
                    if m.prefix_hits else "")
-                + (f" cow={m.cow_copies}" if m.cow_copies else ""))
+                + (f" cow={m.cow_copies}" if m.cow_copies else "")
+                + (f" spec={m.accepted_tokens}/{m.draft_tokens}"
+                   f"({m.spec_rounds}r,{m.rollbacks}rb)"
+                   if m.spec_rounds else ""))
         return rows

@@ -145,12 +145,20 @@ class StepPlan:
     # would write there, with zero extra dispatches. Forced outputs
     # never reach ``StepResult.tokens`` (nothing was generated)
     forced: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    # speculative decoding (ISSUE 9): (slot, k, init_tokens-or-None)
+    # rounds replacing plain decode steps for those slots — the engine's
+    # paired draft proposes k tokens and ONE incremental chunk dispatch
+    # verifies them all. ``init_tokens`` is the slot's full written
+    # history (prompt + emitted prefix), present only when the draft
+    # twin must be (re)admitted; None while the pair is in lockstep
+    spec: List[Tuple[int, int, Optional[List[int]]]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def empty(self) -> bool:
         return not (self.admissions or self.decodes or self.preemptions
                     or self.frees or self.cancels or self.grows
-                    or self.forced)
+                    or self.forced or self.spec)
 
 
 @dataclasses.dataclass
@@ -172,6 +180,11 @@ class StepResult:
     dispatches: int = 0
     failed_grows: List[int] = dataclasses.field(default_factory=list)
     admission_failed: bool = False
+    # speculative rounds: the 1..k+1 tokens each spec slot emitted this
+    # tick (accepted drafts + the verify dispatch's bonus token), in
+    # stream order — the multi-token sibling of ``tokens``
+    spec_tokens: Dict[int, List[int]] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -214,6 +227,22 @@ class PlannerConfig:
     # tail advances one teacher-forced token per tick, so low-coverage
     # hits trade little prefill for a long serialized catch-up)
     prefix_min_frac: float = 0.5
+    # speculative decoding (needs ``engine.attach_draft``): draft up to
+    # spec_k tokens per decoding slot per tick and verify them in one
+    # incremental chunk dispatch. 0 = off
+    spec_k: int = 0
+    # decode-batch knee ABOVE which speculation is withheld (the
+    # accelerator is compute-bound there and verify FLOPs displace
+    # decode FLOPs — see ``core.scheduler.speculation_worthwhile``).
+    # None = always worthwhile (CPU-scale tests)
+    spec_knee_batch: Optional[int] = None
+    # acceptance-rate gate: withhold speculation while the trailing
+    # acceptance EMA sits below this floor (a chronically-wrong draft
+    # burns a dispatch per round for nothing), except on every
+    # ``spec_probe_every``-th eligible tick — the probe that lets the
+    # EMA recover when the workload turns draftable again
+    spec_min_accept: float = 0.0
+    spec_probe_every: int = 16
 
 
 @dataclasses.dataclass
@@ -236,6 +265,11 @@ class _Resident:
     # never ran (fault-before-mutation / stuck tick)
     alias: Any = None
     registered: bool = False           # prompt pages inserted in the cache
+    # speculation seed: argmax over the full prompt (the pending token
+    # right after prefill, never itself emitted) — captured ONCE from
+    # the device before the first decode so the planner can rebuild the
+    # slot's written history for draft (re)admission
+    seed_tok: Optional[int] = None
 
 
 def preemption_key(req: Request, sunk_tokens: int, now: float,
@@ -321,6 +355,13 @@ class StepPlanner:
         # terminates there instead of re-entering the queue
         self._cancelled: set = set()
         self._now = 0.0                    # last build() time (victim keys)
+        # speculation feedback: trailing acceptance-rate EMA (optimistic
+        # start — the first rounds measure it), eligible-tick counter
+        # (drives the probe cadence), and the k planned per spec slot
+        # this tick (observe turns emitted counts into acceptance rates)
+        self._spec_accept_ema = 1.0
+        self._spec_ticks = 0
+        self._spec_planned: Dict[int, int] = {}
         # telemetry plane (repro.serving.telemetry.Telemetry), set by
         # EnginePool.attach_telemetry or directly by the tick plane;
         # None = zero-cost (one attribute check per lifecycle event)
@@ -595,6 +636,17 @@ class StepPlanner:
         decodes = [s for s in decodes if s not in victims]
         slots_avail += len(victims)
 
+        # -- phase A_spec: move eligible decode slots onto speculative
+        # rounds. Gated on the roofline knee (speculate while decode is
+        # memory-bound; see ``speculation_worthwhile``) and on the
+        # trailing acceptance EMA with periodic probes. A spec slot's
+        # page horizon widens from pos+1 to pos+k+1 (the verify chunk
+        # writes k+1 positions); on page shortage k degrades instead of
+        # preempting anyone — speculation is an optimization and must
+        # never evict a resident to fund itself.
+        self._spec_planned = {}
+        pages_avail = self._plan_spec(plan, decodes, pages_avail)
+
         # -- phase B: continuation chunks for in-flight prefills, oldest
         # request first (finish what is resident before admitting more).
         # Each selected continuation advances by a full ``chunk_tokens``
@@ -692,6 +744,67 @@ class StepPlanner:
                 self._preempt(v, plan, now)
         return plan
 
+    def _plan_spec(self, plan: StepPlan, decodes: List[int],
+                   pages_avail: int) -> int:
+        """Phase A_spec: convert eligible ``decodes`` entries into
+        ``plan.spec`` rounds (mutates ``decodes`` in place), widening
+        their grow horizons to cover the verify chunk. Returns the
+        updated page-availability projection."""
+        eng, cfg = self.engine, self.config
+        if (cfg.spec_k <= 0 or not decodes or eng is None
+                or getattr(eng, "_draft", None) is None):
+            return pages_avail
+        from repro.core.scheduler.base import speculation_worthwhile
+        if not speculation_worthwhile(len(decodes), cfg.spec_knee_batch):
+            return pages_avail
+        self._spec_ticks += 1
+        probe = (self._spec_ticks % max(1, cfg.spec_probe_every)) == 0
+        if self._spec_accept_ema < cfg.spec_min_accept and not probe:
+            return pages_avail
+        for slot in list(decodes):
+            r = self._resident.get(slot)
+            if r is None:
+                continue
+            pos = eng.slot_pos(slot)
+            # k is capped so the round can never overshoot the request's
+            # budget (emits <= budget_left tokens) or the slot's pages
+            # (writes k+1 positions, all < slot_len); budget_left == 1
+            # degenerates to a plain decode step
+            budget_left = r.budget - r.req.tokens_out
+            k = min(cfg.spec_k, budget_left - 1, eng.slot_len - 1 - pos)
+            if k < 1:
+                continue
+            synced = eng.draft_synced(slot)
+            if not synced and r.seed_tok is None:
+                continue            # history unknown: cannot init a draft
+            if eng.paged:
+                base = self._grow_cost(slot, pos + 1)
+                delta = self._grow_cost(slot, pos + k + 1) - base
+                pages_avail = self._evict_cache(delta, pages_avail)
+                while k >= 1 and (self._grow_cost(slot, pos + k + 1)
+                                  - base) > pages_avail:
+                    k -= 1          # degrade, never preempt, to fit
+                if k < 1:
+                    continue
+                delta = self._grow_cost(slot, pos + k + 1) - base
+                if pos + k + 1 > eng.reserved_tokens(slot):
+                    # widen (or introduce) the slot's grow; phase A
+                    # already charged ``base`` for its pos+1 entry
+                    plan.grows = [(s, u) for s, u in plan.grows
+                                  if s != slot]
+                    plan.grows.append((slot, pos + k + 1))
+                    pages_avail -= delta
+            init: Optional[List[int]] = None
+            if not synced:
+                st = self.streams[r.req.rid]
+                toks = self._host_tokens(r)
+                init = toks[:r.prompt_len] + (
+                    [r.seed_tok] + st[:-1] if st else [])
+            plan.spec.append((slot, k, init))
+            decodes.remove(slot)
+            self._spec_planned[slot] = k
+        return pages_avail
+
     def _preempt(self, slot: int, plan: StepPlan, now: float) -> int:
         """Evict ``slot``: pages free, request requeues, prompt restarts
         on re-admission (vLLM recompute preemption — greedy decode makes
@@ -710,6 +823,8 @@ class StepPlanner:
         plan.grows = [(s, u) for s, u in plan.grows if s != slot]
         plan.admissions = [c for c in plan.admissions if c.slot != slot]
         plan.forced = [(s, t) for s, t in plan.forced if s != slot]
+        plan.spec = [e for e in plan.spec if e[0] != slot]
+        self._spec_planned.pop(slot, None)
         self.metrics.preemptions += 1
         self._tel_event("preempt", r.req, slot=slot)
         self._requeue(r.req)
@@ -957,6 +1072,34 @@ class StepPlanner:
                 self._requeue(r.req)
         self._staged = []
         self._register_prompts()
+        eng = self.engine
+        if (self.config.spec_k > 0 and eng is not None
+                and getattr(eng, "_draft", None) is not None):
+            # capture each resident's SEED token (the prefill's argmax,
+            # consumed by the first decode step but never emitted) once,
+            # before its first decode — it is the one generated token
+            # the streams don't record, and rebuilding a draft twin's
+            # history after a desync needs it
+            for slot, r in self._resident.items():
+                if (not r.prefilling and r.seed_tok is None
+                        and not self.streams[r.req.rid]):
+                    r.seed_tok = eng.host_last_token(slot)
+        for slot, toks in res.spec_tokens.items():
+            r = self._resident.get(slot)
+            if r is None:
+                continue
+            req = r.req
+            if req.first_token < 0:
+                req.first_token = now
+                self._tel_event("first_token", req)
+            req.tokens_out += len(toks)
+            self.streams[req.rid].extend(toks)
+            k = self._spec_planned.pop(slot, None)
+            if k:
+                # toks = accepted draft tokens + the verify bonus, so
+                # acceptance rate for the round is (len-1)/k
+                self._spec_accept_ema = (0.9 * self._spec_accept_ema
+                                         + 0.1 * (len(toks) - 1) / k)
         for slot, tok in res.tokens.items():
             r = self._resident.get(slot)
             if r is not None:
@@ -1023,7 +1166,14 @@ class StepPlanner:
         once over their lifetime; a page-blocked FIFO head accrues an
         aging page reservation that bypassing smaller requests cannot
         spend (anti-starvation). Returns [(request, token budget)] in
-        queue order."""
+        queue order — except that with the prefix cache on, kept
+        requests whose prompts are HOT in the radix cache (a read-only
+        ``PrefixCache.peek`` covers at least the ``prefix_min_frac``
+        floor) stable-sort ahead of cold ones: a hot admission aliases
+        pages instead of prefilling, so serving it first spends strictly
+        less of the pool. Pop order — and with it the head-reservation /
+        aging anti-starvation contract — is unchanged; only the order
+        WITHIN the admitted batch moves."""
         lazy = self.config.lazy
         gen_len = max(1, gen_len)
         room = max(1, eng.slot_len - prompt_len)
@@ -1068,6 +1218,23 @@ class StepPlanner:
             is_head = False
         for req in blocked:
             q.push(req)
+        cache = (getattr(eng, "prefix_cache", None)
+                 if self.config.prefix_cache else None)
+        if cache is not None and eng.paged and len(kept) > 1:
+            # hit-aware ordering: peek is strictly read-only (no clock
+            # tick, no LRU touch, no pins) so probing here cannot
+            # perturb eviction order or leak references
+            floor = self._min_covered(eng, prompt_len)
+            hot = []
+            for req, _ in kept:
+                batch = self._prompts.get(req.rid)
+                toks = (None if batch is None else
+                        [int(t) for t in np.asarray(batch["tokens"])[0]])
+                hot.append(toks is not None and cache.peek(
+                    toks, max_covered=prompt_len - 1) >= floor)
+            if any(hot) and not all(hot):
+                kept = ([rb for rb, h in zip(kept, hot) if h]
+                        + [rb for rb, h in zip(kept, hot) if not h])
         return kept
 
     def admission_plan(self, batches: Sequence[Any],

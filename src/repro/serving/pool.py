@@ -208,8 +208,10 @@ class EnginePool:
             p.telemetry = self.telemetry
         for host in self.hosts.values():
             for eng in host.engines():
-                eng.release_all_slots()
+                eng.release_all_slots()     # frees draft twins too
                 eng.reset_stats()
+                if eng._draft is not None:
+                    eng._draft.reset_stats()
 
     def attach_telemetry(self, tel) -> None:
         """Arm (or with None, disarm) one shared ``Telemetry`` plane
@@ -224,6 +226,8 @@ class EnginePool:
         for host in self.hosts.values():
             for eng in host.engines():
                 eng.attach_telemetry(tel)
+                if eng._draft is not None:
+                    eng._draft.attach_telemetry(tel)
 
     def warmup(self) -> None:
         """Compile every standby engine's admission-prefill + slot-step
@@ -275,6 +279,33 @@ class EnginePool:
                 # alias write) — warm them on dead state up front
                 eng.warm_prefix_ops()
         self.reset()
+
+    def enable_speculation(self, target: str, draft: str,
+                           spec_k: int = 4) -> int:
+        """Cross-model speculative decoding over the pool: pair every
+        spec-capable standby engine of ``target`` with a fresh ring-slot
+        draft engine built from ``draft``'s weights (one per standby —
+        drafts are small, and identity slot pairing needs a twin per
+        engine). Raises if the vocabularies differ (token ids must mean
+        the same thing to drafter and verifier); incapable standbys
+        (non-dense families, sampling engines) are skipped. ``step_run``
+        then speculates automatically on eligible slots. Returns how
+        many standby engines were paired."""
+        t_host, d_host = self.hosts[target], self.hosts[draft]
+        paired = 0
+        for alloc in t_host.allocations.values():
+            eng = alloc.engine
+            if not eng.spec_capable():
+                continue
+            d_eng = InferenceEngine(
+                d_host.api, d_host.params, cache_len=eng.slot_len,
+                alloc_chips=alloc.chips).init_slots(
+                    eng.n_slots, paged=False)
+            eng.attach_draft(d_eng, spec_k)
+            if self.telemetry is not None:
+                d_eng.attach_telemetry(self.telemetry)
+            paired += 1
+        return paired
 
     def jit_cache_sizes(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -668,12 +699,53 @@ class EnginePool:
                 if not self._runs:
                     self._alloc_frac = 0.0
                 return True
+        decode_slots = sorted(run.remaining)
+        spec_entries: List = []
+        if eng._draft is not None and eng.spec_k > 0:
+            # pool-plane speculation: a slot speculates while its draft
+            # twin is in lockstep, or — right after admission, before any
+            # decode — by initializing the twin from the model's (shared)
+            # prompt. Mid-stream desync cannot re-init here (the pool does
+            # not record per-slot token streams), so such slots just
+            # decode plainly.
+            import numpy as np
+            host = self.hosts[run.model]
+            prompt = None
+            for slot in list(decode_slots):
+                rem = run.remaining[slot]
+                pos = eng.slot_pos(slot)
+                k = min(eng.spec_k, rem - 1, eng.slot_len - 1 - pos)
+                if k < 1:
+                    continue
+                init = None
+                if not eng.draft_synced(slot):
+                    if pos != host.prompt_len:
+                        continue
+                    if prompt is None:
+                        prompt = [int(t) for t in np.asarray(
+                            host.prompt_batch()["tokens"])[0]]
+                    init = prompt
+                if self.lazy_kv and eng.paged:
+                    while k >= 1:       # degrade k on page pressure,
+                        try:            # never preempt for speculation
+                            eng.grow_slot(slot, pos + k + 1)
+                            break
+                        except OutOfPages:
+                            k -= 1
+                    if k < 1:
+                        continue
+                spec_entries.append((slot, k, init))
+                decode_slots.remove(slot)
         try:
-            res = eng.execute(StepPlan(decodes=sorted(run.remaining)))
+            res = eng.execute(StepPlan(decodes=decode_slots,
+                                       spec=spec_entries))
         except EngineFault:
             self._engine_reset(run.model, eng)
             return True
+        emitted = dict(res.spec_tokens)
         for slot in res.tokens:
+            emitted.setdefault(slot, []).append(res.tokens[slot])
+        for slot, toks in emitted.items():
             req = run.slots.get(slot)
             if req is not None:
                 if req.first_token < 0:
@@ -681,7 +753,9 @@ class EnginePool:
                     if self.telemetry is not None:
                         self.telemetry.request_event(
                             run.model, "first_token", rid=req.rid)
-                req.tokens_out += 1
+                req.tokens_out += len(toks)
+        owned_emit = sum(len(t) for s, t in emitted.items()
+                         if s in run.slots)
         done = res.done
         completed: List[Request] = []
         for slot in done:
@@ -692,8 +766,8 @@ class EnginePool:
             run.remaining.pop(slot, None)
             completed.append(req)
         for slot in run.remaining:
-            run.remaining[slot] -= 1
-        self._metrics[run.model].tokens += len(completed) + len(run.remaining)
+            run.remaining[slot] -= len(emitted.get(slot, (None,)))
+        self._metrics[run.model].tokens += owned_emit
         if completed:
             self.queues[run.model].complete(completed, now)
             if self.telemetry is not None:
@@ -743,6 +817,14 @@ class EnginePool:
                                       for e in self.hosts[n].engines())
             m.cow_copies = sum(e.stats.cow_copies
                                for e in self.hosts[n].engines())
+            m.draft_tokens = sum(e.stats.draft_tokens
+                                 for e in self.hosts[n].engines())
+            m.accepted_tokens = sum(e.stats.accepted_tokens
+                                    for e in self.hosts[n].engines())
+            m.spec_rounds = sum(e.stats.spec_rounds
+                                for e in self.hosts[n].engines())
+            m.rollbacks = sum(e.stats.rollbacks
+                              for e in self.hosts[n].engines())
             m.latencies = list(q.latencies)
             m.ttfts = list(q.ttfts)
             m.tbts = list(q.tbts)

@@ -181,6 +181,41 @@ class PrefixCache:
         self.stats.hit_tokens += covered
         return PrefixHit(covered=covered, pages=tuple(shared), cow_src=cow)
 
+    def peek(self, tokens: Sequence[int],
+             max_covered: Optional[int] = None) -> int:
+        """How many leading tokens of ``tokens`` the cache could cover,
+        WITHOUT acting on it: no clock tick, no LRU touch, no stats, no
+        pins. The planner's hit-aware admission ordering probes every
+        queued candidate with this — a probe that mutated recency would
+        let the act of *considering* a request keep its prefix warm, and
+        a probe that pinned would leak references for requests that are
+        then not admitted. Whole-page walk only (partial COW pages count
+        toward ``match`` coverage but not here): the ordering heuristic
+        cares about pages it can alias for free."""
+        toks = [int(t) for t in tokens]
+        limit = len(toks) if max_covered is None else min(len(toks),
+                                                          int(max_covered))
+        ps = self.page_size
+        node = self._root
+        covered = 0
+        while limit - covered >= ps:
+            child = node.children.get(tuple(toks[covered:covered + ps]))
+            if child is None:
+                break
+            matched = 0
+            for i in range(child.n_pages):
+                if (limit - covered >= ps
+                        and tuple(toks[covered:covered + ps])
+                        == child.tokens[i * ps:(i + 1) * ps]):
+                    covered += ps
+                    matched += 1
+                else:
+                    break
+            if matched < child.n_pages:
+                break
+            node = child
+        return covered
+
     def release_hit(self, hit: PrefixHit) -> None:
         """Return an unconsumed hit's pins (admission failed or was
         abandoned before the alias landed)."""

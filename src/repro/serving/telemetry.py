@@ -550,7 +550,12 @@ def export_engine_stats(reg: MetricsRegistry, stats, model: str,
             ("prefix_hits", "dstack_prefix_hits_total"),
             ("prefix_hit_tokens", "dstack_prefix_hit_tokens_total"),
             ("cow_copies", "dstack_cow_copies_total"),
-            ("forced_catchup_tokens", "dstack_prefix_catchup_tokens_total")):
+            ("forced_catchup_tokens", "dstack_prefix_catchup_tokens_total"),
+            ("incr_chunks", "dstack_incr_chunks_total"),
+            ("draft_tokens", "dstack_draft_tokens_total"),
+            ("accepted_tokens", "dstack_accepted_tokens_total"),
+            ("spec_rounds", "dstack_spec_rounds_total"),
+            ("rollbacks", "dstack_spec_rollbacks_total")):
         reg.counter(name).inc(getattr(stats, field, 0), **labels)
 
 

@@ -220,3 +220,102 @@ def test_flash_vjp_q_offset_matches_sliced_full():
                                    chunk_q=64, chunk_k=64, q_offset=lo)
         np.testing.assert_allclose(np.asarray(part),
                                    np.asarray(full[:, lo:]), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# incremental chunk attention (paged history + new chunk rows)
+# ---------------------------------------------------------------------------
+def _mk_chunk_case(seed, s, r, h, kv, d, page_size, max_pages, hists, slens):
+    """One paged chunk-attention case plus its dense-ref twin.
+
+    Pages are permuted non-contiguously across segments (each segment's
+    block table scatters through the shared pool) so any confusion of
+    physical/logical pages or cross-segment leakage shows up as a
+    numeric mismatch, not a silent pass."""
+    rng = np.random.default_rng(seed)
+    n_pages = s * max_pages + 1              # +1: a never-referenced page
+    q = rng.standard_normal((s, r, h, d), np.float32)
+    kc = rng.standard_normal((s, r, kv, d), np.float32)
+    vc = rng.standard_normal((s, r, kv, d), np.float32)
+    k_pages = rng.standard_normal((n_pages, page_size, kv, d), np.float32)
+    v_pages = rng.standard_normal((n_pages, page_size, kv, d), np.float32)
+    perm = rng.permutation(n_pages - 1) + 1  # page 0 never used: catches
+    tables = perm[:s * max_pages].reshape(s, max_pages)  # accidental zeros
+    cap = max_pages * page_size
+    k_hist = k_pages[tables].reshape(s, cap, kv, d)
+    v_hist = v_pages[tables].reshape(s, cap, kv, d)
+    return (jnp.asarray(q), jnp.asarray(k_pages), jnp.asarray(v_pages),
+            jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(tables),
+            jnp.asarray(hists, jnp.int32), jnp.asarray(slens, jnp.int32),
+            jnp.asarray(k_hist), jnp.asarray(v_hist))
+
+
+CHUNK_SHAPES = [
+    # (s, r, h, kv, d, page_size, max_pages, hists, slens)
+    (2, 4, 4, 2, 32, 8, 3, (8, 16), (4, 4)),     # page-aligned histories
+    (3, 8, 4, 4, 32, 8, 4, (5, 13, 0), (8, 3, 6)),  # mid-page + fresh seq
+    (1, 16, 8, 2, 64, 16, 2, (13,), (16,)),      # chunk crosses a page edge
+    (2, 8, 2, 1, 32, 8, 2, (1, 7), (1, 8)),      # MQA, ragged seg lens
+]
+
+
+@pytest.mark.parametrize("s,r,h,kv,d,ps,mp,hists,slens", CHUNK_SHAPES)
+def test_chunk_attention_interpret_matches_ref(s, r, h, kv, d, ps, mp,
+                                               hists, slens):
+    from repro.kernels.chunk_attention import paged_chunk_attention
+    case = _mk_chunk_case(0, s, r, h, kv, d, ps, mp, hists, slens)
+    q, kp, vp, kc, vc, tbl, hist, slen, kh, vh = case
+    out = paged_chunk_attention(q, kp, vp, kc, vc, tbl, hist, slen,
+                                interpret=True)
+    want = ref.chunk_attention_ref(q, kh, vh, kc, vc, hist)
+    for i in range(s):
+        n = int(slen[i])
+        np.testing.assert_allclose(
+            np.asarray(out)[i, :n], np.asarray(want)[i, :n],
+            atol=2e-5, rtol=2e-5, err_msg=f"segment {i}")
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_chunk_attention_interpret_window(window):
+    from repro.kernels.chunk_attention import paged_chunk_attention
+    case = _mk_chunk_case(1, 2, 8, 4, 2, 32, 8, 3, (19, 7), (8, 8))
+    q, kp, vp, kc, vc, tbl, hist, slen, kh, vh = case
+    out = paged_chunk_attention(q, kp, vp, kc, vc, tbl, hist, slen,
+                                window=window, interpret=True)
+    want = ref.chunk_attention_ref(q, kh, vh, kc, vc, hist, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("s,r,h,kv,d,ps,mp,hists,slens", CHUNK_SHAPES)
+def test_chunk_attention_fallback_matches_ref(s, r, h, kv, d, ps, mp,
+                                              hists, slens):
+    """The jnp gather/scatter fallback (the path CPU serving runs) against
+    the same oracle — both backends share one contract."""
+    from repro.models import layers as L
+    case = _mk_chunk_case(2, s, r, h, kv, d, ps, mp, hists, slens)
+    q, kp, vp, kc, vc, tbl, hist, slen, kh, vh = case
+    out = L.paged_chunk_attention(q, kp, vp, kc, vc, tbl, hist, slen)
+    want = ref.chunk_attention_ref(q, kh, vh, kc, vc, hist)
+    for i in range(s):
+        n = int(slen[i])
+        np.testing.assert_allclose(
+            np.asarray(out)[i, :n], np.asarray(want)[i, :n],
+            atol=2e-5, rtol=2e-5, err_msg=f"segment {i}")
+
+
+def test_chunk_attention_segment_isolation():
+    """Perturbing one segment's history pages must not move any other
+    segment's output (the packed verify dispatch mixes many requests)."""
+    from repro.kernels.chunk_attention import paged_chunk_attention
+    case = _mk_chunk_case(3, 3, 4, 4, 2, 32, 8, 3, (11, 8, 20), (4, 4, 4))
+    q, kp, vp, kc, vc, tbl, hist, slen, _, _ = case
+    base = np.asarray(paged_chunk_attention(q, kp, vp, kc, vc, tbl, hist,
+                                            slen, interpret=True))
+    victim_pages = np.asarray(tbl)[1]            # segment 1's pages
+    kp2 = jnp.asarray(np.asarray(kp)).at[jnp.asarray(victim_pages)].set(7.0)
+    out = np.asarray(paged_chunk_attention(q, kp2, vp, kc, vc, tbl, hist,
+                                           slen, interpret=True))
+    assert not np.allclose(base[1], out[1])      # victim did change
+    np.testing.assert_array_equal(base[0], out[0])
+    np.testing.assert_array_equal(base[2], out[2])

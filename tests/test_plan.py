@@ -68,6 +68,8 @@ def engines():
 def _reset(eng):
     eng.release_all_slots()
     eng.reset_stats()
+    if getattr(eng, "_draft", None) is not None:
+        eng._draft.reset_stats()
 
 
 def _workload(cfg, seed: int, n: int, prompt_range=(3, 20),
@@ -84,11 +86,13 @@ def _workload(cfg, seed: int, n: int, prompt_range=(3, 20),
 
 
 def _serve(cfg, eng, reqs, prompts, *, chunk_tokens=0, lazy=False,
-           planner_cls=StepPlanner, **planner_kw):
+           planner_cls=StepPlanner, spec_k=0, spec_knee_batch=None,
+           **planner_kw):
     _reset(eng)
     q = RequestQueue(cfg.name, slo=1e9)
     planner = planner_cls(eng, q, PlannerConfig(
-        chunk_tokens=chunk_tokens, lazy=lazy, gen_len=4), **planner_kw)
+        chunk_tokens=chunk_tokens, lazy=lazy, gen_len=4, spec_k=spec_k,
+        spec_knee_batch=spec_knee_batch), **planner_kw)
     srv = serve_ticks(planner, reqs, lambda r: prompts[r.rid])
     assert not srv.truncated
     return {r: tuple(t) for r, t in planner.streams.items()}, planner, srv
@@ -193,28 +197,120 @@ def test_plan_interleavings_property():
 
 
 # ---------------------------------------------------------------------------
+# speculative ticks interleaved against preempt / chunk events (ISSUE 9)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def spec_engine():
+    """Dense engine paired with a DIVERGENT same-shape draft (other init
+    seed) — the adversarial speculation config: drafts are frequently
+    wrong, so every sweep below exercises rejection + rollback, not just
+    the all-accepted fast path."""
+    import jax
+
+    from repro.models.registry import build_model
+    from repro.serving.engine import InferenceEngine
+
+    cfg = get_config(FAMILIES["dense"]).reduced()
+    eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=True, page_size=PAGE)
+    api = build_model(cfg)
+    draft = InferenceEngine(api, api.init(jax.random.PRNGKey(99)),
+                            cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=False)
+    eng.attach_draft(draft, spec_k=3)
+    return cfg, eng
+
+
+def test_spec_interleaved_with_preemption_bit_exact(spec_engine):
+    """Seeded sibling with speculation ON: draft/verify rounds
+    interleaved against forced preemption points and chunked prefill are
+    invisible in the final streams — rollbacks, the draft-twin
+    desync/re-init after a victim returns, and chunk continuations
+    compose without leaking a token or a page."""
+    cfg, eng = spec_engine
+    reqs, prompts = _workload(cfg, seed=11, n=5)
+    base, _, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=0)
+    for ticks in ((2,), (1, 4, 9), (0, 3)):
+        got, planner, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=3,
+                                 spec_k=3, planner_cls=_ForcedPreempt,
+                                 preempt_ticks=ticks)
+        assert got == base, f"spec+preempt@{ticks} diverged"
+        assert planner.metrics.preemptions >= 1
+        assert eng.stats.spec_rounds > 0, "speculation never engaged"
+        eng.check_page_invariants()
+    assert eng.free_pages == eng.total_pages
+
+
+def test_spec_interleavings_property(spec_engine):
+    """Hypothesis sweep with speculation ON: random workloads × random
+    chunk budgets × random preemption points × knee gating all reproduce
+    the plain (unchunked, no-preemption, non-speculative) streams
+    bit-exactly, with zero leaked pages. ``derandomize=True`` makes the
+    sweep its own seeded replay — two runs of this test execute the
+    identical example sequence against a module-scope engine."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    cfg, eng = spec_engine
+    baselines = {}
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 3), chunk=st.integers(1, 12),
+           preempts=st.lists(st.integers(0, 12), max_size=3),
+           knee=st.sampled_from([None, 2]))
+    def check(seed, chunk, preempts, knee):
+        reqs, prompts = _workload(cfg, seed=seed, n=5)
+        if seed not in baselines:
+            baselines[seed] = _serve(cfg, eng, reqs, prompts,
+                                     chunk_tokens=0)[0]
+        got, _, _ = _serve(cfg, eng, reqs, prompts, chunk_tokens=chunk,
+                           spec_k=3, spec_knee_batch=knee,
+                           planner_cls=_ForcedPreempt,
+                           preempt_ticks=preempts)
+        assert got == baselines[seed]
+        eng.check_page_invariants()
+        assert eng.free_pages == eng.total_pages
+
+    check()
+
+
+# ---------------------------------------------------------------------------
 # compile discipline + bounded dispatches
 # ---------------------------------------------------------------------------
 def test_chunk_compile_count_gate():
-    """CI gate: chunked serving compiles NOTHING of its own — chunk
-    continuations reuse the packed-prefill executables, whose (token
-    bucket, row bucket) keys stay on the O(log max_len) lattice however
-    many distinct chunk shapes a stream produces (the same discipline as
-    ``test_packed_prefill_compile_count_gate``)."""
+    """CI gate: chunk continuations compile onto the SAME O(log max_len)
+    (token bucket, row bucket, segment bucket) lattice as packed prefill
+    — initial chunks ride the packed-prefill executables, and dense
+    continuations reroute through the incremental chunk-attention
+    executables (``_chunk_prefill_jit``), so however many distinct chunk
+    shapes a stream produces, the executable count stays O(log) per axis
+    (the same discipline as ``test_packed_prefill_compile_count_gate``)."""
     from repro.serving.engine import _packed_bucket, _pow2_at_least
 
     cfg = get_config(FAMILIES["dense"]).reduced()
     eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
         N_SLOTS, paged=True, page_size=PAGE)
     rng = np.random.default_rng(0)
-    n_chunks = 0
+    n_chunks = n_incr = 0
     for trial in range(10):
         ct = int(rng.integers(1, 14))
         reqs, prompts = _workload(cfg, seed=trial, n=3,
                                   prompt_range=(2, 24), budget_range=(1, 3))
         _serve(cfg, eng, reqs, prompts, chunk_tokens=ct)
         n_chunks += eng.stats.chunk_prefills
+        n_incr += eng.stats.incr_chunks
     assert n_chunks > 10                    # plenty of distinct shapes ran
+    # dense continuations actually rerouted through the incremental path
+    # (O(chunk) work instead of an O(L) recompute per continuation)
+    assert n_incr > 0
+    ckeys = set(eng._chunk_prefill_jit)
+    assert ckeys and len(ckeys) <= 8, ckeys
+    assert all(t == _packed_bucket(t) for t, _, _ in ckeys), ckeys
+    assert all(r == _pow2_at_least(r) or r == eng.slot_len
+               for _, r, _ in ckeys), ckeys
+    assert all(s == _pow2_at_least(s) for _, _, s in ckeys), ckeys
+    assert eng.jit_cache_sizes()["chunk_prefill"] >= len(ckeys)
     keys = set(eng._packed_prefill_jit)
     buckets = {t for t, _, _ in keys}
     rows = {r for _, r, _ in keys}

@@ -152,6 +152,34 @@ def test_evict_lru_skips_row_shared_leaves():
     c.check_invariants()
 
 
+def test_peek_is_read_only_and_page_granular():
+    """``peek`` (ISSUE 9: the admission-ordering probe) reports the
+    whole-page covered length like ``match`` would, but is STRICTLY
+    read-only: no clock tick, no LRU touch, no stats, no pins — probing
+    N queued requests per tick must not perturb eviction order or leak
+    references."""
+    a, c = _tree(ps=4)
+    pages = a.alloc(2)
+    c.insert(_toks(1, 2, 3, 4, 5, 6, 7, 8), pages)
+    child = next(iter(c._root.children.values()))
+    clock, lu = c._clock, child.last_used
+    stats = dataclasses.replace(c.stats)
+    refs = {p: a.refcount(p) for p in pages}
+    assert c.peek(_toks(1, 2, 3, 4, 5, 6, 7, 8, 9)) == 8
+    assert c.peek(_toks(1, 2, 3, 4, 5, 6, 7, 8)) == 8
+    # max_covered truncates to whole pages, like match's page walk
+    assert c.peek(_toks(1, 2, 3, 4, 5, 6, 7, 8), max_covered=7) == 4
+    # mid-page divergence: only the whole matching page counts (no COW
+    # source from a probe — peek pins nothing)
+    assert c.peek(_toks(1, 2, 3, 4, 5, 6, 70, 71)) == 4
+    assert c.peek(_toks(9, 9, 9, 9)) == 0
+    assert c.peek(_toks(1, 2)) == 0               # shorter than a page
+    assert c._clock == clock and child.last_used == lu
+    assert c.stats == stats
+    assert {p: a.refcount(p) for p in pages} == refs
+    c.check_invariants()
+
+
 def test_flush_releases_every_hold():
     a, c = _tree(ps=4)
     p1, p2 = a.alloc(2), a.alloc(1)
@@ -287,6 +315,50 @@ def test_recover_flushes_cache_and_returns_all_pages(engine):
     # the engine still serves (and hits) after recovery
     got, st, _, _ = _serve(cfg, eng, reqs, prompts, prefix_cache=True)
     assert st.prefix_hits > 0 and all(len(t) for t in got.values())
+
+
+def test_select_admissible_prefers_cache_hot_prefixes(engine):
+    """ISSUE 9 satellite: with the cache on, the admission gate
+    stable-sorts cache-HOT requests (read-only ``peek`` covers the
+    ``prefix_min_frac`` floor) ahead of cold ones within the admitted
+    batch — a hot admission aliases pages instead of prefilling, so
+    serving it first spends strictly less of the pool. Pop order is
+    unchanged: every request still admits this wave, hot or not."""
+    cfg, eng = engine
+    rng = np.random.default_rng(21)
+    temp = rng.integers(1, cfg.vocab_size, size=16).astype(np.int32)
+
+    def prompt(tail_seed, hot):
+        r2 = np.random.default_rng(tail_seed)
+        head = temp if hot else r2.integers(
+            1, cfg.vocab_size, size=16).astype(np.int32)
+        tail = r2.integers(1, cfg.vocab_size, size=4).astype(np.int32)
+        return {"tokens": jnp.asarray(
+            np.concatenate([head, tail])[None, :])}
+
+    # warm: one served templated request registers temp's 2 full pages
+    warm = [Request(arrival=0.0, rid=0, model=cfg.name, slo=1e9,
+                    n_tokens=2, prompt_len=20)]
+    _serve(cfg, eng, warm, {0: prompt(100, hot=True)}, prefix_cache=True)
+    assert eng.prefix_cache.held_pages >= 2
+    stats = dataclasses.replace(eng.prefix_cache.stats)
+
+    # fresh planner over the warm engine: cold, hot, cold, hot
+    q = RequestQueue(cfg.name, slo=1e9)
+    planner = StepPlanner(eng, q, PlannerConfig(gen_len=4,
+                                                prefix_cache=True))
+    order = [(1, False), (2, True), (3, False), (4, True)]
+    for rid, hot in order:
+        planner.submit(Request(arrival=0.0, rid=rid, model=cfg.name,
+                               slo=1e9, n_tokens=2, prompt_len=20),
+                       prompt(200 + rid, hot))
+    kept = planner.select_admissible(eng, q, prompt_len=20, max_batch=4,
+                                     now=0.0, gen_len=4)
+    assert [r.rid for r, _ in kept] == [2, 4, 1, 3]
+    assert len(q) == 0                    # pop order / quota unchanged
+    # the probe was read-only: no hit/miss/pin accounting moved
+    assert eng.prefix_cache.stats == stats
+    eng.prefix_cache.check_invariants()
 
 
 def test_incapable_family_refuses_cache():
