@@ -23,6 +23,7 @@ MODULES = [
     "kernels_micro",
     "bench_decode",
     "bench_pool",
+    "bench_gateway",
 ]
 
 

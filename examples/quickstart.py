@@ -26,8 +26,8 @@ def main():
     prompt = jnp.array([[5, 17, 3, 99, 4, 21, 8, 2]], jnp.int32)
     batch = {"tokens": prompt}
     if cfg.has_encoder:
-        from repro.serving import frontend
-        batch["enc_embeds"] = frontend.audio_frames(cfg, 1)
+        from repro.serving import modality
+        batch["enc_embeds"] = modality.audio_frames(cfg, 1)
     out = eng.generate(batch, max_new_tokens=12)
     print(f"    generated tokens: {out[0].tolist()}")
 

@@ -15,7 +15,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.serving import frontend
+from repro.serving import modality
 
 
 @dataclasses.dataclass
@@ -59,7 +59,7 @@ class TokenPipeline:
             "labels": jnp.asarray(arr[:, 1:]),
         }
         if self.cfg.has_encoder:
-            batch["enc_embeds"] = frontend.audio_frames(
+            batch["enc_embeds"] = modality.audio_frames(
                 self.cfg, d.batch_size, seed=int(self._rng.integers(1 << 30)))
         return batch
 

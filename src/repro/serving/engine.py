@@ -146,6 +146,11 @@ class EngineStats:
     prefix_hit_tokens: int = 0
     cow_copies: int = 0
     forced_catchup_tokens: int = 0
+    # cross-request dedup (ISSUE 10): duplicate prompt-prefix pages a
+    # row released at registration time by repointing its block table at
+    # the radix cache's canonical pages — concurrent same-prefix
+    # admissions double-fill pages the cache could not yet serve
+    dedup_pages: int = 0
     # incremental chunk attention (ISSUE 9): continuation dispatches that
     # computed ONLY the new chunk against resident pages (no prefix
     # recompute) — each is also counted in chunk_prefills
@@ -912,6 +917,10 @@ class InferenceEngine:
                 "state / conv tails / cross K/V cannot alias their prefix)")
         from repro.serving.prefix_cache import PrefixCache
         self.prefix_cache = PrefixCache(self._kv.allocator, self.page_size)
+        # recovery keeps radix nodes touched within this many cache
+        # operations of the fault (``PrefixCache.retain_recent``) — the
+        # hot working set survives an engine reset instead of flushing
+        self.prefix_hot_window = 64
         if self._copy_page is None:
             self._copy_page = jax.jit(_make_copy_page(self.api.paged_keys),
                                       donate_argnums=(0,))
@@ -933,6 +942,12 @@ class InferenceEngine:
             null_row = jnp.full((self.max_pages,), NULL_PAGE, jnp.int32)
             self._slot_cache = self._alias_slot(
                 self._slot_cache, jnp.int32(slot), null_row, jnp.int32(0))
+            # registration-time dedup pushes repointed block-table rows
+            # through set_table_row; warm it the same no-op way (a
+            # vacant slot's row is already the null row) so a first
+            # dedup after a jit-freeze snapshot cannot compile
+            self._slot_cache = self._set_table_row(
+                self._slot_cache, jnp.int32(slot), null_row)
 
     def slot_pages(self, slot: int) -> List[int]:
         """Physical pages backing a slot, in logical order (the prefix
@@ -1026,6 +1041,45 @@ class InferenceEngine:
             self._last_tok = self._last_tok.at[slot].set(
                 jnp.int32(int(tokens[i])))
             self.step([slot], forced={slot})
+
+    def dedup_slot_prefix(self, slot: int, tokens, n_full: int) -> int:
+        """Cross-request prefix dedup at registration time (ISSUE 10).
+
+        When two same-prefix prompts prefill CONCURRENTLY, both miss at
+        admission (the cache cannot serve what is not yet registered)
+        and both fill their own pages with bit-identical K/V for the
+        shared prefix (the PR-4 packed-prefill parity guarantee: a
+        token's K/V depends only on the tokens before it). The first to
+        finish registers its pages as the canonical ones; this call —
+        made right after the SECOND registers — compares the slot's
+        leading ``n_full`` pages against the tree's canonical walk and
+        repoints every differing entry at the canonical page, releasing
+        the row's duplicate (refcount 1 → actually freed). One
+        pre-compiled ``set_table_row`` dispatch pushes the updated row;
+        values never change (identical content), so streams are
+        untouched. Safe because every later write on a registered row
+        lands at ``pos >= prompt_len``, past the repointed prefix.
+        Returns duplicate pages actually freed."""
+        if not self.paged or self.prefix_cache is None or n_full < 1:
+            return 0
+        ps = self.page_size
+        canonical = self.prefix_cache.canonical_pages(
+            list(tokens)[:n_full * ps])
+        own = self._kv.pages(slot)
+        swaps = [(i, c) for i, (o, c)
+                 in enumerate(zip(own[:n_full], canonical)) if o != c]
+        if not swaps:
+            return 0
+        freed = self._kv.repoint(slot, swaps)
+        row = jnp.asarray(self._kv.table_row(slot), jnp.int32)
+        self._slot_cache = self._set_table_row(
+            self._slot_cache, jnp.int32(slot), row)
+        self.stats.dedup_pages += freed
+        if self.telemetry is not None:
+            self.telemetry.instant(
+                self.telemetry.engine_track(self), "prefix_dedup",
+                slot=slot, pages=freed)
+        return freed
 
     # -------------------------------------------- lazy page reservation
     def slot_pos(self, slot: int) -> int:
@@ -1528,12 +1582,26 @@ class InferenceEngine:
         pages return to the pool, positions pin to 0 — and the page-
         conservation audit runs before serving resumes. Callers
         (planner/pool) recompute-requeue the evicted residents; recompute
-        means surviving greedy streams replay bit-exactly. Returns how
+        means surviving greedy streams replay bit-exactly.
+
+        The radix prompt cache is NOT flushed (ISSUE 10): registered
+        prefix pages hold only fully-written K/V from prompts that
+        finished prefill before the fault — slot loss cannot have
+        corrupted them (a faulted tick's writes target unregistered
+        rows' pages) — so the hot subtree survives
+        (``PrefixCache.retain_recent`` over ``prefix_hot_window``) and
+        post-recovery admissions keep hitting. The conservation audit
+        accounts the survivors: free + cache-held == total. Returns how
         many slots were dropped."""
         dropped = sum(1 for a in self._slot_active if a)
-        self.release_all_slots()
+        self.release_all_slots(flush_cache=False)
+        if self.prefix_cache is not None:
+            self.prefix_cache.retain_recent(self.prefix_hot_window)
         if self.paged:
-            assert self._kv.free_pages == self._kv.allocator.num_pages, \
+            held = (self.prefix_cache.held_pages
+                    if self.prefix_cache is not None else 0)
+            assert (self._kv.free_pages + held
+                    == self._kv.allocator.num_pages), \
                 "engine recovery leaked pages"
         self.check_page_invariants()
         self.stats.engine_resets += 1
@@ -1815,7 +1883,7 @@ class InferenceEngine:
         return int(sum(x.nbytes for x in jax.tree.leaves(self._slot_cache)))
 
     # --------------------------------------------- pool accounting hooks
-    def release_all_slots(self) -> None:
+    def release_all_slots(self, flush_cache: bool = True) -> None:
         """Force-free every slot (pool reset between policy runs), and
         restore the canonical free-list order for slots AND pages: a
         freed slot/page re-enters its list in free order, so without the
@@ -1823,15 +1891,18 @@ class InferenceEngine:
         harmless for correctness (streams are slot-id agnostic) but
         fatal for exact replay (the chaos harness's determinism check
         replays a seeded fault schedule whose interleaving depends on
-        deterministic tie-breaks over slot ids)."""
+        deterministic tie-breaks over slot ids).
+
+        ``flush_cache=True`` (the pool-reset default) also drops the
+        prefix cache: a replayed seeded run must start from a cold
+        cache (hit patterns are deterministic but history-dependent).
+        ``recover()`` passes False — a mid-run engine reset keeps the
+        hot radix working set (its own conservation audit accounts the
+        cache-held pages)."""
         for slot, active in enumerate(self._slot_active):
             if active:
                 self.free(slot)
-        if self.prefix_cache is not None:
-            # the cache's held references die with the reset: a replayed
-            # seeded run must start from a cold cache (hit patterns are
-            # deterministic but history-dependent), and recover()'s page-
-            # conservation assert requires every reference returned
+        if self.prefix_cache is not None and flush_cache:
             self.prefix_cache.flush()
         self._slot_free.sort()
         if self.paged:

@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 NULL_PAGE = 0
 
@@ -319,6 +319,32 @@ class PagedKVCache:
         sp.pages.extend(fresh)
         sp.length = new_len
         return fresh
+
+    def repoint(self, row: int, swaps: Sequence[Tuple[int, int]]) -> int:
+        """Swap the row's page reference at each ``(index, new_page)``
+        onto an already-allocated page holding identical content
+        (cross-request prefix dedup): the row takes one reference on
+        the new page and drops the one on the page it replaces.
+        Returns how many replaced pages actually returned to the pool.
+        The CALLER owns the equality argument (identical token prefix
+        → bit-identical K/V) and must push the updated block-table row
+        to the device afterwards."""
+        sp = self._rows.get(row)
+        if sp is None:
+            raise ValueError(f"row {row} has no pages")
+        freed = 0
+        changed = False
+        for idx, new in swaps:
+            old = sp.pages[idx]
+            if old == new:
+                continue
+            self.allocator.share([new])
+            freed += self.allocator.release([old])
+            sp.pages[idx] = int(new)
+            changed = True
+        if changed:
+            self.version += 1
+        return freed
 
     def free(self, row: int) -> int:
         """Drop the row's reference on every page it owns; returns how

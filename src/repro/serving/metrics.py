@@ -110,9 +110,19 @@ class ModelPoolMetrics:
     # chunked-prefill TBT wins visible in PoolResult (ISSUE 7)
     ttfts: List[float] = dataclasses.field(default_factory=list)
     tbts: List[float] = dataclasses.field(default_factory=list)
+    # multi-tenant serving (ISSUE 10): decode tokens served per tenant,
+    # populated by the planner's observe only for requests that carry a
+    # tenant label — single-tenant planes pay nothing. Jain over these
+    # values is the per-tenant fairness figure the gateway bench reports.
+    tenant_tokens: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def throughput(self, duration: float) -> float:
         return self.completed / duration if duration > 0 else 0.0
+
+    def tenant_fairness(self) -> float:
+        """Jain index over per-tenant served decode tokens (1.0 when no
+        tenant labels were seen — vacuously fair)."""
+        return jain_index(list(self.tenant_tokens.values()))
 
     @property
     def p50(self) -> float:

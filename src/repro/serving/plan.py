@@ -243,6 +243,104 @@ class PlannerConfig:
     # EMA recover when the workload turns draftable again
     spec_min_accept: float = 0.0
     spec_probe_every: int = 16
+    # tiered, tenant-fair admission (ISSUE 10): tier name -> weight
+    # (higher admits first; e.g. {"interactive": 4, "standard": 2,
+    # "batch": 1}). None = strict FIFO (every existing plane). Within a
+    # tier, the least-served tenant admits first (a DWRR-style deficit
+    # over admitted service, DARIS arXiv:2504.08795), so one tenant's
+    # burst cannot monopolize admission against another's stream
+    tiers: Optional[Dict[str, float]] = None
+    # anti-starvation bound for the LOWEST tier: once its oldest waiting
+    # request has been bypassed by this many higher-tier admissions, it
+    # outranks everything on the next pick — so a batch request admits
+    # after at most tier_bypass_limit higher-tier admissions once it is
+    # the tier's oldest (plus the page/SLO gates every admission faces)
+    tier_bypass_limit: int = 8
+
+
+class TieredAdmission:
+    """Weighted-tier, tenant-fair admission ordering (ISSUE 10).
+
+    Replaces the admission scans' strict-FIFO pop with a keyed pick
+    (``RequestQueue.pop_pick``): higher-weight tiers admit first; within
+    a tier the tenant with the greatest service deficit (least admitted
+    prompt+budget tokens, deficit-round-robin style) wins; arrival then
+    rid break remaining ties, so a single-tenant single-tier queue
+    degenerates to exact FIFO.
+
+    Anti-starvation bound: the LOWEST tier's oldest waiting request
+    tracks how many higher-tier admissions bypassed it; at
+    ``bypass_limit`` it outranks every other request on the next pick.
+    A batch-tier request that reaches "oldest in tier" therefore admits
+    after at most ``bypass_limit`` further higher-tier admissions —
+    subject only to the same page/SLO gates every admission faces
+    (asserted by ``test_lowest_tier_starvation_bound``).
+
+    Per-tenant charges are renormalized after every admission so the
+    least-served tenant still WAITING reads 0: values stay bounded, a
+    tenant never seen before reads 0 (the fair default for newcomers),
+    and a tenant served while another waits keeps a positive charge —
+    so the waiting tenant wins the next same-tier pick."""
+
+    def __init__(self, tiers: Dict[str, float], *,
+                 default_tier: str = "standard", bypass_limit: int = 8):
+        if not tiers:
+            raise ValueError("TieredAdmission needs at least one tier")
+        self.tiers = dict(tiers)
+        self.default_tier = (default_tier if default_tier in self.tiers
+                             else min(self.tiers, key=self.tiers.get))
+        self.bypass_limit = max(1, int(bypass_limit))
+        self.deficit: Dict[str, float] = {}
+        self._lowest = min(self.tiers, key=self.tiers.get)
+        self._low_head: Optional[int] = None     # rid of the tier's oldest
+        self._low_bypassed = 0
+
+    def weight(self, req: Request) -> float:
+        w = self.tiers.get(req.tier)
+        return w if w is not None else self.tiers[self.default_tier]
+
+    def _starving(self, req: Request) -> bool:
+        return (req.rid == self._low_head
+                and self._low_bypassed >= self.bypass_limit)
+
+    def key(self):
+        """Pick key for ``RequestQueue.pop_pick`` — lowest wins."""
+        def k(req: Request):
+            return (0 if self._starving(req) else 1,
+                    -self.weight(req),
+                    self.deficit.get(req.tenant, 0.0),
+                    req.arrival, req.rid)
+        return k
+
+    def admitted(self, req: Request, cost: float, waiting) -> None:
+        """Record an actual admission: charge the tenant's deficit by the
+        admitted service (prompt + decode budget tokens) and advance the
+        lowest tier's bypass counter against ``waiting`` (requests still
+        queued after this pick)."""
+        t = req.tenant
+        self.deficit[t] = self.deficit.get(t, 0.0) + float(cost)
+        # renormalize against the least-served tenant STILL WAITING (an
+        # unseen waiting tenant reads 0): relative order among waiting
+        # tenants is preserved, charges stay bounded, and a tenant that
+        # has been served while another waits keeps its positive charge
+        # until the other catches up
+        waiting_tenants = {r.tenant for r in waiting}
+        if waiting_tenants:
+            lo = min(self.deficit.get(w, 0.0) for w in waiting_tenants)
+            if lo > 0.0:
+                for k in self.deficit:
+                    self.deficit[k] = max(0.0, self.deficit[k] - lo)
+        low = [r for r in waiting if (r.tier if r.tier in self.tiers
+                                      else self.default_tier) == self._lowest]
+        if not low:
+            self._low_head, self._low_bypassed = None, 0
+            return
+        head = min(low, key=lambda r: (r.arrival, r.rid))
+        if head.rid != self._low_head:
+            self._low_head, self._low_bypassed = head.rid, 0
+        tier = req.tier if req.tier in self.tiers else self.default_tier
+        if tier != self._lowest:
+            self._low_bypassed += 1
 
 
 @dataclasses.dataclass
@@ -366,6 +464,11 @@ class StepPlanner:
         # EnginePool.attach_telemetry or directly by the tick plane;
         # None = zero-cost (one attribute check per lifecycle event)
         self.telemetry = None
+        # tiered, tenant-fair admission (None = strict FIFO, the exact
+        # legacy pop order — every existing plane takes this branch)
+        self.admission = (TieredAdmission(
+            self.config.tiers, bypass_limit=self.config.tier_bypass_limit)
+            if self.config.tiers else None)
 
     def _tel_event(self, name: str, req: Request, **args) -> None:
         tel = self.telemetry
@@ -534,6 +637,11 @@ class StepPlanner:
                 continue
             toks = self._host_tokens(r)
             cache.insert(toks[:n_full * ps], eng.slot_pages(slot)[:n_full])
+            # concurrent same-prefix prefills double-filled pages the
+            # cache could not yet serve: repoint this row at the
+            # canonical pages (bit-identical content) and free its
+            # duplicates — zero-cost when nothing matches
+            eng.dedup_slot_prefix(slot, toks, n_full)
 
     def build(self, now: float) -> StepPlan:
         """Emit this tick's plan. Mutates planner bookkeeping under the
@@ -901,6 +1009,27 @@ class StepPlanner:
             self.engine.recover()
         return n
 
+    def _pop_next(self, q, now, drop_expired: bool) -> Optional[Request]:
+        """The one queue pop both admission scans share: strict FIFO
+        without tiers (``pop_batch(1)`` exactly — bit-identical legacy
+        order), else the tiered/tenant-fair keyed pick."""
+        adm = self.admission
+        if adm is None:
+            got = q.pop_batch(1, now, drop_expired)
+            return got[0] if got else None
+        return q.pop_pick(now, drop_expired, key=adm.key())
+
+    def _note_admitted(self, req: Request, cost: float, q,
+                       blocked) -> None:
+        """Tiered-admission bookkeeping for a KEPT request: charge the
+        tenant and advance the lowest tier's bypass counter over
+        everything still waiting (queued + page-blocked this scan)."""
+        if self.admission is not None:
+            self._tel_event("tier_admit", req, tier=req.tier,
+                            tenant=req.tenant)
+            self.admission.admitted(
+                req, cost, list(q) + list(blocked))
+
     def _scan_queue(self, eng, q, now, *, max_batch, pages_avail,
                     budget_left) -> List[Tuple]:
         """Tick-plane admission scan: pops requests the projected pages /
@@ -915,10 +1044,9 @@ class StepPlanner:
         blocked: List[Request] = []
         is_head = True
         while len(kept) < max_batch and budget_left > 0 and len(q):
-            got = q.pop_batch(1, now, cfg.drop_expired)
-            if not got:
+            req = self._pop_next(q, now, cfg.drop_expired)
+            if req is None:
                 break
-            req = got[0]
             batch = self._prompts[req.rid]
             p = _prompt_tokens(batch)
             # cannot ever fit — drop loudly rather than spin forever
@@ -979,6 +1107,7 @@ class StepPlanner:
             else:
                 kept.append((req, batch, budget, c, reserve, None, toks))
                 budget_left -= c
+            self._note_admitted(req, p + budget, q, blocked)
             is_head = False
         for req in blocked:
             q.push(req)
@@ -1094,6 +1223,9 @@ class StepPlanner:
                 self._tel_event("first_token", req)
             req.tokens_out += len(toks)
             self.streams[req.rid].extend(toks)
+            if req.tenant:
+                tt = self.metrics.tenant_tokens
+                tt[req.tenant] = tt.get(req.tenant, 0) + len(toks)
             k = self._spec_planned.pop(slot, None)
             if k:
                 # toks = accepted draft tokens + the verify bonus, so
@@ -1109,6 +1241,9 @@ class StepPlanner:
                     self._tel_event("first_token", req)
                 req.tokens_out += 1
                 self.streams[req.rid].append(tok)
+                if req.tenant:
+                    tt = self.metrics.tenant_tokens
+                    tt[req.tenant] = tt.get(req.tenant, 0) + 1
         completed: List[Request] = []
         for slot in res.done:
             r = self._resident.pop(slot, None)
@@ -1161,7 +1296,10 @@ class StepPlanner:
         share: pop up to ``max_batch`` requests the engine can back — a
         free slot and pages for each request's reserved horizon (whole
         prompt + n_tokens budget, or just the prompt under
-        ``PlannerConfig.lazy``). Requests the pool cannot back go
+        ``PlannerConfig.lazy``). With ``PlannerConfig.tiers`` set, the
+        pop order is the tiered/tenant-fair pick (``TieredAdmission``)
+        instead of strict FIFO — every gate below is unchanged.
+        Requests the pool cannot back go
         straight back to the queue, counted in ``blocked_on_memory``
         once over their lifetime; a page-blocked FIFO head accrues an
         aging page reservation that bypassing smaller requests cannot
@@ -1188,10 +1326,9 @@ class StepPlanner:
         # Blocked requests are re-pushed only AFTER the scan, so the pop
         # can never retrieve the same request twice.
         while len(kept) < cap and len(q):
-            got = q.pop_batch(1, now, drop_expired)
-            if not got:
+            req = self._pop_next(q, now, drop_expired)
+            if req is None:
                 break                       # remainder all expired
-            req = got[0]
             budget = max(1, req.n_tokens if req.n_tokens > 0 else gen_len)
             if eng.paged:
                 budget = min(budget, room)
@@ -1215,6 +1352,7 @@ class StepPlanner:
                     continue
                 pages_left = left
             kept.append((req, budget))
+            self._note_admitted(req, prompt_len + budget, q, blocked)
             is_head = False
         for req in blocked:
             q.push(req)

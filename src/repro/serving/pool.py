@@ -92,8 +92,8 @@ class ModelHost:
         if self._prompt is None:
             b = {"tokens": jnp.ones((1, self.prompt_len), jnp.int32)}
             if self.cfg.has_encoder:
-                from repro.serving import frontend
-                b["enc_embeds"] = frontend.audio_frames(self.cfg, 1)
+                from repro.serving import modality
+                b["enc_embeds"] = modality.audio_frames(self.cfg, 1)
             self._prompt = b
         return self._prompt
 

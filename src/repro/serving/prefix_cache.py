@@ -32,8 +32,12 @@ token sequences, keyed at **page granularity**.
 Everything here is host-side Python over ``PageAllocator`` refcounts —
 no device state. Determinism: the logical clock ticks once per cache
 operation, dict iteration is insertion-ordered, and ties break on node
-creation order, so a seeded replay (engine ``recover`` flushes the
-cache and re-sorts the free list) reproduces identical page placement.
+creation order, so a seeded replay (a pool reset — engine
+``release_all_slots`` — flushes the cache and re-sorts the free list)
+reproduces identical page placement. Engine ``recover`` is gentler: it
+keeps the HOT subtree (``retain_recent``) so a mid-run fault does not
+forfeit the warmed working set, and the recovery audit accounts the
+survivors (free + held == total).
 
 Safety argument for read-only aliasing: a hit row starts at
 ``pos = covered``, so every subsequent write — decode, teacher-forced
@@ -216,6 +220,39 @@ class PrefixCache:
             node = child
         return covered
 
+    def canonical_pages(self, tokens: Sequence[int]) -> List[int]:
+        """Physical pages the tree holds for the whole-page prefix of
+        ``tokens`` — strictly read-only, like ``peek`` (no clock tick,
+        no LRU touch, no stats, no pins). Right after an ``insert``
+        these are the CANONICAL pages for that prefix: existing nodes
+        keep their original pages on duplicate inserts, so a row that
+        just registered can compare its own pages against this walk and
+        repoint at the originals (cross-request dedup — see
+        ``InferenceEngine.dedup_slot_prefix``)."""
+        toks = [int(t) for t in tokens]
+        ps = self.page_size
+        node = self._root
+        out: List[int] = []
+        covered = 0
+        while len(toks) - covered >= ps:
+            child = node.children.get(tuple(toks[covered:covered + ps]))
+            if child is None:
+                break
+            matched = 0
+            for i in range(child.n_pages):
+                if (len(toks) - covered >= ps
+                        and tuple(toks[covered:covered + ps])
+                        == child.tokens[i * ps:(i + 1) * ps]):
+                    out.append(child.pages[i])
+                    covered += ps
+                    matched += 1
+                else:
+                    break
+            if matched < child.n_pages:
+                break
+            node = child
+        return out
+
     def release_hit(self, hit: PrefixHit) -> None:
         """Return an unconsumed hit's pins (admission failed or was
         abandoned before the alias landed)."""
@@ -334,10 +371,42 @@ class PrefixCache:
                     coldest = (node, key, child)
         return coldest
 
+    def retain_recent(self, window: int) -> int:
+        """Prune every node colder than ``window`` cache operations
+        (``last_used < clock - window``), bottom-up: a node survives if
+        it is recent OR any descendant is — an ancestor's pages back its
+        descendants' prefixes, so keeping a child keeps its spine. The
+        engine's ``recover`` path calls this INSTEAD of ``flush``: a
+        mid-run fault drops slot state (recompute-requeue) but not the
+        warmed radix working set, so post-recovery admissions keep
+        hitting. Returns pages whose references were released (counted
+        as evictions)."""
+        cutoff = self._clock - max(0, int(window))
+        released = 0
+
+        def _prune(node: _Node) -> bool:
+            nonlocal released
+            keep = node.last_used >= cutoff
+            for key in list(node.children):
+                child = node.children[key]
+                if _prune(child):
+                    keep = True
+                else:
+                    # child and (already-pruned) descendants are cold
+                    released += self.allocator.release(child.pages)
+                    self.held_pages -= len(child.pages)
+                    self.stats.evictions += 1
+                    del node.children[key]
+            return keep
+
+        _prune(self._root)
+        self.stats.evicted_pages += released
+        return released
+
     def flush(self) -> int:
-        """Drop every node and release every held reference (engine reset
-        / recovery: replayed seeded runs start from a cold cache). Returns
-        pages actually freed."""
+        """Drop every node and release every held reference (pool reset
+        between policy runs: replayed seeded runs start from a cold
+        cache). Returns pages actually freed."""
         freed = 0
         stack = list(self._root.children.values())
         while stack:

@@ -43,6 +43,17 @@ class Request:
     # client replaying the stream would see.
     first_token: float = dataclasses.field(compare=False, default=-1.0)
     tokens_out: int = dataclasses.field(compare=False, default=0)
+    # multi-tenant serving (ISSUE 10): the submitting tenant ("" = the
+    # single-tenant planes, which never read it) and the priority tier.
+    # Tier names are free-form; the planner's TieredAdmission maps them
+    # to weights (interactive > standard > batch by default) and falls
+    # back to the default tier's weight for unknown names.
+    tenant: str = dataclasses.field(compare=False, default="")
+    tier: str = dataclasses.field(compare=False, default="standard")
+    # virtual/wall time the request completed (-1.0 = not completed) —
+    # lets post-hoc analysis (the traffic bench's per-tier SLO
+    # attainment) join finish vs deadline without replaying counters.
+    finish: float = dataclasses.field(compare=False, default=-1.0)
 
     @property
     def deadline(self) -> float:
@@ -116,6 +127,38 @@ class RequestQueue:
             batch.append(req)
         return batch
 
+    def pop_pick(self, now: float, drop_expired: bool = True,
+                 key=None) -> Optional[Request]:
+        """Pop ONE request chosen by ``key`` (lowest key wins) instead of
+        strict FIFO — the tiered-admission hook (ISSUE 10). Expired
+        requests are dropped with the same accounting as ``pop_batch``
+        regardless of key. ``key=None`` degenerates to ``pop_batch(1)``
+        exactly (heap order: arrival). The keyed pick is an O(n) scan
+        plus the same swap-with-last removal ``cancel`` uses — admission
+        scans pop a handful per tick, so n stays small."""
+        if key is None:
+            got = self.pop_batch(1, now, drop_expired)
+            return got[0] if got else None
+        while self._q:
+            best = min(range(len(self._q)), key=lambda i: key(self._q[i]))
+            req = self._q[best]
+            last = self._q.pop()
+            if best < len(self._q):
+                self._q[best] = last
+                heapq.heapify(self._q)
+            if drop_expired and req.deadline < now:
+                req.state = "deadline_aborted"
+                self.dropped += 1
+                self.violated += 1
+                continue
+            return req
+        return None
+
+    def __iter__(self):
+        """Iterate queued requests (heap order, NOT sorted) — read-only
+        introspection for admission policies (starvation tracking)."""
+        return iter(self._q)
+
     @property
     def ttfts(self) -> List[float]:
         """TTFT samples of COMPLETED requests (the headline figure)."""
@@ -172,6 +215,7 @@ class RequestQueue:
         dropping it (paper Eq. 11 counts end-to-end latency)."""
         for req in batch:
             req.state = "completed"
+            req.finish = finish_time
             self.completed += 1
             if self.track_latency:
                 self.latencies.append(finish_time - req.arrival)

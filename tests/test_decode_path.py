@@ -81,8 +81,8 @@ def test_scan_generate_matches_eager_greedy(arch):
     eng = make_engine(cfg, cache_len=64)
     batch = {"tokens": jax.random.randint(KEY, (3, 8), 0, cfg.vocab_size)}
     if cfg.has_encoder:
-        from repro.serving import frontend
-        batch["enc_embeds"] = frontend.audio_frames(cfg, 3)
+        from repro.serving import modality
+        batch["enc_embeds"] = modality.audio_frames(cfg, 3)
     scan = eng.generate(dict(batch), 10)
     eager = eng.generate_eager(dict(batch), 10)
     assert scan.shape == (3, 10)

@@ -1,0 +1,646 @@
+"""Async serving gateway + tiered tenant-fair admission + traffic
+scenarios (ISSUE 10).
+
+Three claim groups:
+
+* **Bit-exactness.** The gateway's asyncio drive loop is a line-for-line
+  mirror of ``core.eventloop.run_event_loop``, so serving a trace through
+  ``AsyncGateway`` yields streams BIT-IDENTICAL to ``serve_ticks`` on the
+  same planner/engine — with zero recompiles, telemetry detached (the
+  zero-cost default), under wall-clock pacing, with concurrent stream
+  consumers, and under the full seeded chaos schedule (survivors exact).
+
+* **Lifecycle edges.** Client disconnects mid-chunked-prefill and
+  mid-spec-round become ``Cancel`` plan events that leak zero pages; a
+  deadline blown at submit raises a typed rejection with queue-expiry
+  accounting; a deadline blown while queued keeps the queue drop path; a
+  shed request never holds a page.
+
+* **Tiers + tenants + traffic.** ``TieredAdmission`` admits by weighted
+  tier with a provable lowest-tier starvation bound and deficit-based
+  tenant round-robin; the traffic generators are seeded-deterministic
+  and the burst scenario floods one tenant/tier the way the bench's
+  acceptance criterion assumes.
+"""
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import traffic
+from repro.serving.engine import InferenceEngine, make_engine
+from repro.serving.faults import FaultInjector
+from repro.serving.gateway import (AsyncGateway, DeadlineRejection,
+                                   ShedRejection)
+from repro.serving.plan import (PlannerConfig, StepPlanner, TieredAdmission,
+                                serve_ticks)
+from repro.serving.request import Request, RequestQueue
+from repro.serving.telemetry import Telemetry, TraceRecorder
+
+CACHE_LEN = 32
+N_SLOTS = 4
+PAGE = 8
+MODEL = "olmo-1b"
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config(MODEL).reduced()
+    eng = make_engine(cfg, cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=True, page_size=PAGE)
+    return cfg, eng
+
+
+@pytest.fixture(scope="module")
+def spec_engine(engine):
+    """The module engine paired with an identical-weights draft, so
+    spec rounds accept everything and streams stay plain-greedy."""
+    cfg, eng = engine
+    draft = InferenceEngine(eng.api, eng.params,
+                            cache_len=CACHE_LEN).init_slots(
+        N_SLOTS, paged=False)
+    eng.attach_draft(draft, spec_k=3)
+    yield cfg, eng
+    eng._draft = None                     # later tests run draft-free
+
+
+def _make_prompt(cfg, rid: int, length: int):
+    rng = np.random.default_rng(1000 + rid)
+    return {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, size=(1, length)).astype(np.int32))}
+
+
+def _workload(cfg, seed: int, n: int, *, spread=0.0, prompt_range=(3, 12),
+              budget_range=(3, 8), slo=1e9):
+    """Seeded workload; ``spread`` > 0 staggers arrivals over that many
+    virtual seconds so deliveries interleave with ticks."""
+    rng = np.random.default_rng(seed)
+    reqs, prompts = [], {}
+    for i in range(n):
+        p = int(rng.integers(*prompt_range))
+        nt = int(rng.integers(*budget_range))
+        t = float(rng.uniform(0.0, spread)) if spread else 0.0
+        reqs.append(Request(arrival=t, rid=i, model=cfg.name, slo=slo,
+                            n_tokens=nt, prompt_len=p))
+        prompts[i] = _make_prompt(cfg, i, p)
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs, prompts
+
+
+def _reset(cfg, eng, reqs, **planner_kw):
+    eng.release_all_slots()
+    eng.reset_stats()
+    for r in reqs:
+        r.state = "pending"
+        r.finish = -1.0
+    return StepPlanner(eng, RequestQueue(cfg.name, slo=1e9),
+                       PlannerConfig(gen_len=4, **planner_kw))
+
+
+def _tick_serve(cfg, eng, reqs, prompts, **planner_kw):
+    planner = _reset(cfg, eng, reqs, **planner_kw)
+    srv = serve_ticks(planner, reqs, lambda r: prompts[r.rid],
+                      stall_limit=50)
+    assert not srv.truncated
+    return {r: tuple(t) for r, t in planner.streams.items()}, planner, srv
+
+
+def _gw_serve(cfg, eng, reqs, prompts, *, wall_clock=False, faults=None,
+              on_tick=None, max_retries=None, telemetry=None, **planner_kw):
+    """Serve a trace through the gateway; ALWAYS audit page conservation
+    on the way out (the zero-leak bar every lifecycle edge must meet)."""
+    planner = _reset(cfg, eng, reqs, **planner_kw)
+    planner.telemetry = telemetry
+    if faults is not None:
+        eng.attach_faults(faults, max_retries=max_retries)
+    gw = AsyncGateway(planner, wall_clock=wall_clock, faults=faults,
+                      on_tick=on_tick, stall_limit=50)
+    try:
+        streams = gw.serve_trace(reqs, prompts)
+    finally:
+        if faults is not None:
+            eng.attach_faults(None, max_retries=2)
+    assert not gw.truncated
+    held = eng.prefix_cache.held_pages if eng.prefix_cache else 0
+    assert eng.free_pages + held == eng.total_pages, "leaked pages"
+    assert eng.check_page_invariants()
+    return streams, planner, gw
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: gateway == serve_ticks, telemetry detached, 0 recompiles
+# ---------------------------------------------------------------------------
+def test_gateway_trace_bit_exact_vs_serve_ticks(engine):
+    """The acceptance bar: a staggered-arrival trace served through the
+    async gateway emits token streams BIT-IDENTICAL to driving the
+    TickServer directly, over the same number of ticks, compiling
+    nothing, with telemetry detached (its zero-cost default)."""
+    cfg, eng = engine
+    reqs, prompts = _workload(cfg, seed=11, n=10, spread=0.01)
+    base, _, srv = _tick_serve(cfg, eng, reqs, prompts,
+                               chunk_tokens=3, lazy=True)
+    assert base and any(len(t) for t in base.values())
+    jit_before = eng.jit_cache_sizes()
+    streams, planner, gw = _gw_serve(cfg, eng, reqs, prompts,
+                                     chunk_tokens=3, lazy=True)
+    assert planner.telemetry is None       # detached: the is-None path ran
+    got = {rid: tuple(st.tokens) for rid, st in streams.items()}
+    assert got == base
+    assert all(st.state == "completed" for st in streams.values())
+    assert gw.server.ticks == srv.ticks    # identical tick interleaving
+    assert eng.jit_cache_sizes() == jit_before
+    # the client surface agrees with the planner's record token-for-token
+    for rid, st in streams.items():
+        assert st.tokens == list(planner.streams[rid])
+
+
+def test_gateway_concurrent_consumers_and_wall_clock(engine):
+    """Wall-clock pacing with every stream drained by its own consumer
+    task mid-run changes NOTHING: tokens arrive in order, exactly once,
+    and match the virtual-clock run bit-for-bit."""
+    cfg, eng = engine
+    reqs, prompts = _workload(cfg, seed=11, n=10, spread=0.01)
+    base, _, _ = _tick_serve(cfg, eng, reqs, prompts,
+                             chunk_tokens=3, lazy=True)
+    planner = _reset(cfg, eng, reqs, chunk_tokens=3, lazy=True)
+    gw = AsyncGateway(planner, wall_clock=True, stall_limit=50)
+
+    async def main():
+        gw.schedule(reqs, prompts)
+        consumers = [asyncio.create_task(st.collect())
+                     for st in gw.streams.values()]
+        await gw.run()
+        return await asyncio.gather(*consumers)
+
+    collected = asyncio.run(main())
+    assert not gw.truncated
+    got = {st.rid: tuple(st.tokens) for st in gw.streams.values()}
+    assert got == base
+    assert [tuple(t) for t in collected] \
+        == [tuple(gw.streams[st.rid].tokens) for st in gw.streams.values()]
+    # wall mode really paced against the host clock past the last arrival
+    assert gw.now >= max(r.arrival for r in reqs)
+    assert eng.free_pages == eng.total_pages
+
+
+# ---------------------------------------------------------------------------
+# lifecycle edges: disconnects, deadlines, shedding
+# ---------------------------------------------------------------------------
+def test_disconnect_mid_chunked_prefill_through_gateway(engine):
+    """A client that disconnects while its request is still PREFILLING
+    (chunked, pages already written) becomes a Cancel plan event: zero
+    pages leak, the bystander's stream is untouched, and the client's
+    stream closes with state ``cancelled`` having yielded nothing."""
+    cfg, eng = engine
+    long_req = Request(arrival=0.0, rid=0, model=cfg.name, slo=1e9,
+                       n_tokens=4, prompt_len=24)
+    side = Request(arrival=0.0, rid=1, model=cfg.name, slo=1e9,
+                   n_tokens=6, prompt_len=4)
+    prompts = {0: _make_prompt(cfg, 0, 24), 1: _make_prompt(cfg, 1, 4)}
+    base, _, _ = _tick_serve(cfg, eng, [side], {1: prompts[1]})
+    hold = {}
+
+    def disconnect_mid_prefill(server, now):
+        if "pages" in hold:
+            return
+        for slot, r in server.planner._resident.items():
+            if r.req.rid == 0 and r.prefilling and r.done > 0:
+                hold["pages"] = eng.slot_page_count(slot)
+                assert hold["gw"].cancel(0)
+                return
+
+    planner = _reset(cfg, eng, [long_req, side], chunk_tokens=3)
+    gw = AsyncGateway(planner, on_tick=disconnect_mid_prefill,
+                      stall_limit=50)
+    hold["gw"] = gw
+    streams = gw.serve_trace([long_req, side], prompts)
+    assert hold.get("pages", 0) > 0, "never caught it mid-prefill"
+    assert streams[0].state == "cancelled" and streams[0].tokens == []
+    assert streams[1].state == "completed"
+    assert tuple(streams[1].tokens) == base[1]
+    q = planner.queue
+    assert q.cancelled == 1 and q.completed == 1 and q.violated == 0
+    assert eng.free_pages == eng.total_pages
+
+
+def test_disconnect_mid_spec_round_through_gateway(spec_engine):
+    """Same edge one layer deeper: the disconnect lands while the victim
+    is DECODING THROUGH SPEC ROUNDS (draft attached, proposals in
+    flight). The Cancel frees its pages, survivors stay bit-exact with
+    the no-cancel speculative run, and speculation actually happened."""
+    cfg, eng = spec_engine
+    reqs, prompts = _workload(cfg, seed=23, n=5, budget_range=(6, 10))
+    base, _, _ = _gw_serve(cfg, eng, reqs, prompts, spec_k=3)
+    assert eng.stats.spec_rounds > 0
+    hold = {}
+
+    def disconnect_mid_spec(server, now):
+        if hold.get("done"):
+            return
+        pl = server.planner
+        if eng.stats.spec_rounds == 0:
+            return                        # no round verified yet
+        for slot, r in pl._resident.items():
+            if r.req.rid == 2 and not r.prefilling:
+                hold["done"] = now
+                assert hold["gw"].cancel(2)
+                return
+
+    planner = _reset(cfg, eng, reqs, spec_k=3)
+    gw = AsyncGateway(planner, on_tick=disconnect_mid_spec, stall_limit=50)
+    hold["gw"] = gw
+    streams = gw.serve_trace(reqs, prompts)
+    assert hold.get("done") is not None, "cancel never fired"
+    assert eng.stats.spec_rounds > 0
+    assert streams[2].state == "cancelled"
+    assert len(streams[2].tokens) < len(base[2].tokens)
+    for rid, st in streams.items():
+        if rid != 2:
+            assert st.state == "completed"
+            assert st.tokens == base[rid].tokens, f"survivor {rid} diverged"
+    assert planner.queue.cancelled == 1
+    assert eng.free_pages == eng.total_pages
+
+
+def test_deadline_at_submit_vs_deadline_in_queue(engine):
+    """Two distinct deadline paths, same accounting. AT SUBMIT: the
+    gateway fails fast with a typed ``DeadlineRejection`` — the request
+    never enters the queue, never holds a page, yet counts dropped +
+    violated exactly like a queue-side expiry. IN QUEUE: a request that
+    expires while waiting (pages exhausted by residents) takes the
+    queue's drop path and its stream closes terminally."""
+    cfg, eng = engine
+    # --- at submit (live mode): deadline already in the past
+    planner = _reset(cfg, eng, [])
+    gw = AsyncGateway(planner)
+    stale = Request(arrival=-1.0, rid=90, model=cfg.name, slo=0.5,
+                    n_tokens=2, prompt_len=4)
+
+    async def live():
+        task = asyncio.create_task(gw.run(hold_open=True))
+        await asyncio.sleep(0)
+        with pytest.raises(DeadlineRejection):
+            gw.submit(stale, _make_prompt(cfg, 90, 4))
+        gw.close()
+        await task
+
+    asyncio.run(live())
+    q = planner.queue
+    assert stale.state == "deadline_aborted"
+    assert (q.dropped, q.violated) == (1, 1)
+    assert 90 not in gw.streams            # no stream was ever created
+    assert eng.free_pages == eng.total_pages
+    # --- in queue (trace mode): slot-hogging residents starve a later
+    # request whose tight SLO expires before admission reaches it
+    hogs = [Request(arrival=0.0, rid=i, model=cfg.name, slo=1e9,
+                    n_tokens=8, prompt_len=24) for i in range(5)]
+    # strictly later arrival: FIFO keeps it behind every hog until a
+    # slot frees, by which point its deadline has long passed
+    tight = Request(arrival=5e-4, rid=5, model=cfg.name, slo=2e-3,
+                    n_tokens=2, prompt_len=24)
+    prompts = {i: _make_prompt(cfg, i, 24) for i in range(6)}
+    streams, planner, _ = _gw_serve(cfg, eng, hogs + [tight], prompts)
+    q = planner.queue
+    assert streams[5].state == "deadline_aborted"
+    assert streams[5].tokens == []
+    assert (q.dropped, q.completed) == (1, 5)
+    terminal = q.completed + q.dropped
+    assert terminal == 6                   # conservation over the trace
+
+
+def test_shed_request_never_holds_pages(engine):
+    """Both shed surfaces: a trace replay closes shed streams terminally
+    (state ``shed``, zero tokens), and a live submit raises a typed
+    ``ShedRejection`` — in both cases free pages at the instant of the
+    shed equal free pages had the request never arrived."""
+    cfg, eng = engine
+    reqs, prompts = _workload(cfg, seed=5, n=8)
+    streams, planner, _ = _gw_serve(cfg, eng, reqs, prompts,
+                                    shed_queue_depth=2)
+    q = planner.queue
+    assert q.shed > 0
+    shed = [st for st in streams.values() if st.state == "shed"]
+    assert len(shed) == q.shed
+    assert all(st.tokens == [] for st in shed)
+    assert q.completed + q.shed == len(reqs)
+    # live surface
+    planner = _reset(cfg, eng, [], shed_queue_depth=0)
+    gw = AsyncGateway(planner)
+    free0 = eng.free_pages
+    req = Request(arrival=0.0, rid=50, model=cfg.name, slo=1e9,
+                  n_tokens=2, prompt_len=4)
+
+    async def live():
+        task = asyncio.create_task(gw.run(hold_open=True))
+        await asyncio.sleep(0)
+        with pytest.raises(ShedRejection):
+            gw.submit(req, _make_prompt(cfg, 50, 4))
+        gw.close()
+        await task
+
+    asyncio.run(live())
+    assert req.state == "shed"
+    assert eng.free_pages == free0
+    assert 50 not in gw.streams
+
+
+def test_live_submit_cancel_and_drain(engine):
+    """Live mode end-to-end: submits against a running gateway stream
+    tokens back; a mid-flight disconnect cancels cleanly; ``close()``
+    drains and the loop exits with every page home."""
+    cfg, eng = engine
+    planner = _reset(cfg, eng, [])
+    gw = AsyncGateway(planner)
+    prompts = {i: _make_prompt(cfg, i, 5) for i in range(3)}
+
+    async def live():
+        task = asyncio.create_task(gw.run(hold_open=True))
+        await asyncio.sleep(0)
+        sts = [gw.submit(Request(arrival=gw.now, rid=i, model=cfg.name,
+                                 slo=1e9, n_tokens=10, prompt_len=5),
+                         prompts[i]) for i in range(3)]
+        # let a tick or two run, then the client for rid 1 walks away
+        for _ in range(4):
+            await asyncio.sleep(0)
+        sts[1].cancel()
+        gw.close()
+        await task
+        return sts
+
+    sts = asyncio.run(live())
+    assert sts[1].state == "cancelled"
+    assert len(sts[1].tokens) < 10              # actually cut short
+    for st in (sts[0], sts[2]):
+        assert st.state == "completed" and len(st.tokens) == 10
+    assert planner.queue.cancelled == 1 and planner.queue.completed == 2
+    assert eng.free_pages == eng.total_pages
+
+
+# ---------------------------------------------------------------------------
+# chaos THROUGH the gateway: seeded faults + disconnects, survivors exact
+# ---------------------------------------------------------------------------
+def test_chaos_through_gateway_survivors_bit_exact(engine):
+    """ISSUE 10 satellite: the PR 6 chaos schedule (dispatch faults,
+    allocator failures, stuck ticks, client disconnects, deadline
+    aborts, shedding) driven THROUGH the gateway drains with per-cause
+    terminal counters partitioning the offered load, zero leaked pages,
+    survivors bit-exact with the fault-free gateway run, closed streams
+    carrying each terminal cause, and a seed replay reproducing it all."""
+    cfg, eng = engine
+    reqs, prompts = _workload(cfg, seed=31, n=10, budget_range=(4, 10))
+    reqs = [Request(arrival=r.arrival, rid=r.rid, model=r.model,
+                    slo=(8e-3 if r.rid in (4, 7) else 1e9),
+                    n_tokens=r.n_tokens, prompt_len=r.prompt_len)
+            for r in reqs]
+    base, _, _ = _gw_serve(cfg, eng, reqs, prompts)   # fault-free
+    jit_before = eng.jit_cache_sizes()
+    hold = {"cancelled": []}
+
+    def chaos_script(server, now):
+        for tick, rid in ((2, 3), (6, 8)):
+            if server.ticks == tick and rid not in hold["cancelled"]:
+                if hold["gw"].cancel(rid):
+                    hold["cancelled"].append(rid)
+
+    def run_chaos():
+        inj = FaultInjector(seed=13, dispatch_rate=0.08, alloc_rate=0.05,
+                            stuck_rate=0.04, max_faults=12)
+        planner = _reset(cfg, eng, reqs, chunk_tokens=3, lazy=True,
+                         deadline_aborts=True, shed_queue_depth=8)
+        eng.attach_faults(inj, max_retries=1)
+        gw = AsyncGateway(planner, faults=inj, on_tick=chaos_script,
+                          stall_limit=50)
+        hold["gw"] = gw
+        try:
+            streams = gw.serve_trace(reqs, prompts)
+        finally:
+            eng.attach_faults(None, max_retries=2)
+        assert not gw.truncated
+        return streams, planner, inj
+
+    streams, planner, inj = run_chaos()
+    q = planner.queue
+    assert inj.total > 0 and hold["cancelled"]
+    terminal = (q.completed + q.cancelled + q.deadline_aborted + q.shed
+                + q.dropped)
+    assert terminal == len(reqs), (
+        q.completed, q.cancelled, q.deadline_aborted, q.shed, q.dropped)
+    assert q.cancelled == len(hold["cancelled"])
+    # every stream closed with its request's terminal cause; survivors
+    # match the fault-free gateway run token for token
+    for rid, st in streams.items():
+        assert st.state == st.req.state and st.state != "pending"
+        if st.state == "completed":
+            assert st.tokens == base[rid].tokens, f"survivor {rid} diverged"
+    assert eng.free_pages == eng.total_pages
+    assert eng.jit_cache_sizes() == jit_before
+    # seeded replay: identical outcomes, stream for stream
+    counters = (q.completed, q.cancelled, q.deadline_aborted, q.shed,
+                q.dropped)
+    hold["cancelled"] = []
+    streams2, planner2, inj2 = run_chaos()
+    q2 = planner2.queue
+    assert inj2.injected == inj.injected
+    assert (q2.completed, q2.cancelled, q2.deadline_aborted, q2.shed,
+            q2.dropped) == counters
+    assert {r: tuple(s.tokens) for r, s in streams2.items()} \
+        == {r: tuple(s.tokens) for r, s in streams.items()}
+
+
+# ---------------------------------------------------------------------------
+# telemetry: lifecycle instants when attached (and only then)
+# ---------------------------------------------------------------------------
+def test_gateway_lifecycle_edges_land_as_telemetry_instants(engine):
+    cfg, eng = engine
+    reqs, prompts = _workload(cfg, seed=3, n=3)
+    tel = Telemetry(trace=TraceRecorder(capacity=4096))
+    hold = {}
+
+    def cancel_once(server, now):
+        if server.ticks == 1 and not hold.get("done"):
+            hold["done"] = hold["gw"].cancel(2)
+
+    planner = _reset(cfg, eng, reqs)
+    planner.telemetry = tel
+    gw = AsyncGateway(planner, on_tick=cancel_once, stall_limit=50)
+    hold["gw"] = gw
+    gw.serve_trace(reqs, prompts)
+    assert hold.get("done")
+    names = [e["name"] for e in tel.trace.events]
+    assert names.count("arrival") == len(reqs)
+    assert "gw_disconnect" in names
+    closes = [e for e in tel.trace.events if e["name"] == "gw_stream_close"]
+    assert len(closes) == len(reqs)
+    assert {e["args"]["cause"] for e in closes} == {"completed", "cancelled"}
+
+
+# ---------------------------------------------------------------------------
+# tiered, tenant-fair admission (unit: no engine)
+# ---------------------------------------------------------------------------
+def _mk(rid, arrival, tier, tenant="t"):
+    return Request(arrival=arrival, rid=rid, model="m", slo=1e9,
+                   n_tokens=4, prompt_len=4, tier=tier, tenant=tenant)
+
+
+def _drain_picks(q, adm, now=0.0, cost=10.0):
+    order = []
+    while True:
+        req = q.pop_pick(now, key=adm.key())
+        if req is None:
+            return order
+        order.append(req.rid)
+        adm.admitted(req, cost, list(q))
+
+
+def test_lowest_tier_starvation_bound():
+    """The documented bound: once the batch head has been bypassed by
+    ``bypass_limit`` higher-tier admissions it outranks EVERYTHING on
+    the next pick — so batch work admits after at most ``bypass_limit``
+    interactive admissions, never starves."""
+    adm = TieredAdmission(dict(traffic.TIER_WEIGHTS), bypass_limit=2)
+    q = RequestQueue("m", slo=1e9)
+    q.push(_mk(0, 0.0, "batch"))
+    for i in range(1, 6):
+        q.push(_mk(i, 0.1 * i, "interactive"))
+    order = _drain_picks(q, adm)
+    # two bypasses, then the starving batch head jumps the line
+    assert order[:3] == [1, 2, 0]
+    assert order[3:] == [3, 4, 5]
+
+
+def test_tier_weights_order_admissions():
+    """With no starvation in play, higher-weight tiers admit strictly
+    first; within a tier FIFO holds (single tenant degenerates
+    exactly to arrival order)."""
+    adm = TieredAdmission(dict(traffic.TIER_WEIGHTS), bypass_limit=100)
+    q = RequestQueue("m", slo=1e9)
+    q.push(_mk(0, 0.0, "batch"))
+    q.push(_mk(1, 0.1, "standard"))
+    q.push(_mk(2, 0.2, "interactive"))
+    q.push(_mk(3, 0.3, "interactive"))
+    q.push(_mk(4, 0.4, "standard"))
+    assert _drain_picks(q, adm) == [2, 3, 1, 4, 0]
+
+
+def test_tenant_deficit_round_robins_within_tier():
+    """Within one tier, the deficit counter alternates tenants even when
+    one tenant's requests all arrived first — a burst cannot monopolize
+    admission against another tenant's stream."""
+    adm = TieredAdmission(dict(traffic.TIER_WEIGHTS))
+    q = RequestQueue("m", slo=1e9)
+    for i in range(3):                     # acme burst, arrives first
+        q.push(_mk(i, 0.01 * i, "standard", "acme"))
+    for i in range(3, 5):                  # globex trickle, arrives later
+        q.push(_mk(i, 0.1 + 0.01 * i, "standard", "globex"))
+    assert _drain_picks(q, adm) == [0, 3, 1, 4, 2]
+
+
+def test_unknown_tier_maps_to_default_and_fifo_degenerates():
+    adm = TieredAdmission({"interactive": 4.0, "standard": 2.0},
+                          default_tier="standard")
+    assert adm.weight(_mk(0, 0.0, "no-such-tier")) == 2.0
+    # one tier, one tenant: exact FIFO
+    adm2 = TieredAdmission({"standard": 1.0})
+    q = RequestQueue("m", slo=1e9)
+    for i in range(4):
+        q.push(_mk(i, 0.1 * i, "standard"))
+    assert _drain_picks(q, adm2) == [0, 1, 2, 3]
+    with pytest.raises(ValueError):
+        TieredAdmission({})
+
+
+def test_tiered_serve_end_to_end_with_tenant_metrics(engine):
+    """Tiers through the full plane: a contended mixed-tier trace served
+    with ``PlannerConfig.tiers`` admits interactive work first, streams
+    everything to completion, and the per-tenant token accounting feeds
+    ``ModelPoolMetrics.tenant_fairness`` (Jain over tenants)."""
+    cfg, eng = engine
+    rng = np.random.default_rng(41)
+    reqs, prompts = [], {}
+    tiers = ["interactive", "batch"] * 4
+    for i, tier in enumerate(tiers):
+        p = int(rng.integers(3, 8))
+        reqs.append(Request(arrival=0.0, rid=i, model=cfg.name, slo=1e9,
+                            n_tokens=4, prompt_len=p, tier=tier,
+                            tenant=("acme", "globex")[i % 2]))
+        prompts[i] = _make_prompt(cfg, i, p)
+    streams, planner, _ = _gw_serve(cfg, eng, reqs, prompts,
+                                    tiers=dict(traffic.TIER_WEIGHTS))
+    assert all(st.state == "completed" for st in streams.values())
+    m = planner.metrics
+    assert set(m.tenant_tokens) == {"acme", "globex"}
+    assert sum(m.tenant_tokens.values()) == 4 * len(reqs)
+    assert 0.0 < m.tenant_fairness() <= 1.0
+    # first tokens: interactive requests all beat every batch request
+    first = {r.rid: r.first_token for r in reqs}
+    worst_interactive = max(first[r.rid] for r in reqs
+                            if r.tier == "interactive")
+    best_batch = min(first[r.rid] for r in reqs if r.tier == "batch")
+    assert worst_interactive <= best_batch
+    assert eng.free_pages == eng.total_pages
+
+
+# ---------------------------------------------------------------------------
+# traffic scenarios: seeded determinism + shapes
+# ---------------------------------------------------------------------------
+def _sig(reqs):
+    return [(round(r.arrival, 12), r.rid, r.tier, r.tenant, r.prompt_len,
+             r.n_tokens) for r in reqs]
+
+
+def test_traffic_scenarios_deterministic_and_well_formed():
+    cfg = traffic.TrafficConfig(model="m", duration=1.0, rate=80.0, seed=9)
+    for name in traffic.SCENARIOS:
+        a = traffic.make_scenario(name, cfg)
+        b = traffic.make_scenario(name, cfg)
+        assert a and _sig(a) == _sig(b), f"{name} not seed-deterministic"
+        assert [r.rid for r in a] == list(range(len(a)))
+        assert all(0.0 <= r.arrival < cfg.duration for r in a)
+        assert all(r.tier in traffic.TIER_SLO_UNITS for r in a)
+        assert all(r.slo == traffic.TIER_SLO_UNITS[r.tier] * cfg.slo_unit
+                   for r in a)
+        c = traffic.make_scenario(
+            name, traffic.TrafficConfig(model="m", duration=1.0,
+                                        rate=80.0, seed=10))
+        assert _sig(a) != _sig(c), f"{name} ignores its seed"
+    with pytest.raises(ValueError):
+        traffic.make_scenario("nope", cfg)
+
+
+def test_burst_trace_floods_one_tenant_one_tier():
+    cfg = traffic.TrafficConfig(model="m", duration=1.0, rate=60.0, seed=4)
+    reqs = traffic.burst_trace(cfg, burst_mult=6.0)
+    start, end = 0.25, 0.5                 # default window
+    inside = [r for r in reqs if start <= r.arrival < end]
+    outside = [r for r in reqs if not start <= r.arrival < end]
+    # the window's arrival rate is several times the background's
+    assert len(inside) / 0.25 > 3 * len(outside) / 0.75
+    flood = [r for r in inside if r.tenant == "globex" and r.tier == "batch"]
+    assert len(flood) > len(inside) / 2
+    by_tier = traffic.offered_by(reqs, "tier")
+    assert by_tier["batch"] > by_tier["interactive"]
+
+
+def test_synth_prompts_and_attainment_helpers():
+    cfg = traffic.TrafficConfig(model="m", duration=0.5, rate=40.0, seed=1)
+    reqs = traffic.poisson_trace(cfg)
+    p1 = traffic.synth_prompts(reqs, vocab=128, seed=0)
+    p2 = traffic.synth_prompts(reqs, vocab=128, seed=0)
+    assert all(np.array_equal(p1[r]["tokens"], p2[r]["tokens"]) for r in p1)
+    assert all(p1[r.rid]["tokens"].shape == (1, r.prompt_len) for r in reqs)
+    # attainment joins finish vs deadline: stamp outcomes by hand
+    for i, r in enumerate(reqs):
+        if i % 3 == 0:
+            r.state, r.finish = "completed", r.deadline - 1e-6   # on time
+        elif i % 3 == 1:
+            r.state, r.finish = "completed", r.deadline + 1.0    # late
+        else:
+            r.state = "shed"
+    att = traffic.attainment_by(reqs, "tier")
+    offered = traffic.offered_by(reqs, "tier")
+    assert set(att) <= set(offered)
+    ontime = sum(1 for r in reqs
+                 if r.state == "completed" and r.finish <= r.deadline)
+    assert sum(att[k] * offered[k] for k in att) == pytest.approx(ontime)

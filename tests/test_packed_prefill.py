@@ -42,8 +42,8 @@ def _prompt(cfg, i, s):
     b = {"tokens": jax.random.randint(jax.random.PRNGKey(100 + i), (1, s),
                                       0, cfg.vocab_size)}
     if cfg.has_encoder:
-        from repro.serving import frontend
-        b["enc_embeds"] = frontend.audio_frames(cfg, 1, seed=i)
+        from repro.serving import modality
+        b["enc_embeds"] = modality.audio_frames(cfg, 1, seed=i)
     return b
 
 

@@ -41,8 +41,8 @@ def _make_prompt(cfg, rid: int, length: int):
     b = {"tokens": jnp.asarray(
         rng.integers(1, cfg.vocab_size, size=(1, length)).astype(np.int32))}
     if cfg.has_encoder:
-        from repro.serving import frontend
-        b["enc_embeds"] = frontend.audio_frames(cfg, 1)
+        from repro.serving import modality
+        b["enc_embeds"] = modality.audio_frames(cfg, 1)
     return b
 
 

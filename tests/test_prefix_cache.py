@@ -14,7 +14,8 @@ Two layers of proof:
   greedy streams to the cache-off run while dispatching strictly fewer
   prefill tokens, reusing only warmed executables (zero recompiles);
   cold cache pages are evicted before any live resident is preempted;
-  ``recover()`` flushes the cache and returns every page; and incapable
+  ``recover()`` keeps the hot radix subtree while its conservation audit
+  accounts every page (free + cache-held == total); and incapable
   families (SSM state is not page-aliasable) refuse the cache loudly
   while the pool skips them gracefully.
 """
@@ -303,18 +304,67 @@ def test_cold_cache_evicted_before_preemption(engine):
         "resident preempted while cold cache pages were available"
 
 
-def test_recover_flushes_cache_and_returns_all_pages(engine):
+def test_recover_persists_hot_nodes_and_conserves_pages(engine):
+    """ISSUE 10 satellite: ``recover()`` keeps the hot radix subtree
+    (``retain_recent``) instead of flushing — a mid-run engine reset
+    drops slot state but not the warmed working set — and its
+    conservation audit accounts the survivors: free + cache-held ==
+    total. A stale tree (everything past ``prefix_hot_window``) still
+    prunes to nothing."""
     cfg, eng = engine
     reqs, prompts = _shared_workload(cfg, seed=17, n=6)
     _serve(cfg, eng, reqs, prompts, prefix_cache=True)
-    assert eng.prefix_cache.held_pages > 0    # registrations persist
+    held = eng.prefix_cache.held_pages
+    assert held > 0                           # registrations persist
+    eng.recover()
+    # recently-used nodes survive the reset; every non-cache page is free
+    assert eng.prefix_cache.held_pages > 0
+    assert (eng.free_pages + eng.prefix_cache.held_pages
+            == eng.total_pages)
+    eng.check_page_invariants()
+    # a fresh serve over the same templates HITS the persisted nodes
+    # immediately (cache already warm — no same-run registration needed)
+    hits_before = eng.prefix_cache.stats.hits
+    planner = StepPlanner(eng, RequestQueue(cfg.name, slo=1e9),
+                          PlannerConfig(gen_len=4, prefix_cache=True))
+    reqs2, prompts2 = _shared_workload(cfg, seed=17, n=4)
+    serve_ticks(planner, reqs2, lambda r: prompts2[r.rid], stall_limit=50)
+    assert eng.prefix_cache.stats.hits > hits_before, \
+        "persisted nodes never served a hit after recovery"
+    # ...and an engine whose cache went cold prunes it all at recover()
+    eng.prefix_cache._clock += eng.prefix_hot_window + 1
     eng.recover()
     assert eng.prefix_cache.held_pages == 0
     assert eng.free_pages == eng.total_pages
-    eng.check_page_invariants()
-    # the engine still serves (and hits) after recovery
-    got, st, _, _ = _serve(cfg, eng, reqs, prompts, prefix_cache=True)
-    assert st.prefix_hits > 0 and all(len(t) for t in got.values())
+    eng.release_all_slots()
+
+
+def test_same_tick_shared_prefills_dedup_to_canonical_pages(engine):
+    """ISSUE 10 satellite: identical-prefix prompts admitted in the SAME
+    tick all prefill (none can hit a cache the others have not registered
+    yet), but at registration the later rows' leading full pages are
+    repointed onto the first registrant's canonical pages and the
+    duplicates freed — cross-request dedup at insert time — with streams
+    bit-exact vs the cache-off run."""
+    cfg, eng = engine
+    rng = np.random.default_rng(29)
+    shared = rng.integers(1, cfg.vocab_size, size=16).astype(np.int32)
+    reqs, prompts = [], {}
+    for i in range(3):
+        tail = rng.integers(1, cfg.vocab_size, size=3 + i).astype(np.int32)
+        toks = np.concatenate([shared, tail])
+        reqs.append(Request(arrival=0.0, rid=i, model=cfg.name, slo=1e9,
+                            n_tokens=4, prompt_len=len(toks)))
+        prompts[i] = {"tokens": jnp.asarray(toks[None, :])}
+    base, st_off, _, _ = _serve(cfg, eng, reqs, prompts)
+    assert st_off.dedup_pages == 0        # counter is cache-gated
+    jit_before = eng.jit_cache_sizes()
+    got, st_on, _, _ = _serve(cfg, eng, reqs, prompts, prefix_cache=True)
+    assert got == base
+    # 16 shared tokens = 2 full pages; the 2nd and 3rd registrants each
+    # release their duplicate pair when repointed onto the canonical pair
+    assert st_on.dedup_pages == 4
+    assert eng.jit_cache_sizes() == jit_before    # repoint never compiles
 
 
 def test_select_admissible_prefers_cache_hot_prefixes(engine):
